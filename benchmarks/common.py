@@ -1,0 +1,84 @@
+"""Shared benchmark scaffolding: a trained tiny LM (cached per run),
+PPL evaluation, timing helpers, CSV emission.
+
+Every ``table*/fig*`` module maps to one paper table/figure (DESIGN.md
+section 7) and prints ``name,us_per_call,derived`` rows — ``derived``
+carries the table's own metric (PPL, ratio, tokens/s ...).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.model import build_model, make_train_step
+from repro.optim.adamw import AdamW
+
+# Big enough that low-rank compression behaves qualitatively like an LLM
+# (some overparameterization), small enough to train on one CPU core.
+BENCH_CFG = ModelConfig(name="bench-tiny", family="dense", num_layers=6,
+                        d_model=128, num_heads=4, num_kv_heads=4, d_ff=384,
+                        vocab_size=256, tie_embeddings=True)
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+@functools.lru_cache(maxsize=1)
+def trained_tiny(steps: int = 400, seed: int = 0):
+    """Train the benchmark LM once per process (~1 min on 1 CPU core)."""
+    model = build_model(BENCH_CFG)
+    params = model.init(jax.random.PRNGKey(seed))
+    optim = AdamW(lr=3e-3)
+    step = jax.jit(make_train_step(model, BENCH_CFG, optim))
+    opt = optim.init(params)
+    pipe = TokenPipeline(DataConfig(vocab_size=BENCH_CFG.vocab_size,
+                                    seq_len=64, global_batch=8, seed=seed))
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        loss, params, opt = step(params, opt, batch)
+    return model, params
+
+
+def eval_ppl(model, params, *, unstacked: bool = False, seed: int = 123,
+             batches: int = 4) -> float:
+    pipe = TokenPipeline(DataConfig(vocab_size=BENCH_CFG.vocab_size,
+                                    seq_len=64, global_batch=4, seed=seed))
+    tot, n = 0.0, 0
+    for i in range(batches):
+        b = pipe.batch_at(10_000 + i)
+        toks, labels = jnp.asarray(b["tokens"]), jnp.asarray(b["labels"])
+        fwd = model.forward_unstacked if unstacked else model.forward
+        logits = fwd(params, toks).astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits, -1)
+        tot += float(-jnp.take_along_axis(lp, labels[..., None], -1).sum())
+        n += labels.size
+    return float(np.exp(tot / n))
+
+
+def calib_tokens(n_samples: int = 8, seed: int = 7, seq: int = 64):
+    pipe = TokenPipeline(DataConfig(vocab_size=BENCH_CFG.vocab_size,
+                                    seq_len=seq, global_batch=1, seed=seed))
+    return [jnp.asarray(pipe.batch_at(i)["tokens"])
+            for i in range(n_samples)]
+
+
+def time_us(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6

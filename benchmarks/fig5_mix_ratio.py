@@ -1,0 +1,22 @@
+"""Figure 5: PPL vs mix ratio lambda (Eq. 7) at 0.5 density.
+
+Expected shape: lambda=0 (pure degraded flow, as prior work) is worse
+than a moderate lambda; very large lambda overfits calibration data.
+"""
+from repro.core.mpifa import MpifaConfig, compress_transformer
+from benchmarks.common import calib_tokens, emit, eval_ppl, trained_tiny
+
+
+def run():
+    model, params = trained_tiny()
+    calib = calib_tokens(8)
+    for lam in (0.0, 0.25, 0.5, 1.0):
+        cp = compress_transformer(
+            model, params, calib,
+            MpifaConfig(density=0.5, lam=lam, final_repr="pifa"))
+        emit(f"fig5.lam{lam:g}", 0.0,
+             f"{eval_ppl(model, cp, unstacked=True):.3f}")
+
+
+if __name__ == "__main__":
+    run()

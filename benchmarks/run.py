@@ -1,0 +1,40 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
+writes the aggregate to bench_results.csv.
+"""
+import importlib
+import sys
+import time
+
+from benchmarks import common
+
+MODULES = [
+    "benchmarks.fig1_params",
+    "benchmarks.kernel_bench",
+    "benchmarks.table6_layer_efficiency",
+    "benchmarks.table2_lowrank_ppl",
+    "benchmarks.table5_ablation",
+    "benchmarks.table3_semistructured",
+    "benchmarks.table4_finetune",
+    "benchmarks.fig5_mix_ratio",
+    "benchmarks.fig6_calibration",
+    "benchmarks.table7_e2e",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in MODULES:
+        mod = importlib.import_module(name)
+        print(f"# --- {name} ---", flush=True)
+        mod.run()
+    with open("bench_results.csv", "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(common.ROWS) + "\n")
+    print(f"# total {time.time()-t0:.1f}s, {len(common.ROWS)} rows")
+
+
+if __name__ == '__main__':
+    main()

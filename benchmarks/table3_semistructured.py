@@ -1,0 +1,85 @@
+"""Table 3 analogue: 2:4 semi-structured baselines vs MPIFA_NS at
+matched memory (55% density).
+
+On TPU the 2:4 masks buy NO speedup (no sparse-tensor-core analogue,
+DESIGN.md §2) — this benchmark is the quality half of Table 3 plus the
+NS (non-uniform sparsity) allocator of App. B.2.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mpifa import MpifaConfig, compress_transformer
+from repro.core.semistructured import (magnitude_score, prune_nm, ria_score,
+                                       wanda_score)
+from repro.core.sparsity import (ModuleBudget, allocate_densities,
+                                 owl_layer_densities,
+                                 owl_scores_from_model)
+from benchmarks.common import (BENCH_CFG, calib_tokens, emit, eval_ppl,
+                               trained_tiny)
+
+
+def _prune_model_24(model, params, scorer):
+    """Apply a 2:4 mask to every block linear (quality baseline)."""
+    p = model.unstack_blocks(params)
+    rng = np.random.default_rng(0)
+    act = np.abs(rng.normal(size=(BENCH_CFG.d_model,))) + 0.5
+    new_blocks = []
+    for bp in p["blocks"]:
+        bp = jax.tree.map(lambda x: x, bp)
+        for path in (("attn", "q"), ("attn", "k"), ("attn", "v"),
+                     ("attn", "o"), ("mlp", "up"), ("mlp", "gate"),
+                     ("mlp", "down")):
+            node = bp
+            for k in path[:-1]:
+                node = node[k]
+            if path[-1] not in node:
+                continue
+            lin = node[path[-1]]
+            w = np.asarray(lin["w"], np.float64)
+            a = act[: w.shape[1]] if w.shape[1] <= act.shape[0] else \
+                np.resize(act, w.shape[1])
+            node[path[-1]] = {"w": jnp.asarray(prune_nm(w, scorer, a),
+                                               jnp.float32)}
+        new_blocks.append(bp)
+    p["blocks"] = new_blocks
+    return p
+
+
+def run():
+    model, params = trained_tiny()
+    calib = calib_tokens(8)
+    emit("table3.dense", 0.0, f"{eval_ppl(model, params):.3f}")
+    for name, scorer in (("magnitude24", magnitude_score),
+                         ("wanda24", wanda_score),
+                         ("ria24", ria_score)):
+        pruned = _prune_model_24(model, params, scorer)
+        emit(f"table3.{name}", 0.0,
+             f"{eval_ppl(model, pruned, unstacked=True):.3f}")
+
+    # MPIFA at 55% (uniform) and MPIFA_NS (type + OWL layer densities)
+    cp = compress_transformer(model, params, calib,
+                              MpifaConfig(density=0.55))
+    emit("table3.mpifa55", 0.0, f"{eval_ppl(model, cp, unstacked=True):.3f}")
+
+    infos = model.linears_in_block()
+    budgets = []
+    for b in range(BENCH_CFG.num_layers):
+        for i in infos:
+            budgets.append(ModuleBudget(f"block{b}/{'/'.join(i.path)}", b,
+                                        i.kind, i.in_dim * i.out_dim))
+    # real OWL scores from calibration activations (App. B.2)
+    owl = owl_scores_from_model(model, params, calib)
+    layer_d = {i: float(x) for i, x in enumerate(owl_layer_densities(
+        owl, [1] * BENCH_CFG.num_layers, 0.55))}
+    alloc = allocate_densities(budgets, 0.55, layer_density=layer_d,
+                               type_density={"attn": 0.45, "mlp": 0.587})
+    cp_ns = compress_transformer(
+        model, params, calib,
+        MpifaConfig(density=0.55, module_density=alloc))
+    emit("table3.mpifa_ns55", 0.0,
+         f"{eval_ppl(model, cp_ns, unstacked=True):.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Table 5: ablation  W | W+U | W+M | W+M+PIFA  across densities."""
+from repro.core.mpifa import MpifaConfig, compress_transformer
+from benchmarks.common import calib_tokens, emit, eval_ppl, trained_tiny
+
+
+def run():
+    model, params = trained_tiny()
+    calib = calib_tokens(8)
+    variants = {
+        "W": dict(prune="whiten", reconstruct="none", final_repr="lowrank"),
+        "W+U": dict(prune="whiten", reconstruct="fullbatch",
+                    final_repr="lowrank"),
+        "W+M": dict(prune="whiten", reconstruct="m", final_repr="lowrank"),
+        "W+M+PIFA": dict(prune="whiten", reconstruct="m", final_repr="pifa"),
+    }
+    for density in (0.7, 0.5):
+        for name, kw in variants.items():
+            cp = compress_transformer(model, params, calib,
+                                      MpifaConfig(density=density, **kw))
+            ppl = eval_ppl(model, cp, unstacked=True)
+            emit(f"table5.d{density:g}.{name}", 0.0, f"{ppl:.3f}")
+
+
+if __name__ == "__main__":
+    run()

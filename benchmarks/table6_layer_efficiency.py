@@ -1,0 +1,59 @@
+"""Table 6 / Fig. 7 analogue: PIFA layer vs dense vs (U,Vt) low-rank.
+
+Three views (no GPU/TPU attached, DESIGN.md §8):
+  * analytic FLOPs + parameter bytes (exact, hardware-independent),
+  * measured CPU wall-clock of the jit'd layers (sanity signal: the
+    ordering and the growth-with-dimension trend match the paper),
+  * the TPU-roofline view lives in the dry-run (--compression pifa).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.density import rank_for_density_pifa
+from repro.core.pifa import (dense_flops, lowrank_flops, pifa_flops,
+                             dense_param_count, lowrank_param_count,
+                             pifa_param_count, pivoting_factorize)
+from repro.models.linear import apply_linear
+from benchmarks.common import emit, time_us
+
+
+def run():
+    rng = np.random.default_rng(0)
+    b = 256  # tokens
+    density = 0.55
+    for d in (512, 1024, 2048):
+        r = rank_for_density_pifa(d, d, density)
+        x = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+        w = rng.normal(size=(d, r)) @ rng.normal(size=(r, d))
+        f = pivoting_factorize(w, r)
+
+        dense_p = {"w": jnp.asarray(rng.normal(size=(d, d)), jnp.float32)}
+        # low-rank at the SAME parameter budget (its own density->rank map)
+        r_lr = int(density * d * d / (2 * d))
+        lr_p = {"u": jnp.asarray(rng.normal(size=(d, r_lr)), jnp.float32),
+                "vt": jnp.asarray(rng.normal(size=(r_lr, d)), jnp.float32)}
+        pifa_p = {"wp": f.wp.astype(jnp.float32),
+                  "c": f.c.astype(jnp.float32),
+                  "inv_perm": f.inv_perm}
+
+        apply_d = jax.jit(lambda p, x: apply_linear(p, x))
+        t_dense = time_us(apply_d, dense_p, x)
+        t_lr = time_us(apply_d, lr_p, x)
+        t_pifa = time_us(apply_d, pifa_p, x)
+
+        emit(f"table6.d{d}.dense", t_dense, f"flops={dense_flops(d, d, b)}")
+        emit(f"table6.d{d}.lowrank", t_lr,
+             f"flops={lowrank_flops(d, d, r_lr, b)};"
+             f"params={lowrank_param_count(d, d, r_lr)}")
+        emit(f"table6.d{d}.pifa", t_pifa,
+             f"flops={pifa_flops(d, d, r, b)};"
+             f"params={pifa_param_count(d, d, r)}")
+        emit(f"table6.d{d}.pifa_speedup_vs_dense", 0.0,
+             f"{t_dense / t_pifa:.3f}x")
+        emit(f"table6.d{d}.mem_ratio_pifa", 0.0,
+             f"{pifa_param_count(d, d, r) / dense_param_count(d, d):.3f}")
+
+
+if __name__ == "__main__":
+    run()

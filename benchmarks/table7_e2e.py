@@ -1,0 +1,40 @@
+"""Table 7 analogue: end-to-end serve throughput, dense vs MPIFA-PIFA.
+
+CPU tokens/s on the trained tiny LM with batched greedy decoding; the
+TPU-scale picture is the dry-run's decode cells (dense vs pifa roofline
+terms).  Also reports parameter bytes (the memory column of Table 7).
+"""
+import jax
+import numpy as np
+
+from repro.core.mpifa import MpifaConfig, compress_transformer
+from repro.launch.serve import generate
+from benchmarks.common import (BENCH_CFG, calib_tokens, emit, eval_ppl,
+                               trained_tiny)
+
+
+def _param_bytes(tree):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def run():
+    import jax.numpy as jnp
+    model, params = trained_tiny()
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, BENCH_CFG.vocab_size, (8, 16)),
+                          jnp.int32)
+    _, tps_dense = generate(model, params, prompts, 24, 48)
+    emit("table7.dense.tokens_per_s", 0.0, f"{tps_dense:.1f}")
+    emit("table7.dense.param_bytes", 0.0, _param_bytes(params))
+
+    cp = compress_transformer(model, params, calib_tokens(6),
+                              MpifaConfig(density=0.55))
+    _, tps_pifa = generate(model, cp, prompts, 24, 48, unstacked=True)
+    emit("table7.mpifa55.tokens_per_s", 0.0, f"{tps_pifa:.1f}")
+    emit("table7.mpifa55.param_bytes", 0.0, _param_bytes(cp))
+    emit("table7.mpifa55.ppl", 0.0,
+         f"{eval_ppl(model, cp, unstacked=True):.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""End-to-end training driver example (deliverable b).
+
+Trains the tiny LM for a few hundred steps on the structured synthetic
+stream through the production stack (pjit-able step, checkpointing,
+exact-resume data pipeline), then evaluates perplexity.  ~3 minutes on
+one CPU core.
+
+  PYTHONPATH=src python examples/train_tiny_lm.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train
+
+
+def main():
+    rc = train.main([
+        "--arch", "tiny",
+        "--steps", "300",
+        "--batch", "8",
+        "--seq-len", "128",
+        "--lr", "3e-3",
+        "--ckpt-dir", "/tmp/repro_tiny_ckpt",
+        "--ckpt-every", "100",
+        "--log-every", "25",
+    ])
+    print("train driver exited with", rc)
+
+
+if __name__ == "__main__":
+    main()

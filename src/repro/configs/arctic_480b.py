@@ -1,0 +1,17 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128e top-2 + dense residual MLP [hf:Snowflake/snowflake-arctic-base; hf].
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe", num_layers=35, d_model=7168,
+    num_heads=56, num_kv_heads=8, d_ff=4864, vocab_size=32000,
+    num_experts=128, top_k=2, moe_dense_ff=4864, capacity_factor=1.25,
+    source="hf:Snowflake/snowflake-arctic-base; hf",
+)
+
+SMOKE = ModelConfig(
+    name="arctic-smoke", family="moe", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=2, d_ff=96, vocab_size=256,
+    num_experts=8, top_k=2, moe_dense_ff=96, capacity_factor=1.25,
+)

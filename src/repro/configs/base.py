@@ -1,0 +1,130 @@
+"""Config system: architecture configs + input-shape suites.
+
+Every assigned architecture has a module ``configs/<id>.py`` exporting
+``CONFIG`` (the exact full-scale published config) and ``SMOKE``
+(a reduced same-family config for CPU smoke tests).  ``registry()``
+collects them; ``--arch <id>`` in every launcher resolves through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCH_IDS", "registry",
+           "get_config", "get_smoke_config"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default: d_model // num_heads
+    use_bias: bool = False
+    gated_mlp: bool = True
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 2
+    moe_dense_ff: int = 0            # arctic: dense residual MLP alongside MoE
+    capacity_factor: float = 1.25
+    # --- SSM (mamba2 / zamba2) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    # --- hybrid (zamba2): shared attention block every k mamba layers ---
+    attn_every: int = 0
+    # --- attention pattern (gemma3) ---
+    sliding_window: int = 0          # window size for local layers
+    local_global_ratio: int = 0      # N local layers per 1 global
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # precomputed frame embeddings (stub frontend)
+    # --- vlm (phi-3-vision) ---
+    num_patches: int = 0             # precomputed patch embeddings (stub frontend)
+    tie_embeddings: bool = True
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.family == "encdec"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic context path exists (DESIGN.md skip list)."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    @property
+    def has_decode(self) -> bool:
+        return True  # all assigned archs have a decoder (whisper is enc-dec)
+
+    def window_for_layer(self, i: int) -> int:
+        """gemma3-style local:global pattern; 0 = global (full) attention."""
+        if self.sliding_window and self.local_global_ratio:
+            return 0 if (i + 1) % (self.local_global_ratio + 1) == 0 else self.sliding_window
+        return self.sliding_window
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS: Tuple[str, ...] = (
+    "mamba2_2p7b",
+    "arctic_480b",
+    "grok1_314b",
+    "zamba2_1p2b",
+    "stablelm_1p6b",
+    "granite3_8b",
+    "command_r_35b",
+    "gemma3_12b",
+    "whisper_medium",
+    "phi3_vision_4p2b",
+)
+
+
+def _load(arch: str):
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _load(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _load(arch).SMOKE
+
+
+def registry() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch x shape) dry-run cell applies (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "skip: pure full-attention arch at 524k context (DESIGN.md §4)"
+    return True, ""

@@ -1,0 +1,15 @@
+"""command-r-35b [dense]: 40L d_model=8192 64H (GQA kv=8) d_ff=22528
+vocab=256000, no-bias GQA [hf:CohereForAI/c4ai-command-r-v01; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b", family="dense", num_layers=40, d_model=8192,
+    num_heads=64, num_kv_heads=8, d_ff=22528, vocab_size=256000,
+    use_bias=False,
+    source="hf:CohereForAI/c4ai-command-r-v01; unverified",
+)
+
+SMOKE = ModelConfig(
+    name="command-r-smoke", family="dense", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=2, d_ff=160, vocab_size=256,
+)

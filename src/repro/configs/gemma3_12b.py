@@ -1,0 +1,19 @@
+"""gemma3-12b [dense]: 48L d_model=3840 16H (GQA kv=8) d_ff=15360
+vocab=262144, 5:1 local:global sliding window (128k context)
+[hf:google/gemma-3-1b-pt; unverified].  head_dim=256 (decoupled from
+d_model/num_heads as in the released gemma-3 configs)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b", family="dense", num_layers=48, d_model=3840,
+    num_heads=16, num_kv_heads=8, d_ff=15360, vocab_size=262144,
+    head_dim=256, sliding_window=1024, local_global_ratio=5,
+    rope_theta=1000000.0,
+    source="hf:google/gemma-3-1b-pt; unverified",
+)
+
+SMOKE = ModelConfig(
+    name="gemma3-smoke", family="dense", num_layers=3, d_model=64,
+    num_heads=4, num_kv_heads=2, d_ff=160, vocab_size=256,
+    head_dim=16, sliding_window=8, local_global_ratio=2,
+)

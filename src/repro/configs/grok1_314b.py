@@ -1,0 +1,16 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8e top-2 [hf:xai-org/grok-1; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe", num_layers=64, d_model=6144,
+    num_heads=48, num_kv_heads=8, d_ff=32768, vocab_size=131072,
+    num_experts=8, top_k=2, capacity_factor=1.25,
+    source="hf:xai-org/grok-1; unverified",
+)
+
+SMOKE = ModelConfig(
+    name="grok1-smoke", family="moe", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+    num_experts=4, top_k=2, capacity_factor=1.25,
+)

@@ -1,0 +1,15 @@
+"""llama2-7b: the paper's own evaluation model (Tables 2-7).  Included
+so the dry-run / roofline covers the paper's exact setting too."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-7b", family="dense", num_layers=32, d_model=4096,
+    num_heads=32, num_kv_heads=32, d_ff=11008, vocab_size=32000,
+    tie_embeddings=False,
+    source="arXiv:2307.09288",
+)
+
+SMOKE = ModelConfig(
+    name="llama2-smoke", family="dense", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=4, d_ff=160, vocab_size=256,
+)

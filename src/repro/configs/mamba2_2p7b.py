@@ -1,0 +1,20 @@
+"""mamba2-2.7b [ssm]: 64L d_model=2560 attn-free, vocab=50280, ssm_state=128.
+
+SSD (state-space duality) backbone [arXiv:2405.21060; unverified].
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b", family="ssm", num_layers=64, d_model=2560,
+    num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_headdim=64, ssm_expand=2, ssm_conv=4, ssm_chunk=128,
+    gated_mlp=False, tie_embeddings=True,
+    source="arXiv:2405.21060; unverified",
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke", family="ssm", num_layers=2, d_model=64,
+    num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=256,
+    ssm_state=16, ssm_headdim=16, ssm_expand=2, ssm_conv=4, ssm_chunk=16,
+    gated_mlp=False, tie_embeddings=True,
+)

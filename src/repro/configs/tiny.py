@@ -1,0 +1,12 @@
+"""Tiny trainable LM used by the MPIFA validation pipeline, examples and
+benchmarks: small enough to *train from scratch on CPU* in minutes, big
+enough that low-rank pruning behaves qualitatively like the paper."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="tiny-lm", family="dense", num_layers=4, d_model=128,
+    num_heads=4, num_kv_heads=4, d_ff=384, vocab_size=512,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG

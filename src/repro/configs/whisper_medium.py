@@ -1,0 +1,18 @@
+"""whisper-medium [audio]: 24L d_model=1024 16H d_ff=4096 vocab=51865,
+enc-dec with conv frontend STUB (input_specs provides precomputed frame
+embeddings, 1500 frames) [arXiv:2212.04356; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="encdec", num_layers=24, d_model=1024,
+    num_heads=16, num_kv_heads=16, d_ff=4096, vocab_size=51865,
+    encoder_layers=24, encoder_seq=1500, use_bias=True, gated_mlp=False,
+    tie_embeddings=True,
+    source="arXiv:2212.04356; unverified",
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke", family="encdec", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=256,
+    encoder_layers=2, encoder_seq=32, use_bias=True, gated_mlp=False,
+)

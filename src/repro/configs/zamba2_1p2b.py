@@ -1,0 +1,19 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 32H (kv=32) d_ff=8192,
+ssm_state=64 -- Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid", num_layers=38, d_model=2048,
+    num_heads=32, num_kv_heads=32, d_ff=8192, vocab_size=32000,
+    ssm_state=64, ssm_headdim=64, ssm_expand=2, ssm_conv=4, ssm_chunk=128,
+    attn_every=6,
+    source="arXiv:2411.15242; hf",
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke", family="hybrid", num_layers=4, d_model=64,
+    num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=256,
+    ssm_state=16, ssm_headdim=16, ssm_expand=2, ssm_conv=4, ssm_chunk=16,
+    attn_every=2,
+)

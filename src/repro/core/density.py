@@ -1,0 +1,51 @@
+"""Density <-> rank maps (parameter accounting, Fig. 1 of the paper).
+
+`density` is the paper's definition: proportion of parameters remaining
+relative to the original (dense) module.  For an ``(m, n)`` layer:
+
+  * low-rank (U, Vt):   params = r*(m+n)          -> r = rho*m*n/(m+n)
+  * PIFA:               params = r*(m+n) - r^2+r  -> quadratic in r
+
+Because PIFA spends ``r^2 - r`` fewer parameters, at *equal density* it
+affords a strictly higher rank -- that higher rank is the mechanism by
+which ``W+M+PIFA`` beats ``W+M`` throughout Tables 2/5.
+"""
+from __future__ import annotations
+
+import math
+
+__all__ = [
+    "rank_for_density_lowrank",
+    "rank_for_density_pifa",
+    "density_of_rank_lowrank",
+    "density_of_rank_pifa",
+]
+
+
+def rank_for_density_lowrank(m: int, n: int, density: float) -> int:
+    """Largest r with r*(m+n) <= density*m*n (at least 1)."""
+    r = int(density * m * n / (m + n))
+    return max(1, min(r, min(m, n)))
+
+
+def rank_for_density_pifa(m: int, n: int, density: float) -> int:
+    """Largest r with r*(m+n) - r^2 + r <= density*m*n.
+
+    Solve r^2 - r*(m+n+1) + density*m*n >= 0 for the smaller root:
+    r = ((m+n+1) - sqrt((m+n+1)^2 - 4*density*m*n)) / 2.
+    """
+    s = m + n + 1
+    disc = s * s - 4.0 * density * m * n
+    if disc < 0:  # density > max achievable (cannot happen for density<=1)
+        return min(m, n)
+    r = (s - math.sqrt(disc)) / 2.0
+    r = int(math.floor(r))
+    return max(1, min(r, min(m, n)))
+
+
+def density_of_rank_lowrank(m: int, n: int, r: int) -> float:
+    return r * (m + n) / (m * n)
+
+
+def density_of_rank_pifa(m: int, n: int, r: int) -> float:
+    return (r * (m + n) - r * r + r) / (m * n)

@@ -1,0 +1,99 @@
+"""Permutation folding — beyond-paper optimization #1 (DESIGN.md §6).
+
+A PIFA layer natively ends with a gather ``y = concat([y_p, y_np])[inv_perm]``
+(Algorithm 2 steps 4-5).  That gather is pure data movement on the
+layer-output channel dim; whenever the *consumer* of those channels is
+itself a linear map (possibly through channel-wise elementwise ops), the
+permutation can be absorbed into the consumer's weights at compression
+time:
+
+    y1 = ycat[inv_perm]             (producer gather)
+    y2 = y1 @ Wq.T                  (consumer)
+  ==>
+    y2 = ycat @ Wq[:, perm].T       (gather deleted, Wq columns permuted)
+
+because ``(Wq P)[: , k] = Wq[:, perm[k]]`` for the permutation matrix P
+with ``(P ycat)[j] = ycat[inv_perm[j]]``.
+
+We fold MLPs (the dominant parameter mass):
+
+  * non-gated  ``down(act(up(x)))``      -> up's gather deleted.
+  * gated      ``down(act(gate(x)) * up(x))`` -> up's gather deleted and
+    gate's output re-indexed *into up's cat order* (its own gather is
+    composed with ``perm_up`` -- still exactly one gather for the pair,
+    or zero when gate is dense/lowrank, whose rows we permute directly).
+
+Lossless by construction; validated in tests/test_folding.py against the
+unfolded reference to float tolerance.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.linear import Params, linear_kind
+
+__all__ = ["fold_mlp", "permute_input_dim", "permute_output_dim"]
+
+
+def permute_input_dim(p: Params, perm) -> Params:
+    """Return consumer params with input columns permuted by ``perm``."""
+    perm = jnp.asarray(perm, dtype=jnp.int32)
+    k = linear_kind(p)
+    q = dict(p)
+    if k == "dense":
+        q["w"] = jnp.take(p["w"], perm, axis=1)
+    elif k == "lowrank":
+        q["vt"] = jnp.take(p["vt"], perm, axis=1)
+    else:  # pifa / pifa_folded: wp holds the input dim
+        q["wp"] = jnp.take(p["wp"], perm, axis=1)
+    return q
+
+
+def permute_output_dim(p: Params, perm) -> Params:
+    """Return producer params emitting outputs in ``perm`` order.
+
+    dense/lowrank producers: permute rows (free).  PIFA producers:
+    compose the gather -- new_inv_perm[k] = inv_perm[perm[k]].
+    """
+    perm = jnp.asarray(perm, dtype=jnp.int32)
+    k = linear_kind(p)
+    q = dict(p)
+    if k == "dense":
+        q["w"] = jnp.take(p["w"], perm, axis=0)
+    elif k == "lowrank":
+        q["u"] = jnp.take(p["u"], perm, axis=0)
+    elif k == "pifa":
+        q["inv_perm"] = jnp.take(p["inv_perm"], perm, axis=0)
+    else:
+        raise ValueError("cannot re-permute an already-folded pifa layer")
+    if "b" in p:
+        q["b"] = jnp.take(p["b"], perm, axis=0)
+    return q
+
+
+def fold_mlp(
+    up: Params,
+    down: Params,
+    gate: Optional[Params] = None,
+) -> Tuple[Params, Params, Optional[Params]]:
+    """Fold the up(-gate)->down permutation.  Returns (up, down, gate).
+
+    No-op unless ``up`` is an unfolded PIFA layer.
+    """
+    if linear_kind(up) != "pifa":
+        return up, down, gate
+    perm = np.asarray(up["inv_perm"])
+    # invert: perm_up[k] = original index emitted at cat position k
+    perm_up = np.empty_like(perm)
+    perm_up[perm] = np.arange(perm.shape[0], dtype=perm.dtype)
+    perm_up = jnp.asarray(perm_up, dtype=jnp.int32)
+
+    new_up = {kk: v for kk, v in up.items() if kk != "inv_perm"}
+    if "b" in new_up:
+        new_up["b"] = jnp.take(new_up["b"], perm_up, axis=0)
+    new_down = permute_input_dim(down, perm_up)
+    new_gate = permute_output_dim(gate, perm_up) if gate is not None else None
+    return new_up, new_down, new_gate

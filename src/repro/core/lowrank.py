@@ -1,0 +1,81 @@
+"""Low-rank pruning front-ends: vanilla SVD, activation-scaled SVD
+(ASVD-style) and the SVD-LLM truncation-aware *whitened* SVD (the "W"
+step of the paper's ablation, Table 5).
+
+All factorizations run host-side in float64 (one-shot compression work);
+outputs are ``(U, Vt)`` pairs with ``W ~= U @ Vt``, ``U: (m, r)``,
+``Vt: (r, n)`` -- the representation PIFA and the M reconstruction
+consume.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import numpy as np
+
+__all__ = ["svd_lowrank", "activation_svd", "whitened_svd", "as_numpy64"]
+
+
+def as_numpy64(w: Any) -> np.ndarray:
+    return np.asarray(w, dtype=np.float64)
+
+
+def svd_lowrank(w: Any, rank: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Vanilla truncated SVD: ``U = B_r E_r``, ``Vt = A_r^T`` (Sec. 3.1)."""
+    w = as_numpy64(w)
+    b, e, at = np.linalg.svd(w, full_matrices=False)
+    r = int(min(rank, e.shape[0]))
+    u = b[:, :r] * e[:r][None, :]
+    vt = at[:r, :]
+    return u, vt
+
+
+def activation_svd(w: Any, act_scale: Any, rank: int, alpha: float = 0.5
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """ASVD-style scaled SVD.
+
+    ``S = diag(act_scale ** alpha)``; factorize ``(W S)`` and return
+    ``U, Vt S^{-1}`` so that ``U @ Vt ~= W`` with error weighted by the
+    mean input-activation magnitude per channel (Yuan et al., 2023).
+    """
+    w = as_numpy64(w)
+    s = np.power(np.maximum(as_numpy64(act_scale), 1e-8), alpha)
+    u, vt = svd_lowrank(w * s[None, :], rank)
+    return u, vt / s[None, :]
+
+
+def whitened_svd(w: Any, xxt: Any, rank: int, eps: float = 1e-6
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """SVD-LLM truncation-aware data whitening (the paper's "W" step).
+
+    Let ``S`` be a Cholesky factor of the calibration second moment
+    ``XX^T`` (so ``XX^T = S S^T``).  Factorizing ``W S`` makes the
+    truncation error directly proportional to the induced output error
+    on the calibration distribution; we keep the top-``r`` components of
+    ``W S`` and return ``U = B_r E_r``, ``Vt = A_r^T S^{-1}``.
+    """
+    w = as_numpy64(w)
+    xxt = as_numpy64(xxt)
+    n = xxt.shape[0]
+    # Regularize to PSD: XX^T accumulators can be numerically indefinite.
+    tr = max(float(np.trace(xxt)) / n, 1e-12)
+    s = None
+    jitter = eps * tr
+    for _ in range(8):
+        try:
+            s = np.linalg.cholesky(xxt + jitter * np.eye(n))
+            break
+        except np.linalg.LinAlgError:
+            jitter *= 10.0
+    if s is None:
+        # Fall back to eigen square root.
+        ev, evec = np.linalg.eigh(xxt)
+        ev = np.maximum(ev, eps * tr)
+        s = evec * np.sqrt(ev)[None, :]
+    ws = w @ s
+    b, e, at = np.linalg.svd(ws, full_matrices=False)
+    r = int(min(rank, e.shape[0]))
+    u = b[:, :r] * e[:r][None, :]
+    # Vt = A_r^T S^{-1}: solve  Vt @ S = A_r^T.
+    vt = np.linalg.solve(s.T, at[:r, :].T).T
+    return u, vt

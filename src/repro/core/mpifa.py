@@ -1,0 +1,257 @@
+"""MPIFA — the end-to-end, retraining-free compression driver (Alg. 3).
+
+Pipeline per compressible linear, in block order:
+
+  1. capture calibration inputs under BOTH data flows:
+       X_o  from the dense model  (error-accumulation-free),
+       X_u  from the compressed model built so far (degraded flow);
+     accumulate ``XX^T`` (from X_u) and ``Y_t X^T`` with the Eq. 7 mixed
+     target ``Y_t = lam*W X_o + (1-lam)*W X_u`` -- online, constant
+     memory in #samples.
+  2. prune:   (U, Vt) <- whitened SVD of W at the module's target rank
+     (SVD-LLM "W" step; vanilla SVD / ASVD selectable for ablations).
+  3. reconstruct ("M"):  U via Eq. 5, then Vt via Eq. 9 (optional).
+  4. PIFA:  W' = U_r Vt_r -> (idx, W_p, C); because PIFA spends
+     ``r^2 - r`` fewer parameters, the target rank at equal *density* is
+     strictly higher than the (U, Vt) rank -- that is where MPIFA's
+     quality gain over W+M comes from (Tables 2/5).
+  5. (beyond paper) fold the output permutation into the consumer where
+     the topology allows (core/folding.py).
+
+The driver works against the Transformer harness (`block_apply` +
+`tap`); it is family-generic for decoder-only models.  Expert-stacked
+MoE weights and other archs compress through
+:func:`compress_weights_only` (data-free / stats-provided), since the
+paper's calibration protocol is defined for dense decoder LMs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import density as D
+from repro.core import lowrank as LR
+from repro.core.folding import fold_mlp
+from repro.core.pifa import PifaFactors, pivoting_factorize
+from repro.core.reconstruct import CalibStats, reconstruct_uv, solve_u_fullbatch
+from repro.models.linear import linear_weight, lowrank_linear, pifa_linear
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class MpifaConfig:
+    """Knobs of Algorithm 3 + ablation switches (Table 5 rows)."""
+
+    density: float = 0.55
+    lam: float = 0.25               # Eq. 7 mix ratio
+    alpha: float = 1e-3             # Eq. 9 ridge
+    update_v: bool = True           # False for very large models (70B recipe)
+    prune: str = "whiten"           # whiten | svd | asvd  (W step)
+    reconstruct: str = "m"          # m | fullbatch | none (M / W+U / W)
+    final_repr: str = "pifa"        # pifa | lowrank       (PIFA / no-PIFA)
+    fold: bool = True               # beyond-paper permutation folding
+    sequential_within_block: bool = True
+    module_density: Optional[Mapping[str, float]] = None  # MPIFA_NS
+    factor_dtype: Any = jnp.float32
+
+
+def target_rank(cfg: MpifaConfig, m: int, n: int, name: str = "") -> int:
+    rho = cfg.density
+    if cfg.module_density and name in cfg.module_density:
+        rho = cfg.module_density[name]
+    if cfg.final_repr == "pifa":
+        return D.rank_for_density_pifa(m, n, rho)
+    return D.rank_for_density_lowrank(m, n, rho)
+
+
+def _get(tree: Pytree, path: Tuple[str, ...]):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def _set(tree: Pytree, path: Tuple[str, ...], value) -> Pytree:
+    if not path:
+        return value
+    out = dict(tree)
+    out[path[0]] = _set(tree[path[0]], path[1:], value)
+    return out
+
+
+def compress_matrix(
+    cfg: MpifaConfig,
+    w: np.ndarray,
+    rank: int,
+    stats: Optional[CalibStats] = None,
+    xs_fullbatch: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Steps 2-3 for one weight matrix: prune + reconstruct -> (U, Vt)."""
+    if cfg.prune == "whiten" and stats is not None and stats.count > 0:
+        u, vt = LR.whitened_svd(w, stats.xxt / max(stats.count, 1), rank)
+    elif cfg.prune == "asvd" and stats is not None and stats.count > 0:
+        act_scale = np.sqrt(np.clip(np.diag(stats.xxt) / max(stats.count, 1), 1e-12, None))
+        u, vt = LR.activation_svd(w, act_scale, rank)
+    else:
+        u, vt = LR.svd_lowrank(w, rank)
+
+    if cfg.reconstruct == "m" and stats is not None and stats.count > 0:
+        u, vt = reconstruct_uv(w, u, vt, stats, update_v=cfg.update_v,
+                               alpha=cfg.alpha)
+    elif cfg.reconstruct == "fullbatch" and xs_fullbatch is not None:
+        u = solve_u_fullbatch(w, vt, xs_fullbatch)
+    return u, vt
+
+
+def finalize_linear(cfg: MpifaConfig, u: np.ndarray, vt: np.ndarray,
+                    bias=None) -> Pytree:
+    """Step 4: store as PIFA (lossless re-encoding) or keep (U, Vt)."""
+    if cfg.final_repr == "pifa":
+        w_prime = u @ vt
+        f = pivoting_factorize(w_prime, rank=u.shape[1], dtype=cfg.factor_dtype)
+        return pifa_linear(f, bias=bias, dtype=cfg.factor_dtype)
+    return lowrank_linear(u, vt, bias=bias, dtype=cfg.factor_dtype)
+
+
+# ---------------------------------------------------------------------------
+# The calibrated, flow-correct driver for the Transformer harness.
+# ---------------------------------------------------------------------------
+
+def compress_transformer(
+    model,
+    params: Pytree,
+    calib_batches: Sequence[jax.Array],
+    cfg: MpifaConfig,
+    *,
+    progress: Optional[Callable[[str], None]] = None,
+) -> Pytree:
+    """Run MPIFA over every block of a Transformer-harness model.
+
+    calib_batches: list of token arrays (b, s) -- processed sequentially
+    (the "online" property: stats are O(n^2), never O(samples)).
+    Returns compressed params (blocks in list form).
+    """
+    note = progress or (lambda s: None)
+    cfgm = model.cfg
+    params_u = model.unstack_blocks(params)
+    # hidden-state streams at the current block boundary, per calib batch
+    hs_o = [model.embed_tokens(params, t) for t in calib_batches]
+    hs_u = [h for h in hs_o]  # embeddings are not compressed: same start
+
+    infos = model.linears_in_block()
+    groups: List[List] = []
+    if cfg.sequential_within_block:
+        attn_in = [i for i in infos if i.path[0] == "attn" and i.path[1] != "o"]
+        attn_o = [i for i in infos if i.path == ("attn", "o")]
+        mlp_in = [i for i in infos if i.path[0] == "mlp" and i.path[1] != "down"]
+        mlp_dn = [i for i in infos if i.path == ("mlp", "down")]
+        groups = [g for g in (attn_in, attn_o, mlp_in, mlp_dn) if g]
+    else:
+        groups = [infos]
+
+    for bi in range(model.num_blocks()):
+        bp_dense = model.block_params(params, bi)
+        win = jnp.int32(cfgm.window_for_layer(bi))
+        for gi, group in enumerate(groups):
+            wanted = {"/".join(i.path) for i in group}
+            stats = {"/".join(i.path): CalibStats(i.in_dim, i.out_dim)
+                     for i in group}
+            weights = {"/".join(i.path):
+                       np.asarray(linear_weight(_get(bp_dense, i.path)),
+                                  dtype=np.float64) for i in group}
+            xs_store: Dict[str, list] = {k: [] for k in wanted} \
+                if cfg.reconstruct == "fullbatch" else {}
+
+            bp_u = params_u["blocks"][bi]
+            for s_i in range(len(calib_batches)):
+                cap_o: Dict[str, np.ndarray] = {}
+                cap_u: Dict[str, np.ndarray] = {}
+
+                def tap_o(name, x, cap=cap_o):
+                    if name in wanted:
+                        cap[name] = np.asarray(x, dtype=np.float64)
+
+                def tap_u(name, x, cap=cap_u):
+                    if name in wanted:
+                        cap[name] = np.asarray(x, dtype=np.float64)
+
+                model.block_apply(bp_dense, hs_o[s_i], window=win, tap=tap_o)
+                model.block_apply(bp_u, hs_u[s_i], window=win, tap=tap_u)
+                for name in wanted:
+                    st = stats[name]
+                    st.update_inputs(weights[name], cap_o[name], cap_u[name],
+                                     cfg.lam)
+                    if xs_store:
+                        xs_store[name].append(
+                            cap_u[name].reshape(-1, st.n_in))
+
+            for info in group:
+                name = "/".join(info.path)
+                w = weights[name]
+                r = target_rank(cfg, info.out_dim, info.in_dim,
+                                name=f"block{bi}/{name}")
+                xfb = (np.concatenate(xs_store[name], axis=0).T
+                       if xs_store else None)
+                u, vt = compress_matrix(cfg, w, r, stats[name], xfb)
+                old = _get(bp_u, info.path)
+                bias = old.get("b")
+                new_lin = finalize_linear(cfg, u, vt, bias=bias)
+                bp_u = _set(bp_u, info.path, new_lin)
+            params_u["blocks"][bi] = bp_u
+            note(f"block {bi} group {gi} done")
+
+        # advance both flows past this block
+        bp_u = params_u["blocks"][bi]
+        if cfg.fold and cfg.final_repr == "pifa" and "mlp" in bp_u:
+            mlp = dict(bp_u["mlp"])
+            up, down, gate = fold_mlp(mlp["up"], mlp["down"], mlp.get("gate"))
+            mlp["up"], mlp["down"] = up, down
+            if gate is not None:
+                mlp["gate"] = gate
+            bp_u = dict(bp_u)
+            bp_u["mlp"] = mlp
+            params_u["blocks"][bi] = bp_u
+        for s_i in range(len(calib_batches)):
+            hs_o[s_i], _ = model.block_apply(bp_dense, hs_o[s_i], window=win)
+            hs_u[s_i], _ = model.block_apply(bp_u, hs_u[s_i], window=win)
+        note(f"block {bi} complete")
+    return params_u
+
+
+# ---------------------------------------------------------------------------
+# Weight-level compression for arbitrary archs (MoE experts, mamba
+# projections, ...): data-free or with caller-provided stats.
+# ---------------------------------------------------------------------------
+
+def compress_linear_params(cfg: MpifaConfig, p: Pytree,
+                           stats: Optional[CalibStats] = None,
+                           name: str = "") -> Pytree:
+    w = np.asarray(linear_weight(p), dtype=np.float64)
+    m, n = w.shape
+    r = target_rank(cfg, m, n, name=name)
+    u, vt = compress_matrix(cfg, w, r, stats)
+    return finalize_linear(cfg, u, vt, bias=p.get("b"))
+
+
+def compress_expert_params(cfg: MpifaConfig, p: Pytree, name: str = "") -> Pytree:
+    """Stacked (E, out, in) expert weights -> stacked PIFA factors."""
+    w = np.asarray(p["w"], dtype=np.float64)
+    e, m, n = w.shape
+    r = target_rank(cfg, m, n, name=name)
+    wps, cs, invs = [], [], []
+    for ei in range(e):
+        u, vt = compress_matrix(cfg, w[ei], r)
+        if cfg.final_repr == "pifa":
+            f = pivoting_factorize(u @ vt, rank=r, dtype=cfg.factor_dtype)
+            wps.append(f.wp); cs.append(f.c); invs.append(f.inv_perm)
+        else:
+            wps.append(jnp.asarray(u, dtype=cfg.factor_dtype))
+            cs.append(jnp.asarray(vt, dtype=cfg.factor_dtype))
+    if cfg.final_repr == "pifa":
+        return {"wp": jnp.stack(wps), "c": jnp.stack(cs),
+                "inv_perm": jnp.stack(invs)}
+    return {"u": jnp.stack(wps), "vt": jnp.stack(cs)}

@@ -1,0 +1,193 @@
+"""Pivoting Factorization (PIFA) — Algorithm 1 & 2 of the paper.
+
+PIFA is a *lossless meta* low-rank representation: given any rank-``r``
+matrix ``W' = U @ Vt`` of shape ``(m, n)``, it finds ``r`` linearly
+independent *pivot rows* (via column-pivoted QR of ``W'.T``) and stores
+
+  * ``idx``       -- the ``r`` pivot-row indices (Algorithm 1, step 1)
+  * ``wp``        -- the pivot-row matrix  ``W'[idx, :]``      (r, n)
+  * ``c``         -- coefficients with ``W'[non_pivot, :] = c @ wp``
+                     ((m - r), r)
+
+for a total of ``r*(m+n) - r**2 + r`` parameters versus ``r*(m+n)`` for
+the ``(U, Vt)`` pair -- a saving of exactly ``r**2 - r`` with **zero**
+additional approximation error (Section 3.2/3.3).
+
+Factorization runs on the host in float64 (it is one-shot, offline,
+compression-time work); the *apply* path is pure JAX and jit/pjit
+compatible.  ``kernels/pifa_matmul`` provides the fused Pallas TPU
+kernel used by the serving path; :func:`pifa_apply` here is the simple
+jnp reference used everywhere else.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.linalg
+
+__all__ = [
+    "PifaFactors",
+    "pivoting_factorize",
+    "pifa_apply",
+    "pifa_reconstruct",
+    "pifa_param_count",
+    "lowrank_param_count",
+    "dense_param_count",
+    "pifa_flops",
+    "lowrank_flops",
+    "dense_flops",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PifaFactors:
+    """The PIFA layer P (output of Algorithm 1).
+
+    ``perm`` is ``concat([idx, non_pivot_idx])`` -- the row order in which
+    the layer *produces* outputs; ``inv_perm`` is its inverse so that
+    ``y = concat([y_p, y_np])[..., inv_perm]`` restores the original row
+    order.  Both are stored because ``perm`` lets consumers *fold* the
+    permutation away (see ``core/folding.py``).
+    """
+
+    wp: jax.Array        # (r, n)    pivot-row matrix
+    c: jax.Array         # (m-r, r)  non-pivot coefficients
+    perm: jax.Array      # (m,) int32, concat([pivot_idx, non_pivot_idx])
+    inv_perm: jax.Array  # (m,) int32, inverse permutation
+
+    @property
+    def rank(self) -> int:
+        return self.wp.shape[0]
+
+    @property
+    def out_dim(self) -> int:
+        return self.perm.shape[0]
+
+    @property
+    def in_dim(self) -> int:
+        return self.wp.shape[1]
+
+
+def _pivot_rows(w: np.ndarray, r: int) -> np.ndarray:
+    """Indices of ``r`` maximally linearly-independent rows of ``w``.
+
+    Column-pivoted QR on ``w.T`` (Businger & Golub 1971): the first ``r``
+    pivot columns of ``w.T`` are the pivot *rows* of ``w``.
+    """
+    # scipy returns the permutation ordered by decreasing |R_kk|; the
+    # first r entries are the best-conditioned pivot set.
+    _, _, piv = scipy.linalg.qr(w.T, mode="economic", pivoting=True)
+    return np.asarray(piv[:r], dtype=np.int32)
+
+
+def pivoting_factorize(
+    w: Any,
+    rank: Optional[int] = None,
+    *,
+    rtol: float = 1e-9,
+    dtype: Any = None,
+) -> PifaFactors:
+    """Algorithm 1: factorize a (numerically) rank-``r`` matrix.
+
+    Args:
+      w: the singular matrix ``W' = U @ Vt`` of shape ``(m, n)``.
+      rank: target rank.  If ``None`` it is detected from the QR
+        diagonal with relative tolerance ``rtol``.
+      dtype: dtype of the stored factors (defaults to ``w.dtype``).
+
+    Returns:
+      :class:`PifaFactors` with ``W'[perm] == concat([wp, c @ wp])`` to
+      float64 round-off.
+    """
+    w_np = np.asarray(w, dtype=np.float64)
+    m, n = w_np.shape
+    q, rr, piv = scipy.linalg.qr(w_np.T, mode="economic", pivoting=True)
+    if rank is None:
+        diag = np.abs(np.diag(rr))
+        if diag.size == 0 or diag[0] == 0.0:
+            rank = 1
+        else:
+            rank = max(1, int(np.sum(diag > rtol * diag[0])))
+    rank = int(min(rank, m, n))
+    idx = np.asarray(piv[:rank], dtype=np.int32)
+    mask = np.ones(m, dtype=bool)
+    mask[idx] = False
+    nonpivot = np.nonzero(mask)[0].astype(np.int32)
+
+    wp = w_np[idx, :]                      # (r, n)
+    wnp = w_np[nonpivot, :]                # (m-r, n)
+    # Solve C @ wp = wnp  <=>  wp.T @ C.T = wnp.T  (least squares; exact
+    # when rank(w) <= r).
+    c_t, *_ = np.linalg.lstsq(wp.T, wnp.T, rcond=None)
+    c = c_t.T                              # (m-r, r)
+
+    perm = np.concatenate([idx, nonpivot]).astype(np.int32)
+    inv_perm = np.empty(m, dtype=np.int32)
+    inv_perm[perm] = np.arange(m, dtype=np.int32)
+
+    out_dtype = dtype if dtype is not None else np.asarray(w).dtype
+    return PifaFactors(
+        wp=jnp.asarray(wp, dtype=out_dtype),
+        c=jnp.asarray(c, dtype=out_dtype),
+        perm=jnp.asarray(perm),
+        inv_perm=jnp.asarray(inv_perm),
+    )
+
+
+def pifa_apply(f: PifaFactors, x: jax.Array, *, gather: bool = True) -> jax.Array:
+    """Algorithm 2: ``y = W' @ x`` computed from the PIFA factors.
+
+    ``x`` has shape ``(..., n)`` (row-vector convention, as used by every
+    model in the zoo: ``y = x @ W.T``).
+
+    With ``gather=False`` the *permuted* output ``concat([y_p, y_np])``
+    is returned; consumers that folded ``inv_perm`` into their own
+    weights (``core/folding.py``) use this to skip the gather entirely.
+    """
+    yp = x @ f.wp.T                      # (..., r)      first GEMM
+    ynp = yp @ f.c.T                     # (..., m - r)  second GEMM
+    ycat = jnp.concatenate([yp, ynp], axis=-1)
+    if not gather:
+        return ycat
+    return jnp.take(ycat, f.inv_perm, axis=-1)
+
+
+def pifa_reconstruct(f: PifaFactors) -> jax.Array:
+    """Rebuild ``W'`` from the factors (testing / folding use)."""
+    wcat = jnp.concatenate([f.wp, f.c @ f.wp], axis=0)  # rows in perm order
+    return jnp.take(wcat, f.inv_perm, axis=0)
+
+
+# --------------------------------------------------------------------------
+# Parameter / FLOP accounting (Section 3.3).
+# --------------------------------------------------------------------------
+
+def dense_param_count(m: int, n: int) -> int:
+    return m * n
+
+
+def lowrank_param_count(m: int, n: int, r: int) -> int:
+    return r * (m + n)
+
+
+def pifa_param_count(m: int, n: int, r: int) -> int:
+    """``r*(m+n) - r^2 + r``: wp(r*n) + c((m-r)*r) + idx(r)."""
+    return r * n + (m - r) * r + r
+
+
+def dense_flops(m: int, n: int, b: int) -> int:
+    return 2 * m * n * b
+
+
+def lowrank_flops(m: int, n: int, r: int, b: int) -> int:
+    return 2 * b * r * (m + n)
+
+
+def pifa_flops(m: int, n: int, r: int, b: int) -> int:
+    """``2*b*r*(m + n - r)``: the chained GEMMs of Algorithm 2."""
+    return 2 * b * r * (n + (m - r))

@@ -1,0 +1,149 @@
+"""Online Error-Accumulation-Minimization Reconstruction ("M", Sec. 4).
+
+The reconstruction consumes only two accumulated second-moment
+statistics, so memory is constant in the number of calibration samples
+(the paper's "online" property, Eq. 5):
+
+    xxt  = sum_i  x_u^i  (x_u^i)^T            in R^{n x n}
+    ytxt = sum_i  y_t^i  (x_u^i)^T            in R^{m x n}
+    y_t^i = lam * W x_o^i + (1 - lam) * W x_u^i   (Eq. 7, mix ratio lam)
+
+where ``x_o`` is the *dense* data-flow input of the module and ``x_u``
+the *compressed* data-flow input.  Closed forms:
+
+    U_r  = (ytxt) V (V^T xxt V)^{-1}                      (Eq. 5)
+    V_r^T = (U^T U)^{-1} U^T (ytxt + alpha*W)(xxt + alpha*I)^{-1}   (Eq. 9)
+
+All solves are host-side float64.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "CalibStats",
+    "solve_u",
+    "solve_vt",
+    "solve_u_fullbatch",
+    "reconstruct_uv",
+]
+
+
+@dataclasses.dataclass
+class CalibStats:
+    """Streaming second-moment accumulators for one linear module.
+
+    ``update`` takes one (micro)batch of activations in row convention
+    ``(tokens, dim)`` -- i.e. ``x_u[t]`` is the module input of token
+    ``t`` under the compressed flow, ``y_t[t]`` the mixed target output
+    (Eq. 7).  fp64 accumulation: the statistics are sums over up to
+    millions of tokens and bf16/fp32 accumulation visibly degrades the
+    solve conditioning (paper App. B.1 observes the same singularity
+    problem and regularizes; we do both).
+    """
+
+    n_in: int
+    n_out: int
+    xxt: np.ndarray = dataclasses.field(default=None)  # type: ignore[assignment]
+    ytxt: np.ndarray = dataclasses.field(default=None)  # type: ignore[assignment]
+    count: int = 0
+
+    def __post_init__(self):
+        if self.xxt is None:
+            self.xxt = np.zeros((self.n_in, self.n_in), dtype=np.float64)
+        if self.ytxt is None:
+            self.ytxt = np.zeros((self.n_out, self.n_in), dtype=np.float64)
+
+    def update(self, x_u: Any, y_t: Any) -> None:
+        x_u = np.asarray(x_u, dtype=np.float64).reshape(-1, self.n_in)
+        y_t = np.asarray(y_t, dtype=np.float64).reshape(-1, self.n_out)
+        assert x_u.shape[0] == y_t.shape[0]
+        self.xxt += x_u.T @ x_u
+        self.ytxt += y_t.T @ x_u
+        self.count += x_u.shape[0]
+
+    def update_inputs(self, w: Any, x_o: Any, x_u: Any, lam: float) -> None:
+        """Accumulate from raw inputs: y_t = lam*W x_o + (1-lam)*W x_u."""
+        w = np.asarray(w, dtype=np.float64)
+        x_o = np.asarray(x_o, dtype=np.float64).reshape(-1, self.n_in)
+        x_u = np.asarray(x_u, dtype=np.float64).reshape(-1, self.n_in)
+        x_mix = lam * x_o + (1.0 - lam) * x_u
+        y_t = x_mix @ w.T
+        self.update(x_u, y_t)
+
+
+def solve_u(stats: CalibStats, vt: Any) -> np.ndarray:
+    """Eq. 5: U_r = (Y_t X^T) V (V^T (XX^T) V)^{-1}."""
+    v = np.asarray(vt, dtype=np.float64).T          # (n, r)
+    g = v.T @ stats.xxt @ v                         # (r, r)
+    rhs = stats.ytxt @ v                            # (m, r)
+    # U_r = rhs @ g^{-1}  <=>  g^T U_r^T = rhs^T; g is symmetric PSD.
+    r = g.shape[0]
+    tr = max(float(np.trace(g)) / r, 1e-30)
+    u = np.linalg.solve(g + 1e-10 * tr * np.eye(r), rhs.T).T
+    return u
+
+
+def solve_vt(stats: CalibStats, u: Any, w: Optional[Any] = None,
+             alpha: float = 1e-3) -> np.ndarray:
+    """Eq. 8 with the Eq. 9 ridge: V_r^T = (U^T U)^{-1} U^T (YtX^T + a W)(XX^T + a I)^{-1}.
+
+    ``alpha`` pulls ``U Vt`` toward ``W`` (prior knowledge that the
+    factorization should approximate the pretrained weight) and fixes
+    the singular-``XX^T`` failure mode (paper App. B.1, alpha=1e-3).
+    """
+    u = np.asarray(u, dtype=np.float64)             # (m, r)
+    n = stats.xxt.shape[0]
+    target = stats.ytxt
+    lhs_x = stats.xxt
+    if alpha and w is not None:
+        target = target + alpha * np.asarray(w, dtype=np.float64)
+        lhs_x = lhs_x + alpha * np.eye(n)
+    gu = u.T @ u                                    # (r, r)
+    r = gu.shape[0]
+    tru = max(float(np.trace(gu)) / r, 1e-30)
+    left = np.linalg.solve(gu + 1e-10 * tru * np.eye(r), u.T @ target)  # (r, n)
+    # right-multiply by (XX^T + a I)^{-1}: solve  Vt (X) = left.
+    vt = np.linalg.solve(lhs_x.T, left.T).T
+    return vt
+
+
+def solve_u_fullbatch(w: Any, vt: Any, x: Any) -> np.ndarray:
+    """Eq. 4 (SVD-LLM full-batch reconstruction), for tests/ablation.
+
+    ``x``: (n, N) column-stacked calibration inputs.
+    ``U_r = W X D^T (D D^T)^{-1}``, ``D = V^T X``.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    vt = np.asarray(vt, dtype=np.float64)
+    x = np.asarray(x, dtype=np.float64)
+    d = vt @ x                                      # (r, N)
+    ddt = d @ d.T
+    r = ddt.shape[0]
+    tr = max(float(np.trace(ddt)) / r, 1e-30)
+    return np.linalg.solve(ddt + 1e-10 * tr * np.eye(r), d @ (w @ x).T).T
+
+
+def reconstruct_uv(
+    w: Any,
+    u: np.ndarray,
+    vt: np.ndarray,
+    stats: CalibStats,
+    *,
+    update_v: bool = True,
+    alpha: float = 1e-3,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One full M step: refine (U, Vt) against the accumulated stats.
+
+    Order follows Algorithm 3: U first (Eq. 5), then optionally Vt with
+    the refined U (Eq. 9).  For very large models the paper reconstructs
+    only U (LLaMA2-70B) -- ``update_v=False``.
+    """
+    u_r = solve_u(stats, vt)
+    if not update_v:
+        return u_r, np.asarray(vt, dtype=np.float64)
+    vt_r = solve_vt(stats, u_r, w=w, alpha=alpha)
+    return u_r, vt_r

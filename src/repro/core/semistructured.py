@@ -1,0 +1,73 @@
+"""2:4 semi-structured pruning baselines (quality comparison, Table 3).
+
+The paper compares MPIFA against N:M pruning: magnitude (Zhu & Gupta),
+Wanda (|W| * ||x||) and RIA ((|W|/rowsum + |W|/colsum) * ||x||^0.5).
+
+On TPU there is no sparse-tensor-core analogue of Ampere 2:4 -- these
+masks give *zero* speedup here (the dense GEMM runs anyway), which is
+exactly the portability argument of the paper's Table 1.  We implement
+them as quality baselines only; see DESIGN.md section 2.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+__all__ = ["nm_mask", "magnitude_score", "wanda_score", "ria_score",
+           "prune_nm", "check_nm"]
+
+
+def magnitude_score(w: Any, act_norm: Optional[Any] = None) -> np.ndarray:
+    return np.abs(np.asarray(w, dtype=np.float64))
+
+
+def wanda_score(w: Any, act_norm: Any) -> np.ndarray:
+    """|W_ij| * ||x_j||_2 (Sun et al., 2024)."""
+    w = np.asarray(w, dtype=np.float64)
+    a = np.asarray(act_norm, dtype=np.float64)
+    return np.abs(w) * a[None, :]
+
+
+def ria_score(w: Any, act_norm: Any, a: float = 0.5) -> np.ndarray:
+    """Relative importance + activation (Zhang et al., 2024).
+
+    score = (|W_ij| / sum_j |W_ij| + |W_ij| / sum_i |W_ij|) * ||x_j||^a
+    """
+    w = np.abs(np.asarray(w, dtype=np.float64))
+    act = np.asarray(act_norm, dtype=np.float64)
+    row = w.sum(axis=1, keepdims=True) + 1e-12
+    col = w.sum(axis=0, keepdims=True) + 1e-12
+    rel = w / row + w / col
+    return rel * np.power(np.maximum(act, 1e-12), a)[None, :]
+
+
+def nm_mask(score: np.ndarray, n: int = 2, m: int = 4) -> np.ndarray:
+    """Keep the top-``n`` of every ``m`` consecutive input-dim entries."""
+    out_dim, in_dim = score.shape
+    pad = (-in_dim) % m
+    if pad:
+        score = np.pad(score, ((0, 0), (0, pad)), constant_values=-np.inf)
+    g = score.reshape(out_dim, -1, m)
+    kth = np.argsort(g, axis=-1)[..., ::-1][..., :n]
+    mask = np.zeros_like(g, dtype=bool)
+    np.put_along_axis(mask, kth, True, axis=-1)
+    mask = mask.reshape(out_dim, -1)[:, :in_dim]
+    return mask
+
+
+def prune_nm(w: Any, scorer=magnitude_score, act_norm: Optional[Any] = None,
+             n: int = 2, m: int = 4) -> np.ndarray:
+    w = np.asarray(w, dtype=np.float64)
+    return w * nm_mask(scorer(w, act_norm), n=n, m=m)
+
+
+def check_nm(w: Any, n: int = 2, m: int = 4) -> bool:
+    """Every group of m consecutive entries has <= n nonzeros."""
+    w = np.asarray(w)
+    out_dim, in_dim = w.shape
+    pad = (-in_dim) % m
+    if pad:
+        w = np.pad(w, ((0, 0), (0, pad)))
+    g = (w.reshape(out_dim, -1, m) != 0).sum(axis=-1)
+    return bool((g <= n).all())

@@ -1,0 +1,150 @@
+"""Non-uniform sparsity allocation for MPIFA_NS (paper App. B.2).
+
+Final per-module density =
+
+    Type Density x Layer Density / Global Density
+
+* **Type density** splits attention vs MLP modules: attention density is
+  searched over {global, global - 0.1}; MLP density is then solved so
+  the *global* parameter budget is exactly preserved.
+* **Layer density** follows OWL (Yin et al.): layers with more activation
+  outliers keep more parameters.  We compute the OWL score from
+  calibration activations (fraction of entries with |a| > theta * mean|a|)
+  and map scores affinely into [global - lam, global + lam], then
+  renormalize by parameter mass so the global density is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Sequence
+
+import numpy as np
+
+__all__ = ["ModuleBudget", "owl_layer_densities", "type_densities",
+           "allocate_densities", "owl_scores_from_model"]
+
+
+def owl_scores_from_model(model, params, calib_batches, theta: float = 5.0):
+    """Per-layer OWL outlier ratios from real calibration activations.
+
+    For each block, taps every linear input and measures the fraction of
+    activations with ``|a| > theta * mean|a|`` (Yin et al.'s outlier
+    criterion).  Returns a list of per-layer scores for
+    :func:`owl_layer_densities`.
+    """
+    import jax.numpy as jnp
+
+    scores = []
+    hs = [model.embed_tokens(params, t) for t in calib_batches]
+    for bi in range(model.num_blocks()):
+        bp = model.block_params(params, bi)
+        ratios = []
+
+        def tap(name, x):
+            a = np.abs(np.asarray(x, dtype=np.float32))
+            mu = a.mean() + 1e-12
+            ratios.append(float((a > theta * mu).mean()))
+
+        win = jnp.int32(model.cfg.window_for_layer(bi))
+        new_hs = []
+        for h in hs:
+            out, _ = model.block_apply(bp, h, window=win, tap=tap)
+            new_hs.append(out)
+        hs = new_hs
+        scores.append(float(np.mean(ratios)) if ratios else 0.0)
+    return scores
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleBudget:
+    """One compressible module: identity + parameter mass + grouping."""
+
+    name: str            # unique path, e.g. "block3/mlp/up"
+    layer: int           # transformer block index
+    kind: str            # "attn" | "mlp"
+    params: int          # dense parameter count (m*n)
+
+
+def owl_layer_densities(
+    outlier_scores: Sequence[float],
+    layer_params: Sequence[float],
+    global_density: float,
+    lam: float = 0.08,
+) -> np.ndarray:
+    """OWL-style layer densities in [global-lam, global+lam].
+
+    ``outlier_scores[i]`` is the outlier ratio of layer ``i`` (any
+    monotone saliency works); ``layer_params`` weights the
+    renormalization so that sum(d_i * p_i) == global * sum(p_i).
+    """
+    s = np.asarray(outlier_scores, dtype=np.float64)
+    p = np.asarray(layer_params, dtype=np.float64)
+    if s.size == 0:
+        return np.asarray([])
+    rng = s.max() - s.min()
+    if rng < 1e-12:
+        d = np.full_like(s, global_density)
+    else:
+        d = (s - s.min()) / rng * (2 * lam) + (global_density - lam)
+    # renormalize under the parameter-mass weighting
+    cur = float((d * p).sum() / p.sum())
+    d = d + (global_density - cur)
+    return np.clip(d, 0.02, 1.0)
+
+
+def type_densities(
+    budgets: Sequence[ModuleBudget],
+    global_density: float,
+    attn_candidates: Sequence[float] = (0.0, -0.1),
+) -> Dict[str, Dict[str, float]]:
+    """Candidate {attn, mlp} density splits preserving global params.
+
+    Returns a dict keyed by candidate label -> {"attn": da, "mlp": dm}.
+    The caller scores each candidate (e.g. calibration PPL) and picks
+    the best, as App. B.2 prescribes.
+    """
+    p_attn = sum(b.params for b in budgets if b.kind == "attn")
+    p_mlp = sum(b.params for b in budgets if b.kind == "mlp")
+    total = p_attn + p_mlp
+    out: Dict[str, Dict[str, float]] = {}
+    for delta in attn_candidates:
+        da = global_density + delta
+        if not (0.02 <= da <= 1.0):
+            continue
+        if p_mlp == 0:
+            if abs(da - global_density) > 1e-9:
+                continue
+            dm = global_density
+        else:
+            dm = (global_density * total - da * p_attn) / p_mlp
+        if not (0.02 <= dm <= 1.0):
+            continue
+        out[f"attn{delta:+.2f}"] = {"attn": da, "mlp": dm}
+    if not out:  # always provide the uniform fallback
+        out["uniform"] = {"attn": global_density, "mlp": global_density}
+    return out
+
+
+def allocate_densities(
+    budgets: Sequence[ModuleBudget],
+    global_density: float,
+    *,
+    layer_density: Mapping[int, float] | None = None,
+    type_density: Mapping[str, float] | None = None,
+) -> Dict[str, float]:
+    """Final per-module densities (App. B.2 formula), renormalized so the
+    global parameter budget is met exactly under the actual module sizes.
+    """
+    out: Dict[str, float] = {}
+    for b in budgets:
+        ld = layer_density.get(b.layer, global_density) if layer_density else global_density
+        td = type_density.get(b.kind, global_density) if type_density else global_density
+        out[b.name] = td * ld / global_density
+    # exact renormalization (clip can bend the budget slightly)
+    total = sum(b.params for b in budgets)
+    got = sum(out[b.name] * b.params for b in budgets)
+    if got > 0:
+        scale = global_density * total / got
+        for k in out:
+            out[k] = float(np.clip(out[k] * scale, 0.02, 1.0))
+    return out

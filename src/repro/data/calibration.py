@@ -1,0 +1,32 @@
+"""Calibration streams for the M reconstruction (Sec. 4).
+
+The paper uses 128 WikiText2 sequences (512 for MPIFA_NS); we expose the
+same knobs over any TokenPipeline source.  Samples are produced
+*sequentially* (the whole point of the online algorithm: only one sample
+is ever in memory)."""
+from __future__ import annotations
+
+from typing import Iterator, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticLM, TokenPipeline
+
+__all__ = ["calibration_batches"]
+
+
+def calibration_batches(vocab_size: int, num_samples: int, seq_len: int,
+                        seed: int = 1234, batch: int = 1,
+                        data_seed: int = 0) -> List[jnp.ndarray]:
+    """num_samples token arrays of shape (batch, seq_len).
+
+    ``data_seed`` is the DATASET identity and must match training (the
+    paper calibrates on the same corpus it evaluates, WikiText2)."""
+    cfg = DataConfig(vocab_size=vocab_size, seq_len=seq_len,
+                     global_batch=batch, seed=seed, data_seed=data_seed)
+    pipe = TokenPipeline(cfg, SyntheticLM(vocab_size, seed=data_seed))
+    out = []
+    for i in range(num_samples):
+        out.append(jnp.asarray(pipe.batch_at(i)["tokens"]))
+    return out

@@ -1,0 +1,127 @@
+"""Deterministic, shardable, exactly-resumable token pipeline.
+
+Production posture: each data-parallel host reads only its shard
+(``shard_id / num_shards``), batches are a pure function of
+``(seed, step)``, and the iterator state is one integer — so a restart
+from a checkpoint replays from the exact batch where training stopped
+(fault tolerance requirement, tested in tests/test_data.py).
+
+Two sources:
+  * ``SyntheticLM``  — a seeded Markov-chain token stream.  Not random
+    noise: it has learnable bigram structure, so the tiny-LM experiments
+    (benchmarks/table2 etc.) show real PPL separation between
+    compression methods, mirroring the paper's WikiText2 usage.
+  * ``FileTokens``   — memory-mapped ``.npy`` token file, the real-data
+    path (examples/train_tiny_lm.py can generate one).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticLM", "FileTokens", "TokenPipeline"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0        # sampling-stream seed (varies train/eval/calib)
+    data_seed: int = 0   # DATASET identity (the Markov chain itself):
+                         # train/eval/calibration must share this
+    shard_id: int = 0
+    num_shards: int = 1
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.num_shards == 0
+        return self.global_batch // self.num_shards
+
+
+class SyntheticLM:
+    """Seeded Markov bigram stream: P(t | t-1) is a fixed sparse-ish
+    random stochastic matrix => cross-entropy has a well-defined floor
+    that a trained model approaches and a pruned model degrades from."""
+
+    def __init__(self, vocab_size: int, seed: int = 0, branching: int = 8):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab_size
+        self.next_tokens = rng.integers(
+            0, vocab_size, size=(vocab_size, branching)).astype(np.int32)
+        logits = rng.normal(size=(vocab_size, branching)) * 1.5
+        p = np.exp(logits)
+        self.next_probs = (p / p.sum(1, keepdims=True)).astype(np.float64)
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        out = np.empty(n + 1, dtype=np.int32)
+        out[0] = rng.integers(0, self.vocab)
+        b = self.next_tokens.shape[1]
+        choices = rng.random(n)
+        for i in range(n):
+            row = out[i]
+            c = np.searchsorted(np.cumsum(self.next_probs[row]), choices[i])
+            out[i + 1] = self.next_tokens[row, min(c, b - 1)]
+        return out
+
+    def entropy_floor(self) -> float:
+        """Mean conditional entropy (nats) — the optimal PPL is exp(this)."""
+        h = -(self.next_probs * np.log(self.next_probs + 1e-12)).sum(1)
+        return float(h.mean())
+
+
+class FileTokens:
+    """Memory-mapped token archive."""
+
+    def __init__(self, path: str):
+        self.tokens = np.load(path, mmap_mode="r")
+
+    def slice(self, start: int, n: int) -> np.ndarray:
+        start = start % max(len(self.tokens) - n - 1, 1)
+        return np.asarray(self.tokens[start:start + n + 1], dtype=np.int32)
+
+
+class TokenPipeline:
+    """Stateless batch function + one-integer iterator state."""
+
+    def __init__(self, cfg: DataConfig, source: Optional[object] = None):
+        self.cfg = cfg
+        self.source = source or SyntheticLM(cfg.vocab_size, seed=cfg.data_seed)
+        self.step = 0
+
+    # -- pure batch function (resume == set step) ---------------------------
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        lb = cfg.local_batch
+        toks = np.empty((lb, cfg.seq_len), dtype=np.int32)
+        labels = np.empty((lb, cfg.seq_len), dtype=np.int32)
+        for i in range(lb):
+            # unique stream per (step, global row); global row encodes shard
+            row = cfg.shard_id * lb + i
+            rng = np.random.default_rng(
+                np.random.SeedSequence([cfg.seed, step, row]))
+            if isinstance(self.source, FileTokens):
+                seq = self.source.slice(
+                    int(rng.integers(0, 2**31 - 1)), cfg.seq_len)
+            else:
+                seq = self.source.sample(rng, cfg.seq_len)
+            toks[i] = seq[:-1]
+            labels[i] = seq[1:]
+        return {"tokens": toks, "labels": labels}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        b = self.batch_at(self.step)
+        self.step += 1
+        return b
+
+    # -- checkpointable state ------------------------------------------------
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self.step}
+
+    def load_state_dict(self, state: Dict[str, int]) -> None:
+        self.step = int(state["step"])

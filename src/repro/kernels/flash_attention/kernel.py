@@ -1,0 +1,118 @@
+"""Pallas flash-attention kernel (causal / windowed, GQA-agnostic head
+batch) — the §Perf-backlog fix for the jnp blockwise path.
+
+The jnp double-scan in ``models/layers._mha_blockwise`` is numerically
+identical but its (m, l, acc) carries round-trip HBM on every kv-chunk
+step (measured in EXPERIMENTS.md §Roofline).  Here the accumulators
+live in VMEM scratch across the kv grid dim (same persistence trick as
+pifa_matmul's two-stage scratch and ssd_scan's state):
+
+  grid = (batch*heads, q_tiles, kv_tiles)      kv minor => sequential
+  scratch: m (bq,), l (bq,), acc (bq, d)       persist across kv tiles
+
+Each (b*h, i, j) step computes one (bq, bk) score tile on the MXU,
+applies the causal/window mask from absolute positions, folds it into
+the running softmax, and writes the normalized output only on the last
+kv tile.  HBM traffic: q/k/v tiles in, out tile once — O(S*d) total
+instead of O(S*d*nk) for the scan formulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_call"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                           m_ref, l_ref, acc_ref, *,
+                           n_kv_tiles: int, scale: float, causal: bool,
+                           window: int):
+    """One (head, q-tile, kv-tile) grid step.
+
+    q_ref: (1, bq, d); k_ref/v_ref: (1, bk, d); o_ref: (1, bq, d)
+    qpos_ref: (1, bq) absolute positions; kpos_ref: (1, bk)
+    scratch: m/l (bq, 1) f32, acc (bq, d) f32.
+    """
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = qpos_ref[0]                                  # (bq,)
+    kpos = kpos_ref[0]                                  # (bk,)
+    delta = qpos[:, None] - kpos[None, :]
+    # convention: kpos < 0 marks padded/invalid keys (ops.py)
+    mask = jnp.broadcast_to((kpos >= 0)[None, :], s.shape)
+    if causal:
+        mask = mask & (delta >= 0)
+    if window > 0:
+        mask = mask & (delta < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...][:, 0]                           # (bq,)
+    l_prev = l_ref[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_ref[...] = m_new[:, None]
+    l_ref[...] = l_new[:, None]
+
+    @pl.when(j == n_kv_tiles - 1)
+    def finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_call(q, k, v, qpos, kpos, *, scale: float,
+                         causal: bool = True, window: int = 0,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False):
+    """q: (H, Sq, d); k/v: (H, Sk, d); qpos: (H, Sq); kpos: (H, Sk).
+
+    H is a flattened batch*kv-head*group dim (ops.py builds it); dims
+    must be pre-padded to tile multiples (padding rows carry positions
+    that the causal/window mask rejects).
+    """
+    h, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    nq, nk = sq // block_q, sk // block_k
+    kern = functools.partial(flash_attention_kernel, n_kv_tiles=nk,
+                             scale=scale, causal=causal, window=window)
+    return pl.pallas_call(
+        kern,
+        grid=(h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, block_k), lambda b, i, j: (b, j)),
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos, kpos, q, k, v)

@@ -1,0 +1,54 @@
+"""jit'd wrapper: GQA layout flattening + padding for the flash kernel."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_call
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret",
+                                             "use_kernel"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True, use_kernel: bool = True):
+    """GQA layout: q (b, sq, h, d); k/v (b, sk, hkv, d) -> (b, sq, h, d).
+
+    KV heads are repeated into the flattened head-batch (the kernel is
+    head-agnostic); padding rows get positions the causal mask rejects.
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, sk, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, sk, d)
+    qpos = jnp.broadcast_to(jnp.arange(sq)[None], (b * h, sq))
+    kpos = jnp.broadcast_to(jnp.arange(sk)[None], (b * h, sk))
+
+    if not use_kernel:
+        of = flash_attention_ref(qf, kf, vf, qpos, kpos, scale=scale,
+                                 causal=causal, window=window)
+    else:
+        pq = (-sq) % block_q
+        pk = (-sk) % block_k
+        if pq:
+            qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+            qpos = jnp.pad(qpos, ((0, 0), (0, pq)), constant_values=-1)
+        if pk:
+            kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
+            vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
+            # kpos < 0 marks padded keys (kernel validity convention)
+            kpos = jnp.pad(kpos, ((0, 0), (0, pk)), constant_values=-1)
+        of = flash_attention_call(qf, kf, vf, qpos, kpos, scale=scale,
+                                  causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)[:, :sq]
+    return of.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

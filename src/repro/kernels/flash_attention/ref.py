@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref"]
+
+
+def flash_attention_ref(q, k, v, qpos, kpos, *, scale, causal=True,
+                        window: int = 0):
+    """Direct softmax attention over flattened heads: q (H, Sq, d)."""
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    delta = qpos[:, :, None] - kpos[:, None, :]
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask = mask & (delta >= 0)
+    if window > 0:
+        mask = mask & (delta < window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

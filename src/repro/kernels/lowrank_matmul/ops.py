@@ -1,0 +1,51 @@
+"""jit'd wrappers: padded tiled GEMM + the two-GEMM low-rank layer."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lowrank_matmul.kernel import matmul_call
+from repro.kernels.lowrank_matmul.ref import lowrank_matmul_ref
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m",
+                                             "interpret", "use_kernel"))
+def matmul(x: jax.Array, w: jax.Array, *, block_b: int = 128,
+           block_m: int = 128, interpret: bool = True,
+           use_kernel: bool = True) -> jax.Array:
+    lead, n = x.shape[:-1], x.shape[-1]
+    m = w.shape[0]
+    x2 = x.reshape(-1, n)
+    if not use_kernel:
+        y = jnp.dot(x2, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        bsz = x2.shape[0]
+        xp = _pad_to(_pad_to(x2, 0, block_b), 1, 128)
+        wp = _pad_to(_pad_to(w, 0, block_m), 1, 128)
+        y = matmul_call(xp, wp, block_b=block_b, block_m=block_m,
+                        interpret=interpret)[:bsz, :m]
+    return y.reshape(lead + (m,))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m",
+                                             "interpret", "use_kernel"))
+def lowrank_matmul(x: jax.Array, u: jax.Array, vt: jax.Array, *,
+                   block_b: int = 128, block_m: int = 128,
+                   interpret: bool = True, use_kernel: bool = True
+                   ) -> jax.Array:
+    """The (U, Vt) baseline layer: two GEMM dispatches through HBM."""
+    if not use_kernel:
+        return lowrank_matmul_ref(x, u, vt)
+    t = matmul(x, vt, block_b=block_b, block_m=block_m, interpret=interpret)
+    return matmul(t, u, block_b=block_b, block_m=block_m, interpret=interpret)

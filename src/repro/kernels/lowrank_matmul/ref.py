@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the low-rank (U, Vt) layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lowrank_matmul_ref", "matmul_ref"]
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def lowrank_matmul_ref(x: jax.Array, u: jax.Array, vt: jax.Array) -> jax.Array:
+    """y = (x @ vt.T) @ u.T — the 2*b*r*(m+n) FLOPs baseline (Sec. 3.3)."""
+    t = jnp.dot(x, vt.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    return jnp.dot(t, u.T, preferred_element_type=jnp.float32).astype(x.dtype)

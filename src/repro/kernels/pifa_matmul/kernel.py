@@ -1,0 +1,102 @@
+"""Fused PIFA layer kernel (Algorithm 2) — the paper's hot loop, TPU-native.
+
+Computes, in ONE pallas_call,
+
+    y_cat = [ y_p ; y_np ],   y_p = x @ wp.T,   y_np = y_p @ c.T
+
+with the intermediate ``y_p`` tile kept **resident in VMEM scratch**
+between the two GEMM stages (the CUDA reference implementation launches
+two kernels through global memory; on TPU the fusion removes one HBM
+round-trip of ``y_p`` — (B, r) bytes per layer).
+
+Grid: ``(B/bb, m/bo)`` — for a fixed batch tile ``i`` the TPU grid runs
+the output tiles ``j`` sequentially: tiles ``j < r/bo`` are stage 1
+(compute y_p, write it to the output AND stash it in VMEM scratch),
+tiles ``j >= r/bo`` are stage 2 (consume the full scratch).  Scratch is
+persistent across grid steps, so the dependency is honoured by grid
+order (the last grid dim is the minor, sequential one on TPU).
+
+BlockSpecs keep the full contraction dims (n, r) inside the block: the
+working set per step is ``bb*n + bo*n + bb*r`` elements — choose ``bb``
+so this fits VMEM (~16 MB/core); all tile dims are multiples of 128
+(MXU lane alignment), padding handled by ``ops.py``.
+
+The output permutation (Algorithm 2 steps 4-5) is deliberately NOT a
+scatter inside the kernel: minor-dim scatters serialize on TPU.  The
+wrapper applies it as one gather — or not at all, when the consumer
+folded it away (core/folding.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["pifa_matmul_kernel", "pifa_matmul_call"]
+
+
+def pifa_matmul_kernel(x_ref, wp_ref, c_ref, out_ref, yp_scratch, *,
+                       n_yp_tiles: int, block_o: int):
+    """One (batch-tile, out-tile) grid step.
+
+    x_ref:  (bb, n)      — batch tile, full reduction dim
+    wp_ref: (bo, n)      — stage-1 weight tile (clamped on stage-2 steps)
+    c_ref:  (bo, r)      — stage-2 weight tile (clamped on stage-1 steps)
+    out_ref: (bb, bo)    — the y_cat tile this step owns
+    yp_scratch: (bb, r)  — VMEM-persistent y_p for the current batch tile
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j < n_yp_tiles)
+    def stage1():
+        yp = jnp.dot(x_ref[...], wp_ref[...].T,
+                     preferred_element_type=jnp.float32)
+        out_ref[...] = yp.astype(out_ref.dtype)
+        pl.store(yp_scratch, (slice(None), pl.dslice(j * block_o, block_o)),
+                 yp)
+
+    @pl.when(j >= n_yp_tiles)
+    def stage2():
+        ynp = jnp.dot(yp_scratch[...], c_ref[...].T,
+                      preferred_element_type=jnp.float32)
+        out_ref[...] = ynp.astype(out_ref.dtype)
+
+
+def pifa_matmul_call(x, wp, c, *, block_b: int = 128, block_o: int = 128,
+                     interpret: bool = False):
+    """x: (B, n), wp: (r, n), c: (m-r, r) -> y_cat: (B, m).
+
+    All dims must already be multiples of the block sizes (``ops.py``
+    pads and un-pads).
+    """
+    bsz, n = x.shape
+    r = wp.shape[0]
+    mnp = c.shape[0]
+    assert bsz % block_b == 0 and r % block_o == 0 and mnp % block_o == 0, (
+        bsz, r, mnp, block_b, block_o)
+    n_yp = r // block_o
+    n_out = n_yp + mnp // block_o
+    grid = (bsz // block_b, n_out)
+
+    kern = functools.partial(pifa_matmul_kernel, n_yp_tiles=n_yp,
+                             block_o=block_o)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i, j: (i, 0)),
+            # stage-2 steps clamp to wp tile 0 (unused there)
+            pl.BlockSpec((block_o, n),
+                         lambda i, j: (jnp.minimum(j, n_yp - 1), 0)),
+            # stage-1 steps clamp to c tile 0 (unused there)
+            pl.BlockSpec((block_o, r),
+                         lambda i, j: (jnp.maximum(j - n_yp, 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, r + mnp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, r), jnp.float32)],
+        interpret=interpret,
+    )(x, wp, c)

@@ -1,0 +1,64 @@
+"""jit'd public wrapper for the fused PIFA kernel.
+
+Handles: flattening leading dims, padding every dim to MXU-aligned
+block multiples (zero padding is exact: padded wp rows produce zero
+y_p columns, padded c rows produce y_np rows that are sliced off),
+kernel dispatch with an interpret-mode fallback on CPU, and the
+optional output gather.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pifa_matmul.kernel import pifa_matmul_call
+from repro.kernels.pifa_matmul.ref import pifa_matmul_ref
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_o",
+                                             "interpret", "use_kernel"))
+def pifa_matmul(x: jax.Array, wp: jax.Array, c: jax.Array,
+                inv_perm: Optional[jax.Array] = None, *,
+                block_b: int = 128, block_o: int = 128,
+                interpret: bool = True, use_kernel: bool = True) -> jax.Array:
+    """PIFA layer forward: x (..., n) -> y (..., m).
+
+    ``interpret=True`` is the CPU-container default (the kernel body runs
+    in Python); on TPU pass ``interpret=False``.  ``use_kernel=False``
+    routes to the jnp oracle (what the models use under jit on CPU).
+    """
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    r, mnp = wp.shape[0], c.shape[0]
+    x2 = x.reshape(-1, n)
+    if not use_kernel:
+        ycat = pifa_matmul_ref(x2, wp, c)
+    else:
+        bsz = x2.shape[0]
+        xp = _pad_to(_pad_to(x2, 0, block_b), 1, 128)
+        wpp = _pad_to(_pad_to(wp, 0, block_o), 1, 128)
+        cp = _pad_to(_pad_to(c, 0, block_o), 1, block_o)
+        # c's reduction dim must match padded r
+        rp = wpp.shape[0]
+        if cp.shape[1] != rp:
+            cp = _pad_to(cp, 1, rp)[:, :rp]
+        ycat_p = pifa_matmul_call(xp, wpp, cp, block_b=block_b,
+                                  block_o=block_o, interpret=interpret)
+        # un-pad: y_p cols [0, r), y_np cols [rp, rp + mnp)
+        ycat = jnp.concatenate(
+            [ycat_p[:bsz, :r], ycat_p[:bsz, rp:rp + mnp]], axis=-1)
+    if inv_perm is not None:
+        ycat = jnp.take(ycat, inv_perm, axis=-1)
+    return ycat.reshape(lead + (r + mnp,))

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused PIFA kernel (Algorithm 2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pifa_matmul_ref", "pifa_layer_ref"]
+
+
+def pifa_matmul_ref(x: jax.Array, wp: jax.Array, c: jax.Array) -> jax.Array:
+    """y_cat = [x @ wp.T, (x @ wp.T) @ c.T] — fp32 accumulation."""
+    yp = jnp.dot(x, wp.T, preferred_element_type=jnp.float32)
+    ynp = jnp.dot(yp, c.astype(jnp.float32).T,
+                  preferred_element_type=jnp.float32)
+    return jnp.concatenate([yp, ynp], axis=-1).astype(x.dtype)
+
+
+def pifa_layer_ref(x: jax.Array, wp: jax.Array, c: jax.Array,
+                   inv_perm: jax.Array) -> jax.Array:
+    """Full Algorithm 2 including the output permutation."""
+    return jnp.take(pifa_matmul_ref(x, wp, c), inv_perm, axis=-1)

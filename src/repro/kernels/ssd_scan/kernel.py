@@ -1,0 +1,104 @@
+"""Pallas SSD chunk-scan kernel (Mamba2 inner loop).
+
+Grid ``(batch, num_chunks)`` — the chunk dim is the minor/sequential
+grid dim, so the recurrent state lives in a VMEM scratch that persists
+across chunk steps (same trick as the PIFA kernel's two-stage scratch):
+
+  per chunk c (length Q):
+    cA   = cumsum(dt * A)                                  (Q, h)
+    y    = ((C B^T) ⊙ L ⊙ dt) x      intra-chunk, (Q,Q) MXU matmuls
+         + (C · H) ⊙ exp(cA)         inter-chunk carry-in
+    H   <- exp(cA[-1]) H + (B ⊙ dt exp(cA[-1]-cA))^T x     state update
+
+The (Q, Q) score matrix and the (h, n, p) state tile stay in VMEM; HBM
+traffic is exactly the chunk inputs/outputs — this is the TPU-native
+adaptation of the Mamba2 Triton kernel (DESIGN.md §2: VMEM-resident
+state instead of SRAM warp tiles).
+
+Head-batched formulation: all heads of one (batch, chunk) cell are
+processed in-block (heads share B/C in the ngroups=1 layout).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_kernel", "ssd_scan_call"]
+
+
+def ssd_scan_kernel(x_ref, b_ref, c_ref, dt_ref, da_ref, y_ref, hfin_ref,
+                    h_scratch, *, num_chunks: int):
+    """One (batch, chunk) grid step.
+
+    x_ref: (1, 1, Q, H, P); b/c_ref: (1, 1, Q, N); dt/da_ref: (1, 1, Q, H)
+    y_ref: (1, 1, Q, H, P); hfin_ref: (1, H, N, P);
+    h_scratch: (H, N, P) fp32, persistent across the chunk grid dim.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def init_state():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (Q, H, P)
+    b = b_ref[0, 0].astype(jnp.float32)        # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)        # (Q, N)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (Q, H)
+    da = da_ref[0, 0].astype(jnp.float32)      # (Q, H)
+    q = x.shape[0]
+
+    ca = jnp.cumsum(da, axis=0)                # (Q, H)
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tri = idx >= jdx
+    # decay L[i, j, h] = exp(ca[i] - ca[j]) on the lower triangle
+    lmat = jnp.exp(ca[:, None, :] - ca[None, :, :])           # (Q, Q, H)
+    scores = cb[:, :, None] * jnp.where(tri[:, :, None], lmat, 0.0)
+    scores = scores * dt[None, :, :]                          # (i, j, h)
+    # y_intra[i, h, p] = sum_j scores[i, j, h] * x[j, h, p]
+    y = jnp.einsum("ijh,jhp->ihp", scores, x)
+    # carry-in: y_inter[i, h, p] = sum_n c[i, n] * H[h, n, p] * exp(ca[i, h])
+    h_prev = h_scratch[...]
+    y = y + jnp.einsum("in,hnp->ihp", c, h_prev) * jnp.exp(ca)[:, :, None]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # state update
+    decay_end = jnp.exp(ca[-1, :][None, :] - ca) * dt         # (Q, H)
+    s_new = jnp.einsum("jh,jn,jhp->hnp", decay_end, b, x)
+    h_scratch[...] = jnp.exp(ca[-1, :])[:, None, None] * h_prev + s_new
+    hfin_ref[0] = h_scratch[...]
+
+
+def ssd_scan_call(x, b, c, dt, da, *, interpret: bool = False):
+    """x: (B, NC, Q, H, P); b/c: (B, NC, Q, N); dt/da: (B, NC, Q, H).
+
+    Returns (y: like x, h_final: (B, H, N, P) fp32).
+    """
+    bsz, nc, q, h, p = x.shape
+    n = b.shape[-1]
+    kern = functools.partial(ssd_scan_kernel, num_chunks=nc)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, h, p), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, h), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, h), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, h, p), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, h, n, p), lambda i, j: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nc, q, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, dt, da)

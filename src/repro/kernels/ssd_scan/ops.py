@@ -1,0 +1,45 @@
+"""jit'd wrapper for the SSD chunk-scan kernel (padding + layout)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_call
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret",
+                                             "use_kernel"))
+def ssd_scan(x, b, c, dt, da, *, chunk: int = 128, interpret: bool = True,
+             use_kernel: bool = True):
+    """Flat layout: x (B, S, H, P); b/c (B, S, N); dt/da (B, S, H).
+
+    Pads S to a chunk multiple (da=0 padding is exact: exp(0)=1 decay,
+    dt=0 kills the padded tokens' contributions), chunks, dispatches.
+    Returns (y (B, S, H, P), h_final (B, H, N, P)).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    dac = da.reshape(bsz, nc, chunk, h)
+    if use_kernel:
+        y, h_fin = ssd_scan_call(xc, bc, cc, dtc, dac, interpret=interpret)
+    else:
+        y, h_fin = ssd_scan_ref(xc, bc, cc, dtc, dac)
+    y = y.reshape(bsz, nc * chunk, h, p)
+    if pad:
+        y = y[:, :s]
+    return y, h_fin

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the SSD chunk scan: delegates to the model's
+`_ssd_chunk_scan` (the lax.scan formulation), reshaped to the kernel's
+pre-chunked layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mamba2 import _ssd_chunk_scan
+
+__all__ = ["ssd_scan_ref"]
+
+
+def ssd_scan_ref(x, b, c, dt, da):
+    """Same layout as ssd_scan_call: x (B, NC, Q, H, P) etc."""
+    bsz, nc, q, h, p = x.shape
+    n = b.shape[-1]
+    xf = x.reshape(bsz, nc * q, h, p)
+    bf = b.reshape(bsz, nc * q, n)
+    cf = c.reshape(bsz, nc * q, n)
+    dtf = dt.reshape(bsz, nc * q, h)
+    daf = da.reshape(bsz, nc * q, h)
+    y, h_fin = _ssd_chunk_scan(xf, bf, cf, dtf, daf, chunk=q)
+    return y.reshape(bsz, nc, q, h, p).astype(x.dtype), h_fin

@@ -1,0 +1,382 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the very first lines: jax locks the device count on first init.
+#   Only the dry-run forces 512 placeholder devices; tests/benches see 1.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent without
+hardware:  ``jax.jit(step, in_shardings=...).lower(**ShapeDtypeStructs)
+.compile()`` must succeed on the 16x16 (256-chip) production mesh AND
+the 2x16x16 (512-chip, 2-pod) mesh; we then extract
+
+  * ``compiled.memory_analysis()``  (per-device bytes — does it fit)
+  * ``compiled.cost_analysis()``    (per-device HLO FLOPs / HBM bytes)
+  * collective operand bytes parsed from the post-SPMD HLO text
+
+which feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch command_r_35b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+  python -m repro.launch.dryrun ... --compression pifa --density 0.55
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeConfig,
+                                cell_is_runnable, get_config)
+from repro.core.density import rank_for_density_pifa
+from repro.launch.mesh import make_mesh_from_spec, make_production_mesh
+from repro.models.model import batch_spec, build_model, loss_fn, make_train_step
+from repro.optim.adamw import AdamW
+from repro.parallel import sharding as sh
+from repro.parallel.hlo_cost import analyze_hlo_text
+
+Pytree = Any
+
+# TPU v5e hardware constants for the roofline terms (per chip).
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (1-link conservative)
+
+
+# ---------------------------------------------------------------------------
+# Compressed (PIFA) parameter shape planning — serving dry-runs use the
+# paper's deployment representation without materializing anything.
+# ---------------------------------------------------------------------------
+
+_COMPRESSIBLE = ("q", "k", "v", "o", "up", "gate", "down", "in_proj",
+                 "out_proj")
+
+
+def compress_shape_tree(tree: Pytree, density: float,
+                        path: tuple = (), folded: bool = False) -> Pytree:
+    """Replace every compressible dense linear's shapes with PIFA shapes.
+
+    Works on ``jax.eval_shape`` trees; supports stacked leading dims
+    (num_layers, num_experts).  Routers/norms/embeddings stay dense,
+    matching the paper's density accounting.  ``folded`` drops the MLP
+    up-projection's gather (core/folding.py: permutation absorbed into
+    the consumer) — the beyond-paper serving mode.
+    """
+    if isinstance(tree, dict):
+        name = path[-1] if path else ""
+        if ("w" in tree and name in _COMPRESSIBLE
+                and getattr(tree["w"], "ndim", 0) >= 2
+                and "router" not in path):
+            w = tree["w"]
+            lead, (m, n) = w.shape[:-2], w.shape[-2:]
+            r = rank_for_density_pifa(m, n, density)
+            # TPU adaptation (DESIGN.md SS2/SS6): align the PIFA rank so
+            # (r, m-r) tile onto the 16-way model axis and the 128-lane
+            # MXU -- unaligned ranks (the density formula gives e.g.
+            # r=3765 for command-r's up-proj) fail the even-sharding
+            # check and silently REPLICATE every PIFA weight.
+            for mult in (256, 128, 64, 16):
+                if r >= mult and (m - (r // mult) * mult) % 16 == 0:
+                    r = (r // mult) * mult
+                    break
+            out = {
+                "wp": jax.ShapeDtypeStruct(lead + (r, n), w.dtype),
+                "c": jax.ShapeDtypeStruct(lead + (m - r, r), w.dtype),
+                "inv_perm": jax.ShapeDtypeStruct(lead + (m,), jnp.int32),
+            }
+            if folded and name == "up" and len(path) >= 2 \
+                    and path[-2] == "mlp":
+                del out["inv_perm"]
+            if "b" in tree:
+                out["b"] = tree["b"]
+            return out
+        return {k: compress_shape_tree(v, density, path + (k,), folded)
+                for k, v in tree.items()}
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def tree_param_count(tree: Pytree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def active_param_count(tree: Pytree, cfg: ModelConfig) -> int:
+    """MoE-aware: experts contribute top_k/E of their mass per token."""
+    total = 0
+    def walk(t, path):
+        nonlocal total
+        if isinstance(t, dict):
+            for k, v in t.items():
+                walk(v, path + (k,))
+        else:
+            n = int(np.prod(t.shape))
+            if "moe" in path and not any("router" in p for p in path):
+                n = int(n * cfg.top_k / max(cfg.num_experts, 1))
+            total += n
+    walk(tree, ())
+    return total
+
+
+def _sds(shape, dtype, mesh, spec):
+    spec = sh.sanitize_spec(spec, shape, mesh)
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=jax.sharding.NamedSharding(mesh, spec))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+                act_dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input — weak-type
+    correct, sharded, no device allocation."""
+    shard_batch = shape.global_batch >= 2
+    specs = sh.batch_specs(
+        {k: np.zeros(s, dtype=np.int32 if d == jnp.int32 else np.float32)
+         for k, (s, d) in batch_spec(cfg, shape, act_dtype).items()},
+        rules, shard_batch=shard_batch)
+    out = {}
+    for name, (shp, dt) in batch_spec(cfg, shape, act_dtype).items():
+        out[name] = _sds(shp, dt, mesh, specs[name])
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, compression: str = "dense",
+               density: float = 0.55, remat: str = "dots",
+               param_dtype=jnp.bfloat16, rules: Optional[sh.ShardingRules] = None):
+    """Returns (jitted_fn, example_args_SDS, meta) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    base_rules = rules or sh.ShardingRules(
+        shard_cache_seq=(shape.name == "long_500k"))
+    rules = base_rules.for_mesh(mesh)
+
+    params_sds = jax.eval_shape(
+        functools.partial(model.init, dtype=param_dtype),
+        jax.random.PRNGKey(0))
+    if compression in ("pifa", "pifa_folded") and shape.kind != "train":
+        params_sds = compress_shape_tree(
+            params_sds, density, folded=(compression == "pifa_folded"))
+    p_shard = sh.param_shardings(params_sds, mesh, rules)
+    params_in = jax.tree.map(
+        lambda s, sh_: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh_),
+        params_sds, p_shard)
+
+    meta = dict(arch=arch, shape=shape_name, kind=shape.kind,
+                compression=compression, remat=remat,
+                mesh=f"{'x'.join(str(d) for d in mesh.devices.shape)}",
+                n_devices=int(mesh.devices.size),
+                params=tree_param_count(params_sds),
+                params_active=active_param_count(params_sds, cfg))
+
+    if shape.kind == "train":
+        optim = AdamW(lr=1e-4, weight_decay=0.01)
+        opt_sds = jax.eval_shape(optim.init, params_sds)
+        o_shard = sh.param_shardings(opt_sds, mesh, rules)
+        opt_in = jax.tree.map(
+            lambda s, sh_: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh_),
+            opt_sds, o_shard)
+        batch_in = input_specs(cfg, shape, mesh, rules)
+        step = make_train_step(model, cfg, optim, remat=remat)
+        fn = jax.jit(step, donate_argnums=(0, 1))
+        return fn, (params_in, opt_in, batch_in), meta
+
+    # serving cells
+    cache_len = shape.seq_len
+    cache_sds = jax.eval_shape(
+        functools.partial(model.init_cache, shape.global_batch, cache_len,
+                          dtype=jnp.bfloat16))
+    c_specs = sh.cache_specs(cache_sds, rules, mesh)
+    cache_in = jax.tree_util.tree_map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), cache_sds, c_specs)
+
+    if shape.kind == "prefill":
+        batch_in = input_specs(cfg, shape, mesh, rules)
+
+        def prefill_fn(params, batch, cache):
+            if cfg.family == "encdec":
+                return model.prefill(params, {"frames": batch["frames"],
+                                              "tokens": batch["tokens"]}, cache)
+            if cfg.family == "vlm":
+                return model.prefill(params, batch["tokens"], cache,
+                                     patches=batch["patches"])
+            return model.prefill(params, batch["tokens"], cache)
+
+        fn = jax.jit(prefill_fn, donate_argnums=(2,))
+        return fn, (params_in, batch_in, cache_in), meta
+
+    # decode
+    tok_spec = sh.batch_specs({"token": np.zeros((shape.global_batch, 1),
+                                                 np.int32)},
+                              rules, shard_batch=shape.global_batch >= 2)
+    token_in = _sds((shape.global_batch, 1), jnp.int32, mesh,
+                    tok_spec["token"])
+
+    def decode_fn(params, token, cache):
+        return model.decode_step(params, token, cache)
+
+    fn = jax.jit(decode_fn, donate_argnums=(2,))
+    return fn, (params_in, token_in, cache_in), meta
+
+
+# ---------------------------------------------------------------------------
+# Analysis
+# ---------------------------------------------------------------------------
+
+def analyze(compiled, meta: Dict, tokens_per_step: int) -> Dict:
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    # Trip-count-aware accounting (XLA's cost_analysis counts while
+    # bodies once; every model here scans over layers).
+    hc = analyze_hlo_text(text)
+    coll_total, coll_kinds = hc.collective_bytes, hc.collective_breakdown
+
+    flops_dev = float(hc.flops)
+    bytes_dev = float(hc.bytes_accessed)
+    n_dev = meta["n_devices"]
+
+    compute_t = flops_dev / PEAK_FLOPS
+    memory_t = bytes_dev / HBM_BW
+    collective_t = coll_total / ICI_BW
+
+    fwd_bwd = 6 if meta["kind"] == "train" else 2
+    model_flops_global = fwd_bwd * meta["params_active"] * tokens_per_step
+    model_flops_dev = model_flops_global / n_dev
+
+    bound = max((("compute", compute_t), ("memory", memory_t),
+                 ("collective", collective_t)), key=lambda kv: kv[1])
+
+    out = dict(meta)
+    out.update(
+        tokens_per_step=tokens_per_step,
+        hlo_flops_per_dev=flops_dev,
+        hlo_bytes_per_dev=bytes_dev,
+        xla_flops_raw=float(cost.get("flops", 0.0)),
+        xla_bytes_raw=float(cost.get("bytes accessed", 0.0)),
+        num_whiles=hc.num_whiles,
+        max_trip_count=hc.max_trip_count,
+        collective_bytes_per_dev=coll_total,
+        collective_breakdown=coll_kinds,
+        compute_term_s=compute_t,
+        memory_term_s=memory_t,
+        collective_term_s=collective_t,
+        bound=bound[0],
+        step_time_bound_s=bound[1],
+        model_flops_per_dev=model_flops_dev,
+        useful_flops_ratio=(model_flops_dev / flops_dev) if flops_dev else 0.0,
+        roofline_fraction=(model_flops_dev / PEAK_FLOPS) / bound[1]
+        if bound[1] > 0 else 0.0,
+        argument_bytes=mem.argument_size_in_bytes,
+        output_bytes=mem.output_size_in_bytes,
+        temp_bytes=mem.temp_size_in_bytes,
+        peak_bytes_per_dev=(mem.argument_size_in_bytes
+                            + mem.temp_size_in_bytes),
+        fits_v5e_16g=bool(mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                          < 16e9),
+    )
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             compression: str = "dense", density: float = 0.55,
+             remat: str = "dots", mesh_spec: Optional[str] = None) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        return dict(arch=arch, shape=shape_name, mesh=mesh_kind,
+                    compression=compression, status="skipped", reason=why)
+    if mesh_spec:
+        mesh = make_mesh_from_spec(mesh_spec)
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    t0 = time.time()
+    fn, args, meta = build_cell(arch, shape_name, mesh,
+                                compression=compression, density=density,
+                                remat=remat)
+    with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") \
+            else mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    res = analyze(compiled, meta, tokens)
+    res.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1))
+    return res
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ("llama2_7b",), default=None)
+    ap.add_argument("--shape", choices=tuple(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="pod")
+    ap.add_argument("--mesh-spec", default=None,
+                    help="override, e.g. 2x4 (reduced-device tests)")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell")
+    ap.add_argument("--compression",
+                    choices=("dense", "pifa", "pifa_folded"),
+                    default="dense")
+    ap.add_argument("--density", type=float, default=0.55)
+    ap.add_argument("--remat", choices=("none", "dots", "full"),
+                    default="dots")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    archs = (args.arch,) if args.arch else ARCH_IDS
+    shapes = (args.shape,) if args.shape else tuple(SHAPES)
+    if not (args.all or args.arch or args.shape):
+        raise SystemExit("pass --all or --arch/--shape")
+    meshes = ("pod", "multipod") if args.mesh == "both" else (args.mesh,)
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    failures = 0
+    for a, s, m in cells:
+        tag = f"{a}.{s}.{m}.{args.compression}"
+        outfile = outdir / f"{tag}.json"
+        if outfile.exists():
+            print(f"[dryrun] {tag}: cached", flush=True)
+            continue
+        print(f"[dryrun] {tag}: running...", flush=True)
+        try:
+            res = run_cell(a, s, m, compression=args.compression,
+                           density=args.density, remat=args.remat,
+                           mesh_spec=args.mesh_spec)
+        except Exception as e:  # a failing cell is a bug in our system
+            failures += 1
+            res = dict(arch=a, shape=s, mesh=m, compression=args.compression,
+                       status="error", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-4000:])
+        outfile.write_text(json.dumps(res, indent=1, default=str))
+        brief = {k: res.get(k) for k in
+                 ("status", "bound", "compute_term_s", "memory_term_s",
+                  "collective_term_s", "roofline_fraction", "compile_s",
+                  "reason", "error")}
+        print(f"[dryrun] {tag}: {brief}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

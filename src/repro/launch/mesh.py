@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run is the only place that forces the
+512-placeholder-device platform, and it does so before any jax import.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_from_spec", "AXIS_DOC"]
+
+AXIS_DOC = {
+    "pod": "across-pod data parallelism (DCN links)",
+    "data": "in-pod batch / FSDP axis (ICI)",
+    "model": "tensor/expert parallel axis (ICI)",
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_spec(spec: str) -> jax.sharding.Mesh:
+    """e.g. "2x4" -> (data=2, model=4); "2x2x2" -> (pod, data, model).
+
+    Used by the reduced-mesh subprocess tests.
+    """
+    dims = tuple(int(x) for x in spec.split("x"))
+    if len(dims) == 2:
+        axes: Tuple[str, ...] = ("data", "model")
+    elif len(dims) == 3:
+        axes = ("pod", "data", "model")
+    else:
+        raise ValueError(f"bad mesh spec {spec}")
+    return jax.make_mesh(dims, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))

@@ -1,0 +1,108 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m repro.launch.roofline --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_b(x) -> str:
+    if x is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(dirpath: str) -> List[Dict]:
+    out = []
+    for f in sorted(pathlib.Path(dirpath).glob("*.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def one_sentence(r: Dict) -> str:
+    b = r.get("bound")
+    if b == "memory":
+        return ("raise arithmetic intensity: larger attention/scan chunks, "
+                "fuse norm chains, bf16-ize fp32 intermediates")
+    if b == "collective":
+        return ("shrink TP traffic: PIFA-rank gathers, 2D sharding, "
+                "overlap collectives with the layer scan")
+    return "already compute-bound: push MXU utilization (tile alignment)"
+
+
+def table(rows: List[Dict], mesh: str, compression: str = "dense") -> str:
+    lines = [
+        "| arch | shape | kind | compute | memory | collective | bound | "
+        "useful/HLO | roofline-frac | fits16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") not in (mesh,) and r.get("mesh") != mesh:
+            continue
+        if r.get("compression", "dense") != compression:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | "
+                         f"skip | - | - | - |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | "
+                         f"{r.get('error','')[:40]} | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{fmt_s(r['compute_term_s'])} | {fmt_s(r['memory_term_s'])} | "
+            f"{fmt_s(r['collective_term_s'])} | **{r['bound']}** | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.4f} | "
+            f"{'y' if r.get('fits_v5e_16g') else 'n'} |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--compression", default="dense")
+    ap.add_argument("--sort", default="arch")
+    args = ap.parse_args(argv)
+    rows = load(args.dir)
+    rows.sort(key=lambda r: (r.get("arch", ""), r.get("shape", "")))
+    print(table(rows, args.mesh, args.compression))
+    ok = [r for r in rows if r.get("status") == "ok"
+          and r.get("mesh") == args.mesh
+          and r.get("compression") == args.compression]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        coll = max(ok, key=lambda r: (r["collective_term_s"] /
+                                      max(r["step_time_bound_s"], 1e-12)))
+        print(f"\nworst roofline fraction: {worst['arch']}.{worst['shape']} "
+              f"({worst['roofline_fraction']:.5f})")
+        print(f"most collective-bound: {coll['arch']}.{coll['shape']} "
+              f"(coll/bound = "
+              f"{coll['collective_term_s']/max(coll['step_time_bound_s'],1e-12):.2f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

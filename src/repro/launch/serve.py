@@ -1,0 +1,120 @@
+"""Batched serving driver: prefill + decode loop, dense or MPIFA-PIFA.
+
+The paper's deployment mode: compress once (MPIFA at --density), then
+serve with PIFA layers.  Reports tokens/s for dense vs compressed on the
+same prompts — the CPU-container analogue of Table 7 (the TPU-roofline
+analogue lives in the dry-run's --compression pifa cells).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tiny --density 0.55
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
+from repro.core.mpifa import MpifaConfig, compress_transformer
+from repro.data.calibration import calibration_batches
+from repro.models.model import build_model
+
+
+def generate(model, params, prompts, max_new: int, cache_len: int,
+             unstacked: bool = False):
+    """Greedy batched generation; returns (tokens, tokens/sec)."""
+    b = prompts.shape[0]
+    cache = model.init_cache(b, cache_len, dtype=jnp.float32)
+    if unstacked:
+        # compressed params arrive in list form; uniform-density MPIFA
+        # blocks re-stack into the scanned KV-cache fast path.
+        restacked = (model.restack_blocks(params)
+                     if hasattr(model, "restack_blocks") else None)
+        if restacked is not None:
+            params = restacked
+        else:
+            # heterogeneous ranks (MPIFA_NS): full-recompute fallback
+            out = [prompts]
+            t0 = time.time()
+            cur = prompts
+            for _ in range(max_new):
+                logits = model.forward_unstacked(params, cur)
+                nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+                cur = jnp.concatenate([cur, nxt], axis=1)
+                out.append(nxt)
+            dt = time.time() - t0
+            return jnp.concatenate(out, axis=1), b * max_new / dt
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    t0 = time.time()
+    logits, cache = prefill(params, prompts, cache)
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    out = [prompts, tok]
+    for _ in range(max_new - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    return jnp.concatenate(out, axis=1), b * max_new / dt
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny",
+                    choices=("tiny",) + ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--density", type=float, default=0.55)
+    ap.add_argument("--calib-samples", type=int, default=8)
+    ap.add_argument("--compression", default="pifa",
+                    choices=("none", "pifa", "lowrank"))
+    ap.add_argument("--params-npz", default=None,
+                    help="trained weights from launch/train.py checkpoints")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.arch == "tiny" or not args.smoke \
+        else get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
+        dtype=jnp.int32)
+    cache_len = args.prompt_len + args.max_new + 1
+
+    toks_d, tps_d = generate(model, params, prompts, args.max_new, cache_len)
+    print(f"[serve] dense: {tps_d:.1f} tokens/s", flush=True)
+
+    if args.compression != "none":
+        if cfg.family not in ("dense", "vlm"):
+            print("[serve] MPIFA calibration driver covers the transformer "
+                  "family; other archs compress via core.mpifa."
+                  "compress_linear_params (see examples/)", flush=True)
+            return 0
+        calib = calibration_batches(cfg.vocab_size, args.calib_samples, 64)
+        mcfg = MpifaConfig(density=args.density,
+                           final_repr="pifa" if args.compression == "pifa"
+                           else "lowrank")
+        t0 = time.time()
+        cparams = compress_transformer(model, params, calib, mcfg)
+        print(f"[serve] compressed in {time.time()-t0:.1f}s "
+              f"(density {args.density})", flush=True)
+        toks_c, tps_c = generate(model, cparams, prompts, args.max_new,
+                                 cache_len, unstacked=True)
+        agree = float(jnp.mean((toks_c == toks_d).astype(jnp.float32)))
+        print(f"[serve] {args.compression}: {tps_c:.1f} tokens/s; "
+              f"token agreement with dense {agree:.3f}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

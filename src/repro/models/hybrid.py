@@ -1,0 +1,211 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+Every ``cfg.attn_every`` mamba layers, a transformer block with **shared
+weights** (one set of attention+MLP params reused at every invocation
+point) refreshes global context — the Zamba2 recipe (arXiv:2411.15242).
+Each invocation keeps its *own* KV cache (same weights, different
+inputs).
+
+Scan layout: mamba layers are reshaped to ``(n_stages, attn_every)`` and
+the forward is a scan over stages (inner scan over the stage's mamba
+layers, then the shared block); leftover layers (num_layers %
+attn_every) run as a tail scan.  HLO stays O(1) in depth.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.mamba2 import init_mamba_block, mamba_block_apply, mamba_dims
+
+Pytree = Any
+
+
+class HybridModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.attn_every > 0
+        self.n_stages = cfg.num_layers // cfg.attn_every
+        self.n_tail = cfg.num_layers % cfg.attn_every
+
+    # ---------------------------------------------------------------- init
+    def init(self, key, dtype=jnp.float32) -> Pytree:
+        cfg = self.cfg
+        ke, km, ks, kh = jax.random.split(key, 4)
+        mkeys = jax.random.split(km, cfg.num_layers)
+        mamba = jax.vmap(lambda k: init_mamba_block(k, cfg, dtype))(mkeys)
+        shared = {
+            "ln1": L.init_rmsnorm(cfg.d_model, dtype),
+            "attn": L.init_attention(ks, cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, cfg.resolved_head_dim,
+                                     bias=cfg.use_bias, dtype=dtype),
+            "ln2": L.init_rmsnorm(cfg.d_model, dtype),
+            "mlp": L.init_mlp(kh, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp,
+                              bias=cfg.use_bias, dtype=dtype),
+        }
+        return {
+            "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+            "mamba": mamba,
+            "shared": shared,
+            "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        }
+
+    def _split_stages(self, mamba: Pytree):
+        ns, ae = self.n_stages, self.cfg.attn_every
+        main = jax.tree.map(lambda x: x[: ns * ae].reshape((ns, ae) + x.shape[1:]),
+                            mamba)
+        tail = jax.tree.map(lambda x: x[ns * ae:], mamba)
+        return main, tail
+
+    def _shared_apply(self, params, h, cache=None, positions=None):
+        cfg = self.cfg
+        sp = params["shared"]
+        a_in = L.apply_norm(sp["ln1"], h, cfg.norm_eps)
+        a_out, nc = L.attention_block(
+            sp["attn"], a_in, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta, cache=cache, positions=positions)
+        h = h + a_out
+        m_in = L.apply_norm(sp["ln2"], h, cfg.norm_eps)
+        return h + L.mlp_block(sp["mlp"], m_in), nc
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params: Pytree, tokens: jax.Array, patches=None,
+                remat: str = "none") -> jax.Array:
+        cfg = self.cfg
+        h = L.embed(params["embed"], tokens)
+        main, tail = self._split_stages(params["mamba"])
+
+        def mamba_body(carry, bp):
+            out, _ = mamba_block_apply(bp, carry, cfg)
+            return out, None
+
+        if remat in ("full", "dots"):
+            mamba_body = jax.checkpoint(mamba_body)
+
+        def stage_body(carry, stage_params):
+            out, _ = jax.lax.scan(mamba_body, carry, stage_params)
+            out, _ = self._shared_apply(params, out)
+            return out, None
+
+        if self.n_stages:
+            h, _ = jax.lax.scan(stage_body, h, main)
+        if self.n_tail:
+            h, _ = jax.lax.scan(mamba_body, h, tail)
+        h = L.apply_norm(params["final_norm"], h, cfg.norm_eps)
+        return L.unembed(params["embed"], h)
+
+    def loss(self, params, tokens, labels, patches=None, remat="none"):
+        logits = self.forward(params, tokens, remat=remat).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16
+                   ) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        d = mamba_dims(cfg)
+        hd = cfg.resolved_head_dim
+        return {
+            "conv": jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1,
+                               d["conv_dim"]), dtype=dtype),
+            "ssm": jnp.zeros((cfg.num_layers, batch, d["nheads"],
+                              d["d_state"], d["headdim"]), dtype=jnp.float32),
+            "k": jnp.zeros((self.n_stages, batch, max_len, cfg.num_kv_heads, hd),
+                           dtype=dtype),
+            "v": jnp.zeros((self.n_stages, batch, max_len, cfg.num_kv_heads, hd),
+                           dtype=dtype),
+            "pos": jnp.zeros((batch,), dtype=jnp.int32),
+        }
+
+    def _step_cached(self, params, tokens, cache):
+        """Shared prefill/decode path over the cache (decode: sq == 1)."""
+        cfg = self.cfg
+        h = L.embed(params["embed"], tokens)
+        ns, ae = self.n_stages, cfg.attn_every
+        main, tail = self._split_stages(params["mamba"])
+        main_conv, tail_conv = (jax.tree.map(lambda x: x[: ns * ae].reshape(
+            (ns, ae) + x.shape[1:]), cache["conv"]),
+            cache["conv"][ns * ae:])
+        main_ssm = cache["ssm"][: ns * ae].reshape((ns, ae) + cache["ssm"].shape[1:])
+        tail_ssm = cache["ssm"][ns * ae:]
+        pos = cache["pos"]
+        sq = tokens.shape[1]
+        decode = sq == 1
+
+        def mamba_step(carry, xs):
+            bp, conv_c, ssm_c = xs
+            if decode:
+                out, nc = mamba_block_apply(bp, carry, cfg,
+                                            cache={"conv": conv_c, "ssm": ssm_c})
+                return out, (nc["conv"], nc["ssm"])
+            # prefill: run chunked scan, recover state via block-with-cache
+            # semantics (conv tail + final ssd state).
+            out, st = _mamba_prefill_block(bp, carry, cfg)
+            return out, st
+
+        def stage_body(carry, xs):
+            h_in = carry
+            stage_p, conv_c, ssm_c, kc, vc = xs
+            h_out, (nconv, nssm) = jax.lax.scan(mamba_step, h_in,
+                                                (stage_p, conv_c, ssm_c))
+            positions = pos[:, None] + jnp.arange(sq)[None, :]
+            h_out, nc = self._shared_apply(
+                params, h_out, cache={"k": kc, "v": vc, "pos": pos},
+                positions=positions)
+            return h_out, (nconv, nssm, nc["k"], nc["v"])
+
+        if ns:
+            h, (mc, ms, ks, vs) = jax.lax.scan(
+                stage_body, h, (main, main_conv, main_ssm, cache["k"], cache["v"]))
+            new_conv = mc.reshape((ns * ae,) + mc.shape[2:])
+            new_ssm = ms.reshape((ns * ae,) + ms.shape[2:])
+        else:
+            ks, vs = cache["k"], cache["v"]
+            new_conv = cache["conv"][:0]
+            new_ssm = cache["ssm"][:0]
+        if self.n_tail:
+            h, (tc, ts) = jax.lax.scan(mamba_step, h, (tail, tail_conv, tail_ssm))
+            new_conv = jnp.concatenate([new_conv, tc], axis=0)
+            new_ssm = jnp.concatenate([new_ssm, ts], axis=0)
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": new_ssm, "k": ks, "v": vs, "pos": pos + sq}
+        h = L.apply_norm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+        return L.unembed(params["embed"], h), new_cache
+
+    def prefill(self, params, tokens, cache, patches=None):
+        return self._step_cached(params, tokens, cache)
+
+    def decode_step(self, params, token, cache):
+        return self._step_cached(params, token, cache)
+
+
+def _mamba_prefill_block(bp, u, cfg):
+    """Mamba block over a full sequence, returning decode-ready state."""
+    from repro.models.linear import apply_linear
+    from repro.models.mamba2 import _causal_conv, _split_proj, _ssd_chunk_scan
+
+    d = mamba_dims(cfg)
+    h_in = L.apply_norm(bp["ln"], u, cfg.norm_eps)
+    zxbcdt = apply_linear(bp["in_proj"], h_in)
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc_conv = jax.nn.silu(_causal_conv(
+        xbc, bp["conv_w"].astype(xbc.dtype), bp["conv_b"].astype(xbc.dtype)))
+    x, b_mat, c_mat = jnp.split(
+        xbc_conv, [d["d_inner"], d["d_inner"] + d["d_state"]], axis=-1)
+    bsz, s, _ = x.shape
+    x4 = x.reshape(bsz, s, d["nheads"], d["headdim"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + bp["dt_bias"])
+    a = -jnp.exp(bp["a_log"])
+    y, h_fin = _ssd_chunk_scan(x4, b_mat, c_mat, dt, dt * a, cfg.ssm_chunk)
+    y = y + bp["d_skip"][None, None, :, None] * x4.astype(jnp.float32)
+    y = y.reshape(bsz, s, d["d_inner"]).astype(u.dtype)
+    y = L.rmsnorm(bp["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = u + apply_linear(bp["out_proj"], y)
+    conv_state = xbc[:, -(cfg.ssm_conv - 1):, :]
+    return out, (conv_state, h_fin)

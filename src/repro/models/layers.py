@@ -1,0 +1,560 @@
+"""Shared building blocks for the model zoo.
+
+Everything is functional: ``init_*`` builds a params pytree (dicts of
+arrays / linear-params dicts), ``apply``-style functions consume them.
+Every weight matrix flows through :mod:`repro.models.linear`, so any
+module can transparently run dense / low-rank / PIFA representations --
+that is how the paper's technique stays first-class across all ten
+assigned architectures.
+
+Shape conventions:
+  activations  (batch, seq, d_model)
+  q/k/v        (batch, seq, heads, head_dim)
+  kv cache     (batch, max_len, kv_heads, head_dim)
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.linear import apply_linear, dense_linear
+from repro.parallel.sharding import constrain
+
+Pytree = Any
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Pytree:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: Pytree, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Pytree:
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(p: Pytree, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+def apply_norm(p: Pytree, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return layernorm(p, x, eps) if "bias" in p else rmsnorm(p, x, eps)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (b, s, h, d); positions: (b, s) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (b, s, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA + optional sliding window + KV cache)
+# --------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, *, bias: bool = False, dtype=jnp.float32
+                   ) -> Pytree:
+    ks = jax.random.split(key, 4)
+    return {
+        "q": dense_linear(ks[0], d_model, num_heads * head_dim, dtype=dtype, bias=bias),
+        "k": dense_linear(ks[1], d_model, num_kv_heads * head_dim, dtype=dtype, bias=bias),
+        "v": dense_linear(ks[2], d_model, num_kv_heads * head_dim, dtype=dtype, bias=bias),
+        "o": dense_linear(ks[3], num_heads * head_dim, d_model, dtype=dtype, bias=bias),
+    }
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (b, sq, h, d), k: (b, sk, hkv, d) -> (b, hkv, g, sq, sk).
+
+    Keeps K/V un-repeated (GQA): g = h // hkv query heads share each kv
+    head.  Falls back to tiling when h % hkv != 0 (never the case for
+    the assigned archs).
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k)
+
+
+def _grouped_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs: (b, hkv, g, sq, sk), v: (b, sk, hkv, d) -> (b, sq, h, d)."""
+    b, hkv, g, sq, _ = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, hkv * g, v.shape[-1])
+
+
+# Chunk sizes for the blockwise (flash-style) path.  Direct attention
+# materializes (b, h, sq, sk) scores — at 32k context that is terabytes;
+# any real TPU deployment runs blockwise with an online softmax.  These
+# are module-level knobs so the perf hillclimb can sweep them.
+ATTN_Q_CHUNK = int(os.environ.get("REPRO_ATTN_Q_CHUNK", "1024"))
+ATTN_KV_CHUNK = int(os.environ.get("REPRO_ATTN_KV_CHUNK", "1024"))
+ATTN_DIRECT_LIMIT = 2048 * 2048  # direct path when sq*sk is at most this
+
+# ---- perf-hillclimb flags (EXPERIMENTS.md §Perf) --------------------------
+# Shard the MoE dispatch buffer's *capacity* dim over the data axis too.
+# Baseline shards experts only (model axis), which replicates every
+# expert's GEMMs across the 16-wide data axis — found via the roofline
+# dry-run (grok/arctic useful-FLOPs ratio ~0.05).
+MOE_SHARD_CAPACITY = os.environ.get("REPRO_MOE_SHARD_CAPACITY", "1") == "1"
+# Decode-time sliding-window cache slicing: local-attention layers read
+# only the last `window` cache entries instead of the full 524k buffer.
+ATTN_WINDOW_SLICE = os.environ.get("REPRO_ATTN_WINDOW_SLICE", "1") == "1"
+
+
+def _chunk_mask(qpos, kpos, kvalid, causal, window):
+    """(b, cq, ck) bool mask from absolute positions."""
+    delta = qpos[:, :, None] - kpos[:, None, :]
+    mask = jnp.broadcast_to(kvalid[:, None, :], delta.shape)
+    if causal:
+        mask = mask & (delta >= 0)
+    if window is not None:
+        w = jnp.asarray(window)
+        mask = mask & jnp.where(w > 0, delta < w, True)
+    return mask
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[jax.Array] = None,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    kv_len: Optional[jax.Array] = None,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """Grouped-query attention core.
+
+    window: 0 / None = full; >0 = sliding window (gemma3 local layers).
+    kv_len: valid cache length for decode (mask out unwritten slots).
+
+    Dispatches to a direct path for small score matrices and to a
+    blockwise online-softmax (flash-style) double-scan otherwise, so
+    activation memory is O(sq * chunk) instead of O(sq * sk).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(sq)[None, :], (b, sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(sk)[None, :], (b, sk))
+    kvalid = (jnp.arange(sk)[None, :] < (jnp.reshape(kv_len, (-1, 1))
+                                         if kv_len is not None else sk))
+    kvalid = jnp.broadcast_to(kvalid, (b, sk))
+
+    if sq * sk <= ATTN_DIRECT_LIMIT:
+        mask = _chunk_mask(q_positions, kv_positions, kvalid, causal, window)
+        scores = _grouped_scores(q, k).astype(jnp.float32) * scale
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        # renormalize fully-masked rows to zero output (decode warmup)
+        probs = jnp.where(mask[:, None, None, :, :], probs, 0.0)
+        return _grouped_out(probs.astype(q.dtype), v)
+
+    return _mha_blockwise(q, k, v, q_positions, kv_positions, kvalid,
+                          causal, window, scale)
+
+
+def _mha_blockwise(q, k, v, qpos, kpos, kvalid, causal, window, scale):
+    """Flash-style attention: outer scan over q chunks, inner scan over
+    kv chunks, carrying (running max, denominator, weighted acc)."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    cq = min(ATTN_Q_CHUNK, sq)
+    ck = min(ATTN_KV_CHUNK, sk)
+    pad_q = (-sq) % cq
+    pad_k = (-sk) % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pad_q)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad_k)))
+        kvalid = jnp.pad(kvalid, ((0, 0), (0, pad_k)))  # False padding
+    nq, nk = q.shape[1] // cq, k.shape[1] // ck
+
+    qc = jnp.moveaxis(q.reshape(b, nq, cq, hkv, g, d), 1, 0)
+    qpc = jnp.moveaxis(qpos.reshape(b, nq, cq), 1, 0)
+    kc = jnp.moveaxis(k.reshape(b, nk, ck, hkv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, ck, hkv, d), 1, 0)
+    kpc = jnp.moveaxis(kpos.reshape(b, nk, ck), 1, 0)
+    kvc = jnp.moveaxis(kvalid.reshape(b, nk, ck), 1, 0)
+    # pin layouts: GSPMD tends to drop batch sharding through the
+    # reshape+moveaxis into the double scan (see parallel/sharding.py)
+    qc = constrain(qc, None, "batch", None, "model", None, None)
+    kc = constrain(kc, None, "batch", None, "model", None)
+    vc = constrain(vc, None, "batch", None, "model", None)
+
+    def q_body(_, qx):
+        q_i, qp_i = qx  # (b, cq, hkv, g, d), (b, cq)
+
+        def kv_body(carry, kx):
+            m, l, acc = carry
+            k_j, v_j, kp_j, kv_j = kx
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_i, k_j
+                           ).astype(jnp.float32) * scale       # (b,hkv,g,cq,ck)
+            s = constrain(s, "batch", "model", None, None, None)
+            mask = _chunk_mask(qp_i, kp_j, kv_j, causal, window)
+            mask = mask[:, None, None, :, :]
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # exp of -inf rows stays 0; guard m_new == -inf (all masked)
+            safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(mask, jnp.exp(s - safe_m[..., None]), 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q_i.dtype), v_j)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, d), q_i.dtype)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                      (kc, vc, kpc, kvc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return None, out
+
+    _, outs = jax.lax.scan(q_body, None, (qc, qpc))   # (nq, b, hkv, g, cq, d)
+    out = jnp.moveaxis(outs, 0, 1)                    # (b, nq, hkv, g, cq, d)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, nq * cq, h, d)
+    if pad_q:
+        out = out[:, :sq]
+    return out.astype(q.dtype)
+
+
+def attention_block(
+    p: Pytree,
+    x: jax.Array,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 10000.0,
+    causal: bool = True,
+    window: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    use_rope: bool = True,
+    window_slice: Optional[int] = None,
+    tap=None,
+    tap_prefix: str = "",
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Self- or cross-attention with optional KV cache.
+
+    cache: {"k": (b, L, hkv, d), "v": ..., "pos": (b,) int32} -- decode
+    appends at ``pos`` and attends over the first ``pos+sq`` slots.
+    cross_kv: precomputed (k, v) from the encoder (whisper decoder).
+    """
+    b, sq, _ = x.shape
+    if tap is not None:
+        tap(tap_prefix + "q", x)
+        if cross_kv is None:
+            tap(tap_prefix + "k", x)
+            tap(tap_prefix + "v", x)
+    q = constrain(apply_linear(p["q"], x).reshape(b, sq, num_heads, head_dim),
+                  "batch", None, "model", None)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(sq)[None, :], (b, sq))
+        out = mha(q, k, v, causal=False, q_positions=positions)
+        new_cache = cache
+    else:
+        k = constrain(apply_linear(p["k"], x).reshape(b, sq, num_kv_heads,
+                                                      head_dim),
+                      "batch", None, "model", None)
+        v = constrain(apply_linear(p["v"], x).reshape(b, sq, num_kv_heads,
+                                                      head_dim),
+                      "batch", None, "model", None)
+        if positions is None:
+            if cache is not None:
+                positions = cache["pos"][:, None] + jnp.arange(sq)[None, :]
+            else:
+                positions = jnp.broadcast_to(jnp.arange(sq)[None, :], (b, sq))
+        if use_rope:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+        if cache is not None:
+            # write new k/v at pos .. pos+sq (uniform pos across batch per
+            # decode convention; per-seq pos handled via dynamic slice)
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache["pos"][0], axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache["pos"][0], axis=1)
+            new_cache = {"k": kc, "v": vc, "pos": cache["pos"] + sq}
+            if (ATTN_WINDOW_SLICE and window_slice and sq == 1
+                    and kc.shape[1] > window_slice):
+                # sliding-window decode: touch only the trailing `window`
+                # cache entries (hillclimb: gemma3 long_500k read the
+                # full 524k buffer for its 1024-window local layers)
+                start = jnp.clip(cache["pos"][0] + sq - window_slice, 0,
+                                 kc.shape[1] - window_slice)
+                kw = jax.lax.dynamic_slice_in_dim(kc, start, window_slice, 1)
+                vw = jax.lax.dynamic_slice_in_dim(vc, start, window_slice, 1)
+                kv_positions = jnp.broadcast_to(
+                    (start + jnp.arange(window_slice))[None, :],
+                    (b, window_slice))
+                out = mha(q, kw.astype(q.dtype), vw.astype(q.dtype),
+                          causal=True, window=window, q_positions=positions,
+                          kv_positions=kv_positions, kv_len=new_cache["pos"])
+            else:
+                kv_positions = jnp.broadcast_to(
+                    jnp.arange(kc.shape[1])[None, :], (b, kc.shape[1]))
+                out = mha(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                          causal=True, window=window, q_positions=positions,
+                          kv_positions=kv_positions, kv_len=new_cache["pos"])
+        else:
+            new_cache = None
+            out = mha(q, k, v, causal=causal, window=window,
+                      q_positions=positions, kv_positions=positions)
+
+    out = out.reshape(b, sq, num_heads * head_dim)
+    if tap is not None:
+        tap(tap_prefix + "o", out)
+    return apply_linear(p["o"], out), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP (gated / plain)
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, *, gated: bool = True,
+             bias: bool = False, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": dense_linear(ks[0], d_model, d_ff, dtype=dtype, bias=bias),
+        "down": dense_linear(ks[1], d_ff, d_model, dtype=dtype, bias=bias),
+    }
+    if gated:
+        p["gate"] = dense_linear(ks[2], d_model, d_ff, dtype=dtype, bias=bias)
+    return p
+
+
+def mlp_block(p: Pytree, x: jax.Array, *, act=jax.nn.silu, tap=None,
+              tap_prefix: str = "") -> jax.Array:
+    if tap is not None:
+        tap(tap_prefix + "up", x)
+        if "gate" in p:
+            tap(tap_prefix + "gate", x)
+    up = apply_linear(p["up"], x)
+    if "gate" in p:
+        # Folding contract (core/folding.py): when `up` is pifa_folded the
+        # gate emits its outputs *in up's cat order*, so the elementwise
+        # product is consistent and `down` consumes cat order directly.
+        h = act(apply_linear(p["gate"], x)) * up
+    else:
+        h = act(up)
+    if tap is not None:
+        tap(tap_prefix + "down", h)
+    return apply_linear(p["down"], h)
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (sort + capacity; experts shard on the `model` axis)
+# --------------------------------------------------------------------------
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int, *,
+             gated: bool = True, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d_model)
+    p = {
+        "router": dense_linear(ks[0], d_model, num_experts, dtype=jnp.float32),
+        "up": {"w": (jax.random.normal(ks[1], (num_experts, d_ff, d_model)) * scale).astype(dtype)},
+        "down": {"w": (jax.random.normal(ks[2], (num_experts, d_model, d_ff)) * (1.0 / math.sqrt(d_ff))).astype(dtype)},
+    }
+    if gated:
+        p["gate"] = {"w": (jax.random.normal(ks[3], (num_experts, d_ff, d_model)) * scale).astype(dtype)}
+    return p
+
+
+def apply_expert_linear(p: Pytree, x: jax.Array) -> jax.Array:
+    """Batched per-expert linear. x: (E, C, in) -> (E, C, out).
+
+    Same representation dispatch as `apply_linear`, but with a leading
+    expert dim on every factor (PIFA-per-expert).
+    """
+    dt = x.dtype
+    if "w" in p:
+        return jnp.einsum("eci,eoi->eco", x, p["w"].astype(dt))
+    if "u" in p:
+        t = jnp.einsum("eci,eri->ecr", x, p["vt"].astype(dt))
+        return jnp.einsum("ecr,eor->eco", t, p["u"].astype(dt))
+    yp = jnp.einsum("eci,eri->ecr", x, p["wp"].astype(dt))
+    ynp = jnp.einsum("ecr,eor->eco", yp, p["c"].astype(dt))
+    ycat = jnp.concatenate([yp, ynp], axis=-1)
+    if "inv_perm" in p:
+        ycat = jnp.take_along_axis(ycat, p["inv_perm"][:, None, :], axis=-1)
+    return ycat
+
+
+def _dp_group_count() -> int:
+    """Size of the active data-parallel axes (pod*data), 1 when unmeshed.
+
+    Used by the grouped MoE dispatch: scatters/gathers stay local to a
+    data shard; only the (E, C, d) slabs cross the mesh (the EP
+    all-to-all pattern).  See EXPERIMENTS.md §Perf iteration A2.
+    """
+    names, sizes = (), {}
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = tuple(getattr(mesh, "axis_names", ()) or ())
+        if names:
+            sizes = dict(zip(names, mesh.axis_sizes))
+    except Exception:
+        pass
+    if not names:
+        try:
+            from jax._src import mesh as _mesh_lib
+            pm = _mesh_lib.thread_resources.env.physical_mesh
+            if pm is not None and not pm.empty:
+                names = tuple(pm.axis_names)
+                sizes = dict(zip(names, pm.devices.shape))
+        except Exception:
+            return 1
+    g = 1
+    for a in ("pod", "data"):
+        g *= sizes.get(a, 1)
+    return g
+
+
+def moe_block(
+    p: Pytree,
+    x: jax.Array,
+    *,
+    num_experts: int,
+    top_k: int = 2,
+    capacity_factor: float = 1.25,
+    act=jax.nn.silu,
+) -> jax.Array:
+    """Top-k token-choice MoE with per-expert capacity (dropped overflow).
+
+    Sort-based dispatch, *grouped by data shard*: tokens are split into
+    G = |pod|x|data| groups matching their sharding, each group sorts and
+    scatters locally into its (E, C_g, d) slab — so the dispatch buffer
+    is sharded (E -> model, group -> data) and the only cross-device
+    traffic is the slab exchange (EP all-to-all), not a scatter
+    all-reduce.  x: (..., d) -> same shape.
+    """
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    groups = _dp_group_count() if MOE_SHARD_CAPACITY else 1
+    if t % groups != 0:
+        groups = 1
+    tg = t // groups
+    xg = xt.reshape(groups, tg, d)
+
+    router_logits = apply_linear(p["router"], xg.astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)          # (G, Tg, E)
+    top_p, top_i = jax.lax.top_k(probs, top_k)              # (G, Tg, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    a = tg * top_k
+    flat_expert = top_i.reshape(groups, a)
+    flat_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg), top_k)[None], (groups, a))
+    flat_w = top_p.reshape(groups, a)
+
+    order = jnp.argsort(flat_expert, axis=1)
+    s_expert = jnp.take_along_axis(flat_expert, order, axis=1)
+    s_token = jnp.take_along_axis(flat_token, order, axis=1)
+    s_w = jnp.take_along_axis(flat_w, order, axis=1)
+
+    # floor of 4 slots: grouped dispatch at decode batch sizes would
+    # otherwise leave capacity=1 and drop heavily under routing variance
+    capacity = max(1, min(4, tg * top_k),
+                   int(math.ceil(tg * top_k / num_experts
+                                 * capacity_factor)))
+    csum = jnp.broadcast_to(jnp.arange(a)[None], (groups, a))
+    seg_start = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(num_experts)))(s_expert)
+    pos_in_grp = csum - jnp.take_along_axis(seg_start, s_expert, axis=1)
+    keep = pos_in_grp < capacity
+    slot = jnp.where(keep, s_expert * capacity + pos_in_grp,
+                     num_experts * capacity)
+
+    buf = jnp.zeros((groups, num_experts * capacity + 1, d), dtype=x.dtype)
+    buf = jax.vmap(lambda b, s, xv, st: b.at[s].set(xv[st])
+                   )(buf, slot, xg, s_token)
+    h = buf[:, : num_experts * capacity].reshape(
+        groups, num_experts, capacity, d)
+    # EP x DP layout: experts on model, groups on the data axes
+    h = constrain(h, "batch", "model", None, None)
+
+    def expert_ffn(hc):
+        up = apply_expert_linear(p["up"], hc)
+        if "gate" in p:
+            hh = act(apply_expert_linear(p["gate"], hc)) * up
+        else:
+            hh = act(up)
+        return apply_expert_linear(p["down"], hh)
+
+    out = jax.vmap(expert_ffn)(h)                       # (G, E, C, d)
+    out = constrain(out, "batch", "model", None, None)
+
+    out_flat = out.reshape(groups, num_experts * capacity, d)
+    g_idx = jnp.clip(slot, 0, num_experts * capacity - 1)
+    gathered = jax.vmap(lambda of, gi: of[gi])(out_flat, g_idx)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    y = jnp.zeros((groups, tg, d), dtype=x.dtype)
+    y = jax.vmap(lambda yz, st, gv, sw: yz.at[st].add(
+        gv * sw[:, None].astype(yz.dtype)))(y, s_token, gathered, s_w)
+    return y.reshape(orig_shape)
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32) -> Pytree:
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed(p: Pytree, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: Pytree, h: jax.Array) -> jax.Array:
+    return h @ p["table"].T.astype(h.dtype)

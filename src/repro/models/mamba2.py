@@ -1,0 +1,313 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked-scan formulation.
+
+Recurrence (per head h, state n, channel p):
+
+    H_t = exp(dt_t * A_h) * H_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t . H_t + D_h * x_t
+
+Training/prefill uses the SSD *chunked* algorithm: within a chunk of
+length Q the quadratic (attention-like) form is used; across chunks a
+``lax.scan`` carries the (b, h, n, p) state.  Chunk size is
+``cfg.ssm_chunk`` (128 for the full config) — the working set per chunk
+is MXU-friendly and the scan keeps HLO size O(1) in sequence length.
+
+Decode carries {conv state (K-1 taps), ssm state}; per-token cost is
+O(d_inner * d_state) regardless of context length — this is why the ssm
+family *runs* the ``long_500k`` cell (DESIGN.md §4).
+
+All projections route through `models/linear.py` and are PIFA-compressible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.linear import apply_linear, dense_linear
+
+Pytree = Any
+
+
+def mamba_dims(cfg: ModelConfig) -> Dict[str, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return dict(
+        d_inner=d_inner, nheads=nheads, conv_dim=conv_dim,
+        d_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+        d_in_proj=2 * d_inner + 2 * cfg.ssm_state + nheads,
+    )
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype=jnp.float32) -> Pytree:
+    d = mamba_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": L.init_rmsnorm(cfg.d_model, dtype),
+        "in_proj": dense_linear(ks[0], cfg.d_model, d["d_in_proj"], dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (d["conv_dim"], cfg.ssm_conv))
+                   * (1.0 / math.sqrt(cfg.ssm_conv))).astype(dtype),
+        "conv_b": jnp.zeros((d["conv_dim"],), dtype=dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, d["nheads"])).astype(jnp.float32),
+        "d_skip": jnp.ones((d["nheads"],), dtype=jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d["nheads"],), 1e-2))).astype(jnp.float32),
+        "gate_norm": L.init_rmsnorm(d["d_inner"], dtype),
+        "out_proj": dense_linear(ks[2], d["d_inner"], cfg.d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: (b, s, c), w: (c, k)."""
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # window sum: sum_j w[:, j] * x[t - (k-1) + j]
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + xp[:, j:j + x.shape[1], :] * w[:, j][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssd_chunk_scan(x, b_mat, c_mat, dt, da, chunk: int,
+                    h0: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. x: (b,s,h,p); b_mat/c_mat: (b,s,n); dt/da: (b,s,h).
+
+    Returns (y: (b,s,h,p), final_state: (b,h,n,p)).  fp32 internally.
+    """
+    bsz, s, nh, hp = x.shape
+    n = b_mat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    def resh(t, extra):
+        return t.reshape((bsz, nc, chunk) + extra).swapaxes(0, 1)
+
+    xc = resh(x, (nh, hp))
+    bc = resh(b_mat, (n,))
+    cc = resh(c_mat, (n,))
+    dtc = resh(dt, (nh,))
+    dac = resh(da, (nh,))
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, n, hp), dtype=jnp.float32)
+
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]
+
+    def body(h, inp):
+        x_c, b_c, c_c, dt_c, da_c = inp
+        ca = jnp.cumsum(da_c, axis=1)                           # (b,Q,h)
+        # intra-chunk (quadratic) term
+        cb = jnp.einsum("bin,bjn->bij", c_c, b_c)               # (b,Q,Q)
+        lmat = jnp.exp(ca[:, :, None, :] - ca[:, None, :, :])   # (b,i,j,h)
+        scores = cb[..., None] * jnp.where(tri[None, :, :, None], lmat, 0.0)
+        scores = scores * dt_c[:, None, :, :]
+        y = jnp.einsum("bijh,bjhp->bihp", scores, x_c)
+        # inter-chunk: carry-in state
+        y = y + jnp.einsum("bin,bhnp->bihp", c_c, h) * jnp.exp(ca)[..., None]
+        # state update
+        decay_end = jnp.exp(ca[:, -1:, :] - ca) * dt_c          # (b,Q,h)
+        s_c = jnp.einsum("bjh,bjn,bjhp->bhnp", decay_end, b_c, x_c)
+        h_new = jnp.exp(ca[:, -1, :])[:, :, None, None] * h + s_c
+        return h_new, y
+
+    h_fin, yc = jax.lax.scan(body, h0, (xc.astype(jnp.float32),
+                                        bc.astype(jnp.float32),
+                                        cc.astype(jnp.float32),
+                                        dtc.astype(jnp.float32),
+                                        dac.astype(jnp.float32)))
+    y = yc.swapaxes(0, 1).reshape(bsz, nc * chunk, nh, hp)
+    if pad:
+        y = y[:, :s]
+    return y, h_fin
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    d = mamba_dims(cfg)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d["d_inner"], d["d_inner"] + d["conv_dim"]], axis=-1)
+    return z, xbc, dt
+
+
+def mamba_block_apply(
+    p: Pytree,
+    u: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    tap=None,
+    tap_prefix: str = "",
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """One pre-norm Mamba2 block: u -> u + mamba(norm(u)).
+
+    cache (decode): {"conv": (b, K-1, conv_dim), "ssm": (b, h, n, p)}.
+    """
+    d = mamba_dims(cfg)
+    h_in = L.apply_norm(p["ln"], u, cfg.norm_eps)
+    if tap is not None:
+        tap(tap_prefix + "in_proj", h_in)
+    zxbcdt = apply_linear(p["in_proj"], h_in)
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+
+    new_cache = None
+    if cache is None:
+        xbc = _causal_conv(xbc, p["conv_w"].astype(xbc.dtype),
+                           p["conv_b"].astype(xbc.dtype))
+    else:
+        # roll the conv window: state holds the previous K-1 inputs
+        window = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+        k = cfg.ssm_conv
+        xbc = (jnp.einsum("bkc,ck->bc", window[:, -k:, :],
+                          p["conv_w"].astype(xbc.dtype))
+               + p["conv_b"].astype(xbc.dtype))[:, None, :]
+        new_conv = window[:, -(k - 1):, :]
+    xbc = jax.nn.silu(xbc)
+
+    x, b_mat, c_mat = jnp.split(
+        xbc, [d["d_inner"], d["d_inner"] + d["d_state"]], axis=-1)
+    bsz, s, _ = x.shape
+    x = x.reshape(bsz, s, d["nheads"], d["headdim"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])          # (b,s,h)
+    a = -jnp.exp(p["a_log"])                                     # (h,)
+    da = dt * a[None, None, :]
+
+    if cache is None:
+        y, _ = _ssd_chunk_scan(x, b_mat, c_mat, dt, da, cfg.ssm_chunk)
+    else:
+        # single-token recurrence
+        hst = cache["ssm"].astype(jnp.float32)                   # (b,h,n,p)
+        xt = x[:, 0].astype(jnp.float32)                         # (b,h,p)
+        bt = b_mat[:, 0].astype(jnp.float32)                     # (b,n)
+        ct = c_mat[:, 0].astype(jnp.float32)
+        dtt = dt[:, 0]                                           # (b,h)
+        hst = (jnp.exp(da[:, 0])[:, :, None, None] * hst
+               + jnp.einsum("bh,bn,bhp->bhnp", dtt, bt, xt))
+        y = jnp.einsum("bn,bhnp->bhp", ct, hst)[:, None]         # (b,1,h,p)
+        new_cache = {"conv": new_conv, "ssm": hst}
+
+    y = y + p["d_skip"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(bsz, s, d["d_inner"]).astype(u.dtype)
+    y = L.rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    if tap is not None:
+        tap(tap_prefix + "out_proj", y)
+    return u + apply_linear(p["out_proj"], y), new_cache
+
+
+class Mamba2Model:
+    """Attention-free LM: embed -> N mamba blocks -> norm -> unembed."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key, dtype=jnp.float32) -> Pytree:
+        cfg = self.cfg
+        ke, kb = jax.random.split(key)
+        bkeys = jax.random.split(kb, cfg.num_layers)
+        blocks = jax.vmap(lambda k: init_mamba_block(k, cfg, dtype))(bkeys)
+        return {
+            "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+            "blocks": blocks,
+            "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        }
+
+    def forward(self, params: Pytree, tokens: jax.Array,
+                patches=None, remat: str = "none") -> jax.Array:
+        h = L.embed(params["embed"], tokens)
+
+        def body(carry, bp):
+            out, _ = mamba_block_apply(bp, carry, self.cfg)
+            return out, None
+
+        if remat == "full":
+            body = jax.checkpoint(body)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        h, _ = jax.lax.scan(body, h, params["blocks"])
+        h = L.apply_norm(params["final_norm"], h, self.cfg.norm_eps)
+        return L.unembed(params["embed"], h)
+
+    def loss(self, params, tokens, labels, patches=None, remat="none"):
+        logits = self.forward(params, tokens, remat=remat).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16
+                   ) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        d = mamba_dims(cfg)
+        lyr = cfg.num_layers
+        return {
+            "conv": jnp.zeros((lyr, batch, cfg.ssm_conv - 1, d["conv_dim"]), dtype=dtype),
+            "ssm": jnp.zeros((lyr, batch, d["nheads"], d["d_state"], d["headdim"]),
+                             dtype=jnp.float32),
+            "pos": jnp.zeros((batch,), dtype=jnp.int32),
+        }
+
+    def prefill(self, params, tokens, cache, patches=None):
+        """Run the chunked scan then *materialize* the decode state.
+
+        Prefill state extraction reuses the chunk scan's final state.
+        """
+        h = L.embed(params["embed"], tokens)
+        convs, ssms = [], []
+
+        def body(carry, bp):
+            u = carry
+            d = mamba_dims(self.cfg)
+            h_in = L.apply_norm(bp["ln"], u, self.cfg.norm_eps)
+            zxbcdt = apply_linear(bp["in_proj"], h_in)
+            z, xbc, dt_raw = _split_proj(zxbcdt, self.cfg)
+            xbc_conv = jax.nn.silu(_causal_conv(
+                xbc, bp["conv_w"].astype(xbc.dtype), bp["conv_b"].astype(xbc.dtype)))
+            x, b_mat, c_mat = jnp.split(
+                xbc_conv, [d["d_inner"], d["d_inner"] + d["d_state"]], axis=-1)
+            bsz, s, _ = x.shape
+            x4 = x.reshape(bsz, s, d["nheads"], d["headdim"])
+            dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + bp["dt_bias"])
+            a = -jnp.exp(bp["a_log"])
+            y, h_fin = _ssd_chunk_scan(x4, b_mat, c_mat, dt, dt * a,
+                                       self.cfg.ssm_chunk)
+            y = y + bp["d_skip"][None, None, :, None] * x4.astype(jnp.float32)
+            y = y.reshape(bsz, s, d["d_inner"]).astype(u.dtype)
+            y = L.rmsnorm(bp["gate_norm"], y * jax.nn.silu(z), self.cfg.norm_eps)
+            out = u + apply_linear(bp["out_proj"], y)
+            conv_state = xbc[:, -(self.cfg.ssm_conv - 1):, :]
+            return out, (conv_state, h_fin)
+
+        h, (convs, ssms) = jax.lax.scan(body, h, params["blocks"])
+        new_cache = {"conv": convs.astype(cache["conv"].dtype),
+                     "ssm": ssms,
+                     "pos": cache["pos"] + tokens.shape[1]}
+        h = L.apply_norm(params["final_norm"], h[:, -1:], self.cfg.norm_eps)
+        return L.unembed(params["embed"], h), new_cache
+
+    def decode_step(self, params, token, cache):
+        h = L.embed(params["embed"], token)
+
+        def body(carry, xs):
+            bp, conv_c, ssm_c = xs
+            out, nc = mamba_block_apply(
+                bp, carry, self.cfg,
+                cache={"conv": conv_c, "ssm": ssm_c})
+            return out, (nc["conv"], nc["ssm"])
+
+        h, (convs, ssms) = jax.lax.scan(
+            body, h, (params["blocks"], cache["conv"], cache["ssm"]))
+        new_cache = {"conv": convs.astype(cache["conv"].dtype), "ssm": ssms,
+                     "pos": cache["pos"] + 1}
+        h = L.apply_norm(params["final_norm"], h, self.cfg.norm_eps)
+        return L.unembed(params["embed"], h), new_cache

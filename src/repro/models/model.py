@@ -1,0 +1,138 @@
+"""Unified model API: build any assigned architecture, get its step fns.
+
+``build_model(cfg)`` returns a model object with the common surface:
+
+  init(key, dtype) -> params
+  loss(params, inputs, labels[, remat]) -> scalar
+  init_cache(batch, max_len, dtype) -> cache
+  prefill(params, inputs, cache) -> (logits, cache)
+  decode_step(params, token, cache) -> (logits, cache)
+
+``batch`` layouts per family are produced by :func:`example_batch`
+(eager use: tests/examples) and mirrored by ``launch/dryrun.input_specs``
+(ShapeDtypeStruct stand-ins, no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.encdec import EncDecModel
+from repro.models.hybrid import HybridModel
+from repro.models.mamba2 import Mamba2Model
+from repro.models.transformer import Transformer
+
+Pytree = Any
+
+__all__ = ["build_model", "example_batch", "batch_spec", "loss_fn",
+           "make_train_step"]
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return Transformer(cfg)
+    if cfg.family == "ssm":
+        return Mamba2Model(cfg)
+    if cfg.family == "hybrid":
+        return HybridModel(cfg)
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig,
+               act_dtype=jnp.bfloat16) -> Dict[str, Tuple[tuple, Any]]:
+    """(shape, dtype) descriptors for every model input of a step."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "frames": ((b, cfg.encoder_seq, cfg.d_model), act_dtype),
+                "tokens": ((b, s), jnp.int32),
+                "labels": ((b, s), jnp.int32),
+            }
+        if cfg.family == "vlm":
+            p = cfg.num_patches
+            return {
+                "patches": ((b, p, cfg.d_model), act_dtype),
+                "tokens": ((b, s - p), jnp.int32),
+                "labels": ((b, s - p), jnp.int32),
+            }
+        return {"tokens": ((b, s), jnp.int32), "labels": ((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        out = {"tokens": ((b, s), jnp.int32)}
+        if cfg.family == "encdec":
+            out["frames"] = ((b, cfg.encoder_seq, cfg.d_model), act_dtype)
+        if cfg.family == "vlm":
+            out = {"patches": ((b, cfg.num_patches, cfg.d_model), act_dtype),
+                   "tokens": ((b, s - cfg.num_patches), jnp.int32)}
+        return out
+    # decode: one new token against a cache of length s
+    return {"token": ((b, 1), jnp.int32)}
+
+
+def example_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0,
+                  act_dtype=jnp.float32) -> Dict[str, jax.Array]:
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, (shp, dt) in batch_spec(cfg, shape, act_dtype).items():
+        if dt == jnp.int32:
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=shp), dtype=jnp.int32)
+        else:
+            out[name] = jnp.asarray(rng.normal(size=shp) * 0.1, dtype=dt)
+    return out
+
+
+def loss_fn(model, cfg: ModelConfig, params: Pytree,
+            batch: Dict[str, jax.Array], remat: str = "none") -> jax.Array:
+    if cfg.family == "encdec":
+        return model.loss(params, {"frames": batch["frames"],
+                                   "tokens": batch["tokens"]},
+                          batch["labels"], remat=remat)
+    if cfg.family == "vlm":
+        return model.loss(params, batch["tokens"], batch["labels"],
+                          patches=batch["patches"], remat=remat)
+    return model.loss(params, batch["tokens"], batch["labels"], remat=remat)
+
+
+def make_train_step(model, cfg: ModelConfig, optim, remat: str = "none"):
+    """(params, opt_state, batch) -> (loss, params, opt_state).
+
+    ``optim`` follows the minimal optax-like protocol of repro.optim.
+    """
+
+    def step(params, opt_state, batch):
+        # allow_int: PIFA's inv_perm (int32) is a structural leaf; its
+        # float0 gradient is dropped by AdamW (fine-tuning compressed
+        # models trains wp/c only — paper §6: PIFA is differentiable).
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(model, cfg, p, batch, remat=remat),
+            allow_int=True)(params)
+        updates, opt_state = optim.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return loss, params, opt_state
+
+    return step
+
+
+def make_prefill_step(model, cfg: ModelConfig):
+    def step(params, batch, cache):
+        if cfg.family == "encdec":
+            return model.prefill(params, {"frames": batch["frames"],
+                                          "tokens": batch["tokens"]}, cache)
+        if cfg.family == "vlm":
+            return model.prefill(params, batch["tokens"], cache,
+                                 patches=batch["patches"])
+        return model.prefill(params, batch["tokens"], cache)
+    return step
+
+
+def make_decode_step(model, cfg: ModelConfig):
+    def step(params, token, cache):
+        return model.decode_step(params, token, cache)
+    return step

@@ -1,0 +1,477 @@
+"""Decoder-only transformer family: dense, MoE (arctic/grok), VLM (phi-3v).
+
+Layers are *stacked* (every block-param leaf carries a leading
+``num_layers`` dim) and the forward pass is a single ``jax.lax.scan`` --
+this keeps the lowered HLO size O(1) in depth, which is what makes the
+512-device dry-run of 64-layer/314B-class configs compile quickly.
+
+The class also exposes the *unscanned* per-block path used by the MPIFA
+compression driver (``block_apply`` with a ``tap`` capturing every
+linear's input) -- compression is offline and eager, so it does not need
+the scan form.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.linear import apply_linear
+from repro.parallel.sharding import constrain
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearInfo:
+    """A compressible linear inside one block: where + what."""
+
+    path: Tuple[str, ...]   # path within the block params pytree
+    kind: str               # "attn" | "mlp"
+    in_dim: int
+    out_dim: int
+
+
+class Transformer:
+    """Functional decoder-only LM; ``cfg.family`` in {dense, moe, vlm}."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---------------------------------------------------------------- init
+    def init_block(self, key, dtype=jnp.float32) -> Pytree:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        ks = jax.random.split(key, 4)
+        p: Dict[str, Pytree] = {
+            "ln1": L.init_rmsnorm(cfg.d_model, dtype),
+            "attn": L.init_attention(ks[0], cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, hd, bias=cfg.use_bias,
+                                     dtype=dtype),
+            "ln2": L.init_rmsnorm(cfg.d_model, dtype),
+        }
+        if cfg.family == "moe":
+            p["moe"] = L.init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                                  cfg.num_experts, gated=cfg.gated_mlp,
+                                  dtype=dtype)
+            if cfg.moe_dense_ff:
+                p["mlp"] = L.init_mlp(ks[2], cfg.d_model, cfg.moe_dense_ff,
+                                      gated=cfg.gated_mlp, bias=cfg.use_bias,
+                                      dtype=dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[2], cfg.d_model, cfg.d_ff,
+                                  gated=cfg.gated_mlp, bias=cfg.use_bias,
+                                  dtype=dtype)
+        return p
+
+    def init(self, key, dtype=jnp.float32) -> Pytree:
+        cfg = self.cfg
+        ke, kb, kh = jax.random.split(key, 3)
+        block_keys = jax.random.split(kb, cfg.num_layers)
+        blocks = jax.vmap(lambda k: self.init_block(k, dtype))(block_keys)
+        params: Dict[str, Pytree] = {
+            "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+            "blocks": blocks,
+            "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {
+                "w": (jax.random.normal(kh, (cfg.vocab_size, cfg.d_model))
+                      * 0.02).astype(dtype)}
+        if cfg.family == "vlm":
+            # stub CLIP connector: patch embeddings arrive pre-computed in a
+            # frontend dim == d_model; a learned projection adapts them.
+            params["vision_proj"] = {
+                "w": (jax.random.normal(kh, (cfg.d_model, cfg.d_model))
+                      * 0.02).astype(dtype)}
+        return params
+
+    # ------------------------------------------------------------- blocks
+    def block_apply(
+        self,
+        bp: Pytree,
+        h: jax.Array,
+        *,
+        window: Optional[jax.Array] = None,
+        positions: Optional[jax.Array] = None,
+        cache: Optional[Dict[str, jax.Array]] = None,
+        window_slice: Optional[int] = None,
+        tap: Optional[Callable[[str, jax.Array], None]] = None,
+    ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+        cfg = self.cfg
+        a_in = L.apply_norm(bp["ln1"], h, cfg.norm_eps)
+        a_out, new_cache = L.attention_block(
+            bp["attn"], a_in,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            window=window, positions=positions, cache=cache,
+            window_slice=window_slice, tap=tap, tap_prefix="attn/")
+        h = h + a_out
+        m_in = L.apply_norm(bp["ln2"], h, cfg.norm_eps)
+        m_out = jnp.zeros_like(h)
+        if "mlp" in bp:
+            m_out = m_out + L.mlp_block(bp["mlp"], m_in, tap=tap,
+                                        tap_prefix="mlp/")
+        if "moe" in bp:
+            m_out = m_out + L.moe_block(
+                bp["moe"], m_in, num_experts=cfg.num_experts,
+                top_k=cfg.top_k, capacity_factor=cfg.capacity_factor)
+        return h + m_out, new_cache
+
+    def _windows(self) -> jax.Array:
+        cfg = self.cfg
+        return jnp.asarray(
+            [cfg.window_for_layer(i) for i in range(cfg.num_layers)],
+            dtype=jnp.int32)
+
+    # ------------------------------------------------------------ forward
+    def embed_tokens(self, params: Pytree, tokens: jax.Array,
+                     patches: Optional[jax.Array] = None) -> jax.Array:
+        h = L.embed(params["embed"], tokens)
+        if self.cfg.family == "vlm" and patches is not None:
+            pe = apply_linear(params["vision_proj"], patches.astype(h.dtype))
+            h = jnp.concatenate([pe, h], axis=1)
+        return h
+
+    def final_logits(self, params: Pytree, h: jax.Array) -> jax.Array:
+        h = L.apply_norm(params["final_norm"], h, self.cfg.norm_eps)
+        if self.cfg.tie_embeddings:
+            return L.unembed(params["embed"], h)
+        return apply_linear(params["lm_head"], h)
+
+    def forward(self, params: Pytree, tokens: jax.Array,
+                patches: Optional[jax.Array] = None,
+                remat: str = "none") -> jax.Array:
+        """Full teacher-forced forward -> logits (b, s[, +patches], vocab)."""
+        h = self.embed_tokens(params, tokens, patches)
+        windows = self._windows()
+
+        def body(carry, xs):
+            bp, w = xs
+            out, _ = self.block_apply(bp, carry, window=w)
+            return constrain(out, "batch", None, None), None
+
+        if remat == "full":
+            body = jax.checkpoint(body)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        h, _ = jax.lax.scan(body, h, (params["blocks"], windows))
+        return self.final_logits(params, h)
+
+    def loss(self, params: Pytree, tokens: jax.Array, labels: jax.Array,
+             patches: Optional[jax.Array] = None, remat: str = "none"
+             ) -> jax.Array:
+        logits = self.forward(params, tokens, patches, remat=remat)
+        if patches is not None:
+            logits = logits[:, patches.shape[1]:, :]  # loss on text positions
+        logits = logits.astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    # ------------------------------------------------------------ serving
+    def _ring_enabled(self, max_len: int) -> bool:
+        cfg = self.cfg
+        return bool(L.ATTN_WINDOW_SLICE and cfg.sliding_window
+                    and cfg.local_global_ratio
+                    and cfg.num_layers % (cfg.local_global_ratio + 1) == 0
+                    and max_len > cfg.sliding_window)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16
+                   ) -> Dict[str, jax.Array]:
+        """Local:global archs get RING caches for the local layers: a
+        (window)-length circular buffer instead of the full context —
+        at 524k context this shrinks gemma3's cache ~5x and decode
+        traffic far more (§Perf iteration B2)."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        if self._ring_enabled(max_len):
+            ratio = cfg.local_global_ratio
+            ns = cfg.num_layers // (ratio + 1)
+            w = cfg.sliding_window
+            return {
+                "k": jnp.zeros((ns, batch, max_len, cfg.num_kv_heads, hd),
+                               dtype=dtype),
+                "v": jnp.zeros((ns, batch, max_len, cfg.num_kv_heads, hd),
+                               dtype=dtype),
+                "kl": jnp.zeros((ns * ratio, batch, w, cfg.num_kv_heads, hd),
+                                dtype=dtype),
+                "vl": jnp.zeros((ns * ratio, batch, w, cfg.num_kv_heads, hd),
+                                dtype=dtype),
+                "pos": jnp.zeros((batch,), dtype=jnp.int32),
+            }
+        shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd)
+        return {
+            "k": jnp.zeros(shape, dtype=dtype),
+            "v": jnp.zeros(shape, dtype=dtype),
+            "pos": jnp.zeros((batch,), dtype=jnp.int32),
+        }
+
+    def forward_cached(self, params: Pytree, tokens: jax.Array,
+                       cache: Dict[str, jax.Array],
+                       patches: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Prefill or decode: runs `tokens` against the cache.
+
+        For local:global archs (gemma3) at decode time the layer scan is
+        *staged* — `ratio` local layers (static sliding window, cache
+        reads sliced to the window) then one global layer — so a decode
+        step touches O(window) bytes per local layer instead of the full
+        cache (EXPERIMENTS.md §Perf, long_500k hillclimb).
+        """
+        cfg = self.cfg
+        h = self.embed_tokens(params, tokens, patches)
+        pos = cache["pos"]
+        ratio = cfg.local_global_ratio
+        if "kl" in cache:  # ring caches (local:global archs)
+            return self._forward_cached_ring(params, h, cache)
+        staged = (L.ATTN_WINDOW_SLICE and cfg.sliding_window and ratio
+                  and cfg.num_layers % (ratio + 1) == 0
+                  and tokens.shape[1] == 1
+                  and cache["k"].shape[2] > cfg.sliding_window)
+
+        if not staged:
+            windows = self._windows()
+
+            def body(carry, xs):
+                bp, w, kc, vc = xs
+                layer_cache = {"k": kc, "v": vc, "pos": pos}
+                out, nc = self.block_apply(bp, carry, window=w,
+                                           cache=layer_cache)
+                return out, (nc["k"], nc["v"])
+
+            h, (ks, vs) = jax.lax.scan(
+                body, h, (params["blocks"], windows, cache["k"], cache["v"]))
+            new_cache = {"k": ks, "v": vs, "pos": pos + h.shape[1]}
+            logits = self.final_logits(params, h[:, -1:, :])
+            return logits, new_cache
+
+        # staged local:global decode
+        w_local = cfg.sliding_window
+        ns = cfg.num_layers // (ratio + 1)
+        stack = lambda x: x.reshape((ns, ratio + 1) + x.shape[1:])
+        blocks_st = jax.tree.map(stack, params["blocks"])
+        k_st, v_st = stack(cache["k"]), stack(cache["v"])
+
+        def local_body(carry, xs):
+            bp, kc, vc = xs
+            out, nc = self.block_apply(
+                bp, carry, window=jnp.int32(w_local),
+                cache={"k": kc, "v": vc, "pos": pos}, window_slice=w_local)
+            return out, (nc["k"], nc["v"])
+
+        def stage(carry, xs):
+            bp_st, kc, vc = xs
+            loc = jax.tree.map(lambda x: x[:ratio], bp_st)
+            glob = jax.tree.map(lambda x: x[ratio], bp_st)
+            out, (ks_l, vs_l) = jax.lax.scan(
+                local_body, carry, (loc, kc[:ratio], vc[:ratio]))
+            out, ncg = self.block_apply(
+                glob, out, window=jnp.int32(0),
+                cache={"k": kc[ratio], "v": vc[ratio], "pos": pos})
+            ks = jnp.concatenate([ks_l, ncg["k"][None]], axis=0)
+            vs = jnp.concatenate([vs_l, ncg["v"][None]], axis=0)
+            return out, (ks, vs)
+
+        h, (ks, vs) = jax.lax.scan(stage, h, (blocks_st, k_st, v_st))
+        new_cache = {
+            "k": ks.reshape((cfg.num_layers,) + ks.shape[2:]),
+            "v": vs.reshape((cfg.num_layers,) + vs.shape[2:]),
+            "pos": pos + h.shape[1],
+        }
+        logits = self.final_logits(params, h[:, -1:, :])
+        return logits, new_cache
+
+    # ------------------------------------------------- ring-cache serving
+    def _ring_kv(self, bp, x, positions):
+        """Project+rope k/v for a local layer (ring write path)."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        b, s, _ = x.shape
+        k = apply_linear(bp["attn"]["k"], x).reshape(b, s, cfg.num_kv_heads,
+                                                     hd)
+        v = apply_linear(bp["attn"]["v"], x).reshape(b, s, cfg.num_kv_heads,
+                                                     hd)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        return k, v
+
+    def _forward_cached_ring(self, params, h, cache):
+        """Prefill (pos==0) or decode over ring local caches.
+
+        Local layers keep a circular (window)-slot buffer: slot of
+        absolute position p is ``p % window``; stale/garbage slots are
+        masked by remapping their position to the future (causal mask
+        kills them).
+        """
+        cfg = self.cfg
+        ratio = cfg.local_global_ratio
+        w = cfg.sliding_window
+        ns = cfg.num_layers // (ratio + 1)
+        pos = cache["pos"]
+        b, sq, _ = h.shape
+        stack_l = lambda x: x.reshape((ns, ratio) + x.shape[1:])
+        blocks_st = jax.tree.map(
+            lambda x: x.reshape((ns, ratio + 1) + x.shape[1:]),
+            params["blocks"])
+        kl_st, vl_st = stack_l(cache["kl"]), stack_l(cache["vl"])
+        positions = pos[:, None] + jnp.arange(sq)[None, :]
+
+        decode = sq == 1
+
+        def local_layer(carry, xs):
+            bp, kl, vl = xs  # kl/vl: (b, w, hkv, hd)
+            a_in = L.apply_norm(bp["ln1"], carry, cfg.norm_eps)
+            hd = cfg.resolved_head_dim
+            q = apply_linear(bp["attn"]["q"], a_in).reshape(
+                b, sq, cfg.num_heads, hd)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k, v = self._ring_kv(bp, a_in, positions)
+            if decode:
+                slot = pos[0] % w
+                kl = jax.lax.dynamic_update_slice_in_dim(
+                    kl, k.astype(kl.dtype), slot, axis=1)
+                vl = jax.lax.dynamic_update_slice_in_dim(
+                    vl, v.astype(vl.dtype), slot, axis=1)
+                # absolute position held by each slot j:
+                # p_j = pos - ((pos - j) mod w); garbage (p<0) -> future
+                j = jnp.arange(w)
+                p_now = pos[0] + 1  # after write, slots cover <= pos
+                kvpos = pos[0] - jnp.mod(pos[0] - j, w)
+                kvpos = jnp.where(kvpos >= 0, kvpos, pos[0] + w + 1)
+                kv_positions = jnp.broadcast_to(kvpos[None, :], (b, w))
+                out = L.mha(q, kl.astype(q.dtype), vl.astype(q.dtype),
+                            causal=True, window=jnp.int32(w),
+                            q_positions=positions,
+                            kv_positions=kv_positions)
+            else:
+                # prefill from pos==0: attend within the sequence, then
+                # write the trailing window into the ring
+                out = L.mha(q, k, v, causal=True, window=jnp.int32(w),
+                            q_positions=positions, kv_positions=positions)
+                if sq >= w:
+                    s0 = sq - w
+                    shift = jnp.mod(s0, w)
+                    kl = jnp.roll(k[:, s0:].astype(kl.dtype), shift, axis=1)
+                    vl = jnp.roll(v[:, s0:].astype(vl.dtype), shift, axis=1)
+                else:
+                    kl = jax.lax.dynamic_update_slice_in_dim(
+                        kl, k.astype(kl.dtype), 0, axis=1)
+                    vl = jax.lax.dynamic_update_slice_in_dim(
+                        vl, v.astype(vl.dtype), 0, axis=1)
+            out = out.reshape(b, sq, cfg.num_heads * hd)
+            out = apply_linear(bp["attn"]["o"], out)
+            h2 = carry + out
+            m_in = L.apply_norm(bp["ln2"], h2, cfg.norm_eps)
+            return h2 + L.mlp_block(bp["mlp"], m_in), (kl, vl)
+
+        def stage(carry, xs):
+            bp_st, kg, vg, kl, vl = xs
+            loc = jax.tree.map(lambda x: x[:ratio], bp_st)
+            glob = jax.tree.map(lambda x: x[ratio], bp_st)
+            out, (nkl, nvl) = jax.lax.scan(local_layer, carry,
+                                           (loc, kl, vl))
+            out, ncg = self.block_apply(
+                glob, out, window=jnp.int32(0),
+                cache={"k": kg, "v": vg, "pos": pos}, positions=positions)
+            return out, (nkl, nvl, ncg["k"], ncg["v"])
+
+        h, (kls, vls, kgs, vgs) = jax.lax.scan(
+            stage, h, (blocks_st, cache["k"], cache["v"], kl_st, vl_st))
+        new_cache = {
+            "k": kgs, "v": vgs,
+            "kl": kls.reshape((ns * ratio,) + kls.shape[2:]),
+            "vl": vls.reshape((ns * ratio,) + vls.shape[2:]),
+            "pos": pos + sq,
+        }
+        logits = self.final_logits(params, h[:, -1:, :])
+        return logits, new_cache
+
+    def prefill(self, params, tokens, cache, patches=None):
+        return self.forward_cached(params, tokens, cache, patches)
+
+    def decode_step(self, params, token, cache):
+        """token: (b, 1) int32 -> (logits (b, 1, V), cache)."""
+        return self.forward_cached(params, token, cache)
+
+    # ----------------------------------------------- compression harness
+    def num_blocks(self) -> int:
+        return self.cfg.num_layers
+
+    def block_params(self, params: Pytree, i: int) -> Pytree:
+        return jax.tree.map(lambda x: x[i], params["blocks"])
+
+    def set_block_params(self, params: Pytree, i: int, bp: Pytree) -> Pytree:
+        """Replace block i.  Compressed blocks change pytree *structure*
+        (dense -> lowrank/pifa), so compressed models store blocks as a
+        list instead of a stacked pytree; `unstack_blocks` converts."""
+        assert isinstance(params["blocks"], list), "call unstack_blocks first"
+        params = dict(params)
+        params["blocks"] = list(params["blocks"])
+        params["blocks"][i] = bp
+        return params
+
+    def unstack_blocks(self, params: Pytree) -> Pytree:
+        if isinstance(params["blocks"], list):
+            return params
+        params = dict(params)
+        stacked = params["blocks"]
+        params["blocks"] = [jax.tree.map(lambda x, i=i: x[i], stacked)
+                            for i in range(self.cfg.num_layers)]
+        return params
+
+    def restack_blocks(self, params: Pytree) -> Pytree:
+        """Re-stack list-form blocks for the scanned serving path.
+
+        Uniform-density MPIFA gives every block identical pytree
+        structure (same PIFA ranks), so compressed models regain the
+        scan + KV-cache fast path.  Heterogeneous blocks (MPIFA_NS
+        per-layer densities) stay in list form — callers fall back to
+        `forward_unstacked`.  Returns None when stacking is impossible.
+        """
+        if not isinstance(params["blocks"], list):
+            return params
+        blocks = params["blocks"]
+        ref = jax.tree_util.tree_structure(blocks[0])
+        if any(jax.tree_util.tree_structure(b) != ref for b in blocks[1:]):
+            return None
+        shapes0 = [l.shape for l in jax.tree.leaves(blocks[0])]
+        for b in blocks[1:]:
+            if [l.shape for l in jax.tree.leaves(b)] != shapes0:
+                return None
+        params = dict(params)
+        params["blocks"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=0), *blocks)
+        return params
+
+    def forward_unstacked(self, params: Pytree, tokens: jax.Array,
+                          patches: Optional[jax.Array] = None) -> jax.Array:
+        """Layer-by-layer forward over list-form (possibly compressed)
+        blocks; used by the MPIFA pipeline and the PPL evaluator."""
+        h = self.embed_tokens(params, tokens, patches)
+        for i, bp in enumerate(params["blocks"]):
+            w = jnp.int32(self.cfg.window_for_layer(i))
+            h, _ = self.block_apply(bp, h, window=w)
+        return self.final_logits(params, h)
+
+    def linears_in_block(self) -> List[LinearInfo]:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        infos = [
+            LinearInfo(("attn", "q"), "attn", cfg.d_model, cfg.num_heads * hd),
+            LinearInfo(("attn", "k"), "attn", cfg.d_model, cfg.num_kv_heads * hd),
+            LinearInfo(("attn", "v"), "attn", cfg.d_model, cfg.num_kv_heads * hd),
+            LinearInfo(("attn", "o"), "attn", cfg.num_heads * hd, cfg.d_model),
+        ]
+        ff = cfg.moe_dense_ff if (cfg.family == "moe" and cfg.moe_dense_ff) else cfg.d_ff
+        if cfg.family != "moe" or cfg.moe_dense_ff:
+            if cfg.gated_mlp:
+                infos.append(LinearInfo(("mlp", "gate"), "mlp", cfg.d_model, ff))
+            infos.append(LinearInfo(("mlp", "up"), "mlp", cfg.d_model, ff))
+            infos.append(LinearInfo(("mlp", "down"), "mlp", ff, cfg.d_model))
+        return infos

@@ -1,0 +1,90 @@
+"""AdamW with global-norm clipping — minimal optax-like protocol.
+
+``init(params) -> state``; ``update(grads, state, params) -> (updates,
+state)`` where ``new_params = params + updates``.  Moments are fp32
+regardless of param dtype (mixed-precision training keeps bf16 params +
+fp32 optimizer state; state sharding mirrors param sharding leaf-wise,
+which `parallel/sharding.py` exploits).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Pytree
+    v: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Any = 1e-3                   # float or callable(step) -> float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+    # hook point for gradient compression (optim/compression.py): maps
+    # the grad pytree before the moment update (e.g. int8 round-trip or
+    # PowerSGD low-rank approximation, with error feedback kept outside)
+    grad_transform: Optional[Callable[[Pytree], Pytree]] = None
+
+    def init(self, params: Pytree) -> AdamWState:
+        # integer leaves (PIFA inv_perm, positions) are structural, not
+        # trainable: zero-size moment placeholders, zero updates.
+        zeros = lambda p: (jnp.zeros(p.shape, dtype=jnp.float32)
+                           if jnp.issubdtype(p.dtype, jnp.inexact)
+                           else jnp.zeros((), jnp.float32))
+        return AdamWState(
+            count=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(self, grads: Pytree, state: AdamWState, params: Pytree):
+        if self.grad_transform is not None:
+            grads = self.grad_transform(grads)
+
+        def trainable(p):
+            return jnp.issubdtype(p.dtype, jnp.inexact)
+
+        grads = jax.tree.map(
+            lambda g, p: g.astype(jnp.float32) if trainable(p)
+            else jnp.zeros((), jnp.float32), grads, params)
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        count = state.count + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        new_m = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                             state.m, grads)
+        new_v = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                             state.v, grads)
+
+        def upd(p, m, v):
+            if not trainable(p):
+                return jnp.zeros(p.shape, p.dtype)  # structural leaf
+            step = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, new_m, new_v)
+        return updates, AdamWState(count=count, m=new_m, v=new_v)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)

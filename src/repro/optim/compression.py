@@ -1,0 +1,138 @@
+"""Gradient compression for DCN-bound multi-pod reductions.
+
+Two schemes, both with error feedback (the residual of this step's
+compression is added back next step, preserving convergence):
+
+  * int8 uniform quantization (per-leaf absmax scaling) — 4x wire
+    reduction vs f32, 2x vs bf16;
+  * PowerSGD-style rank-r approximation ``G ~= P Q^T`` — thematically a
+    low-rank sibling of the paper: the all-reduce moves ``r*(m+n)``
+    instead of ``m*n`` (the same Fig. 1 arithmetic PIFA exploits for
+    weights, applied to gradient traffic).
+
+Usage: wrap the grad pytree transform into AdamW.grad_transform, or call
+``compress/decompress`` around an explicit psum in a shard_map step.
+The error-feedback state lives outside jit (host pytree) for the simple
+trainer; the jit-native variant threads it through opt_state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+__all__ = ["Int8Compressor", "PowerSGDCompressor"]
+
+
+def _quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@dataclasses.dataclass
+class Int8Compressor:
+    """Round-trip int8 with error feedback."""
+
+    def init(self, grads: Pytree) -> Pytree:
+        return jax.tree.map(lambda g: jnp.zeros_like(g, dtype=jnp.float32),
+                            grads)
+
+    def compress(self, grads: Pytree, error: Pytree
+                 ) -> Tuple[Pytree, Pytree]:
+        """-> (wire pytree of (q, scale), new error feedback)."""
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e
+            q, s = _quantize_int8(gf)
+            deq = _dequantize_int8(q, s)
+            return (q, s), gf - deq
+        pairs = jax.tree.map(one, grads, error)
+        wire = jax.tree.map(lambda p: p[0], pairs,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda p: p[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return wire, new_err
+
+    def decompress(self, wire: Pytree) -> Pytree:
+        return jax.tree.map(lambda qs: _dequantize_int8(*qs), wire,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    def roundtrip(self, grads: Pytree, error: Pytree) -> Tuple[Pytree, Pytree]:
+        wire, new_err = self.compress(grads, error)
+        return self.decompress(wire), new_err
+
+    @staticmethod
+    def wire_bytes(grads: Pytree) -> int:
+        return sum(int(g.size) for g in jax.tree.leaves(grads))  # 1B/elem
+
+
+@dataclasses.dataclass
+class PowerSGDCompressor:
+    """Rank-r gradient factorization with warm-started Q and error
+    feedback (Vogels et al., adapted to the pytree/pjit world).
+
+    Only >=2D leaves are factorized (matrices reshape to (m, -1));
+    vectors/scalars pass through (they are a negligible fraction).
+    """
+
+    rank: int = 4
+    iters: int = 1  # subspace iterations per step
+
+    def init(self, grads: Pytree) -> Pytree:
+        def one(g):
+            if g.ndim < 2:
+                return {"err": jnp.zeros_like(g, jnp.float32)}
+            m = g.shape[0]
+            n = int(g.size // m)
+            key = jax.random.PRNGKey(n * 7919 + m)
+            return {
+                "err": jnp.zeros((m, n), jnp.float32),
+                "q": jax.random.normal(key, (n, self.rank), jnp.float32),
+            }
+        return jax.tree.map(one, grads)
+
+    def roundtrip(self, grads: Pytree, state: Pytree) -> Tuple[Pytree, Pytree]:
+        """-> (approximated grads, new state).  The wire tensors are the
+        (m, r) P and (n, r) Q factors — r*(m+n) instead of m*n."""
+        def one(g, st):
+            if g.ndim < 2:
+                return g, st
+            shape = g.shape
+            m = shape[0]
+            gf = g.astype(jnp.float32).reshape(m, -1) + st["err"]
+            q = st["q"]
+            p = None
+            for _ in range(self.iters):
+                p = gf @ q                                   # (m, r)  [psum'd]
+                p, _ = jnp.linalg.qr(p)
+                q = gf.T @ p                                 # (n, r)  [psum'd]
+            approx = p @ q.T
+            new_st = {"err": gf - approx, "q": q}
+            return approx.reshape(shape).astype(g.dtype), new_st
+        out = jax.tree.map(one, grads, state,
+                           is_leaf=lambda x: isinstance(x, dict) and
+                           ("err" in x or "q" in x))
+        approx = jax.tree.map(lambda pr: pr[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda pr: pr[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return approx, new_state
+
+    def wire_bytes(self, grads: Pytree) -> int:
+        total = 0
+        for g in jax.tree.leaves(grads):
+            if g.ndim < 2:
+                total += g.size * 4
+            else:
+                m = g.shape[0]
+                n = int(g.size // m)
+                total += 4 * self.rank * (m + n)
+        return total

@@ -1,0 +1,62 @@
+"""Collective-traffic accounting from optimized (post-SPMD) HLO text.
+
+``cost_analysis()`` does not expose collective bytes, so §Roofline's
+collective term is derived here: we parse ``compiled.as_text()`` and sum
+the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (counting ``-start`` once, skipping the
+matching ``-done``).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+__all__ = ["collective_bytes", "DTYPE_BYTES", "parse_shapes"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9a-z]+)?)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(([^)]*)\)")
+_DONE_RE = re.compile(r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                      r"collective-permute)-done\(")
+
+
+def parse_shapes(text: str) -> int:
+    """Total bytes of every dtype[shape] literal in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total += numel * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """(total operand bytes, per-op-kind breakdown) of collectives."""
+    per_kind: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if _DONE_RE.search(line):
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind, _, operands = m.groups()
+        per_kind[kind] += parse_shapes(operands)
+    return sum(per_kind.values()), dict(per_kind)

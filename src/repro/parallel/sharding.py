@@ -1,0 +1,295 @@
+"""Logical sharding rules: param/activation PartitionSpecs per arch.
+
+Mesh axes (launch/mesh.py): ``("data", "model")`` single-pod,
+``("pod", "data", "model")`` multi-pod.  Logical mapping:
+
+  batch          -> (pod, data)     pure DP across pods (DCN-friendly)
+  vocab / heads / ff / experts / pifa-rank -> model   (TP / EP)
+  weight non-TP dim -> data         (FSDP / ZeRO-3; `fsdp_axes` extends
+                                     it to (data, pod) for >300B configs)
+  kv-cache seq   -> data            for long_500k (batch=1: sequence/
+                                     context parallelism over the cache)
+
+GSPMD tolerates non-divisible dims (56 heads / 16-way model) by
+padding, so the rules never need per-arch divisibility cases.
+
+PIFA params (the paper's layer, DESIGN.md §5): ``wp (r, n)`` shards r on
+model (its output y_p is the TP-gathered activation — r < m means PIFA
+*shrinks* TP all-gather bytes by r/m vs a dense layer); ``c (m-r, r)``
+shards its output rows on model; ``inv_perm`` replicates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+__all__ = ["ShardingRules", "param_specs", "param_shardings",
+           "batch_specs", "cache_specs", "named", "leaf_spec", "constrain"]
+
+
+def constrain(x, *roles):
+    """Logical activation sharding constraint, mesh-aware and eager-safe.
+
+    ``roles`` name each dim: "batch" -> (pod, data), "model" -> model,
+    "data" -> data, None -> unsharded.  No-op when no named mesh is
+    active (eager tests, single-device benches), so model code can
+    constrain unconditionally.  GSPMD occasionally drops the batch
+    sharding through reshape/scan patterns (observed in the blockwise
+    attention path); these constraints pin the intended layout.
+    """
+    names: Tuple[str, ...] = ()
+    try:  # jax.set_mesh-style context
+        mesh = jax.sharding.get_abstract_mesh()
+        names = tuple(getattr(mesh, "axis_names", ()) or ())
+    except Exception:
+        pass
+    if not names:
+        try:  # legacy `with mesh:` context
+            from jax._src import mesh as _mesh_lib
+            pm = _mesh_lib.thread_resources.env.physical_mesh
+            if pm is not None and not pm.empty:
+                names = tuple(pm.axis_names)
+        except Exception:
+            pass
+    if not names:
+        return x
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    spec = []
+    for r in roles:
+        if r == "batch" and batch_axes:
+            spec.append(batch_axes if len(batch_axes) > 1 else batch_axes[0])
+        elif r in names:
+            spec.append(r)
+        else:
+            spec.append(None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Knobs the perf hillclimb iterates over."""
+
+    data_axes: Tuple[str, ...] = ("data",)       # batch axes (+"pod" if present)
+    model_axis: Optional[str] = "model"
+    fsdp_axes: Tuple[str, ...] = ("data",)       # weight non-TP dim
+    shard_cache_seq: bool = False                # long-context: cache seq -> data
+    replicate_norms: bool = True
+
+    def for_mesh(self, mesh: Mesh) -> "ShardingRules":
+        """Add the pod axis to batch/fsdp when the mesh has one."""
+        if "pod" in mesh.axis_names and "pod" not in self.data_axes:
+            return dataclasses.replace(
+                self,
+                data_axes=("pod",) + tuple(self.data_axes),
+                fsdp_axes=tuple(self.fsdp_axes),
+            )
+        return self
+
+
+def _match(path: Tuple[str, ...], *pats: str) -> bool:
+    """True if the joined path matches any /-pattern suffix (regex ok)."""
+    s = "/".join(path)
+    return any(re.search(p, s) for p in pats)
+
+
+def leaf_spec(path: Tuple[str, ...], ndim: int, rules: ShardingRules) -> P:
+    """PartitionSpec for one param leaf, by path + rank.
+
+    Works for dense / lowrank / pifa representations and both stacked
+    (leading num_layers and/or experts dims) and unstacked trees: the
+    spec is derived for the *trailing* matrix dims and left-padded with
+    None for any leading stacking dims.
+    """
+    mdl = rules.model_axis
+    fsdp = tuple(a for a in rules.fsdp_axes) or None
+    fsdp = fsdp if fsdp is None or len(fsdp) > 1 else fsdp[0]
+
+    def pad(spec_tail: Tuple) -> P:
+        lead = ndim - len(spec_tail)
+        return P(*((None,) * lead + spec_tail))
+
+    # ---- scalars / vectors -------------------------------------------------
+    if _match(path, r"scale$", r"bias$", r"(^|/)b$", r"a_log$", r"d_skip$",
+              r"dt_bias$", r"inv_perm$", r"perm$", r"count$"):
+        return P(*((None,) * ndim))
+    # ---- embeddings / unembedding ------------------------------------------
+    if _match(path, r"embed/table$", r"lm_head/w$"):
+        return pad((mdl, fsdp))                    # vocab -> model
+    if _match(path, r"vision_proj/w$", r"frontend_proj/w$"):
+        return pad((None, fsdp))
+    # ---- router (tiny, replicated out dim) ---------------------------------
+    if _match(path, r"router/w$"):
+        return pad((None, None))
+    # ---- conv (channels -> model) -------------------------------------------
+    if _match(path, r"conv_w$"):
+        return pad((mdl, None))
+    if _match(path, r"conv_b$"):
+        return pad((mdl,))
+    # ---- PIFA factors --------------------------------------------------------
+    if _match(path, r"/wp$"):
+        return pad((mdl, fsdp))                    # rank -> model
+    if _match(path, r"(^|/)c$") and ndim >= 2:
+        return pad((mdl, None))                    # non-pivot rows -> model
+    # ---- low-rank factors ----------------------------------------------------
+    if _match(path, r"(^|/)u$"):
+        return pad((mdl, None))
+    if _match(path, r"(^|/)vt$"):
+        return pad((None, fsdp))
+    # ---- dense linears: TP dim by role ---------------------------------------
+    if _match(path, r"attn/q/w$", r"attn/k/w$", r"attn/v/w$",
+              r"xattn/[qkv]/w$"):
+        return pad((mdl, fsdp))                    # heads out -> model
+    if _match(path, r"attn/o/w$", r"xattn/o/w$"):
+        return pad((fsdp, mdl))                    # heads in -> model
+    if _match(path, r"mlp/(up|gate)/w$", r"moe/(up|gate)/w$"):
+        return pad((mdl, fsdp))                    # ff out -> model
+    if _match(path, r"mlp/down/w$", r"moe/down/w$"):
+        return pad((fsdp, mdl))                    # ff in -> model
+    if _match(path, r"in_proj/w$"):                # mamba: inner dim -> model
+        return pad((mdl, fsdp))
+    if _match(path, r"out_proj/w$"):
+        return pad((fsdp, mdl))
+    # ---- fallback: shard the largest trailing dim on fsdp --------------------
+    if ndim >= 2:
+        return pad((None, fsdp))
+    return P(*((None,) * ndim))
+
+
+def _path_str(kp) -> Tuple[str, ...]:
+    out = []
+    for k in kp:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def sanitize_spec(spec: P, shape, mesh: Optional[Mesh]) -> P:
+    """Drop axes that do not evenly divide their dim (jax requires input
+    shardings to tile exactly; odd vocabs like granite's 49155 fall back
+    to the next dim / replication)."""
+    if mesh is None:
+        return spec
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= sizes.get(a, 1)
+        out.append(entry if shape[i] % total == 0 else None)
+    return P(*out)
+
+
+def param_specs(tree: Pytree, rules: ShardingRules,
+                mesh: Optional[Mesh] = None) -> Pytree:
+    """PartitionSpec pytree matching ``tree`` (arrays or SDS leaves)."""
+
+    def one(kp, leaf):
+        shape = getattr(leaf, "shape", ())
+        nd = len(shape) if shape else (leaf.ndim if hasattr(leaf, "ndim")
+                                       else np.ndim(leaf))
+        spec = leaf_spec(_path_str(kp), nd, rules)
+        return sanitize_spec(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def named(mesh: Mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(tree: Pytree, mesh: Mesh, rules: ShardingRules) -> Pytree:
+    return named(mesh, param_specs(tree, rules.for_mesh(mesh), mesh))
+
+
+def batch_specs(batch_shapes: Pytree, rules: ShardingRules,
+                shard_batch: bool = True) -> Pytree:
+    """Token/label/frame batches: leading batch dim -> data axes.
+
+    ``shard_batch=False`` for long-context decode (batch=1 cells): the
+    data axis is spent on the cache sequence dim instead.
+    """
+    da = tuple(rules.data_axes)
+    da = da if len(da) > 1 else da[0]
+
+    def spec(leaf):
+        nd = leaf.ndim if hasattr(leaf, "ndim") else np.ndim(leaf)
+        if not shard_batch:
+            return P(*((None,) * nd))
+        return P(*((da,) + (None,) * (nd - 1)))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def cache_specs(cache_shapes: Pytree, rules: ShardingRules,
+                mesh: Optional[Mesh] = None) -> Pytree:
+    """KV/SSM cache sharding.
+
+    Stacked layouts (leading num_layers dim):
+      k/v      (L, B, S, Hkv, hd) -> batch on data, kv-heads on model;
+               when Hkv doesn't divide the model axis (GQA kv=8 on a
+               16-wide axis), the cache SEQ dim takes the model axis
+               instead — otherwise the cache ends up replicated across
+               model and decode drags the full cache through
+               collective-permutes (§Perf iteration C2);
+               long-context mode shards S on data instead (batch=1).
+      conv     (L, B, K-1, conv_dim) -> conv channels on model
+      ssm      (L, B, H, N, P) -> ssm heads on model
+      xk/xv    like k/v (encoder memory)
+      pos      (B,) replicated
+    """
+    r = rules
+    da = tuple(r.data_axes)
+    da = da if len(da) > 1 else da[0]
+    mdl = r.model_axis
+    mdl_size = 1
+    if mesh is not None and mdl in mesh.axis_names:
+        mdl_size = dict(zip(mesh.axis_names, mesh.devices.shape))[mdl]
+
+    def spec_for(kp, leaf):
+        path = _path_str(kp)
+        shape = getattr(leaf, "shape", ())
+        nd = len(shape) if shape else (leaf.ndim if hasattr(leaf, "ndim")
+                                       else np.ndim(leaf))
+        name = path[-1]
+        if name in ("k", "v", "xk", "xv", "kl", "vl") and nd == 5:
+            if r.shard_cache_seq:
+                # context parallelism: batch too small to split, shard
+                # the cache sequence dim instead (long_500k)
+                return P(None, None, da, mdl, None)
+            heads_divide = mesh is None or shape[3] % mdl_size == 0
+            seq_divides = shape[2] % mdl_size == 0
+            if not heads_divide and seq_divides:
+                return P(None, da, mdl, None, None)
+            return P(None, da, None, mdl, None)
+        if name == "conv" and nd == 4:
+            if r.shard_cache_seq:
+                return P(None, None, None, mdl)
+            return P(None, da, None, mdl)
+        if name == "ssm" and nd == 5:
+            if r.shard_cache_seq:
+                return P(None, None, mdl, None, None)
+            return P(None, da, mdl, None, None)
+        return P(*((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)

@@ -1,0 +1,66 @@
+"""Elastic scaling plans: recompute mesh + batch split when hosts change.
+
+The contract with the rest of the system:
+
+  1. ``plan(available_chips)`` picks the largest supported mesh that
+     fits, preferring to shrink the *data* axis (pure DP shrink keeps
+     every weight shard layout identical => restore is a cheap reshard)
+     and only then the pod axis;
+  2. ``Checkpointer.restore`` places the old arrays against the new
+     mesh's shardings (arrays are saved unsharded-per-key, so any mesh
+     can consume them);
+  3. the data pipeline re-splits ``global_batch`` over the new
+     ``num_shards``; batches remain a pure function of (seed, step), so
+     no data is skipped or repeated after the resize.
+
+tests/test_elastic.py exercises shrink + regrow through a real
+checkpoint round-trip (1-device container: meshes over placeholder
+devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+__all__ = ["ElasticPlan", "plan_mesh"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    global_batch: int
+    chips_used: int
+    chips_idle: int
+
+
+def plan_mesh(available_chips: int, *, model_parallel: int = 16,
+              global_batch: int = 256, min_data: int = 1,
+              pods: Optional[int] = None) -> ElasticPlan:
+    """Largest (data x model) mesh under the chip budget.
+
+    The model axis is fixed by the config (TP degree is a property of
+    the model's memory footprint, not of fleet size); elasticity acts on
+    data (and pod) axes.  global_batch stays constant — per-shard batch
+    grows as the fleet shrinks (keeps optimization identical), until
+    min_data is hit.
+    """
+    if pods and pods > 1:
+        per_pod = available_chips // pods
+        data = max(min_data, per_pod // model_parallel)
+        shape: Tuple[int, ...] = (pods, data, model_parallel)
+        names: Tuple[str, ...] = ("pod", "data", "model")
+        used = pods * data * model_parallel
+    else:
+        data = max(min_data, available_chips // model_parallel)
+        while data > min_data and global_batch % data != 0:
+            data -= 1
+        shape = (data, model_parallel)
+        names = ("data", "model")
+        used = data * model_parallel
+    if used > available_chips:
+        raise ValueError(
+            f"need >= {model_parallel} chips (have {available_chips})")
+    return ElasticPlan(mesh_shape=shape, axis_names=names,
+                       global_batch=global_batch, chips_used=used,
+                       chips_idle=available_chips - used)

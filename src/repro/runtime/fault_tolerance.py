@@ -1,0 +1,109 @@
+"""Fault-tolerance runtime: heartbeats, straggler detection, restart policy.
+
+On a real multi-pod deployment these hooks attach to the cluster
+coordinator (GKE/Borg health service); the container is single-process,
+so the components are implemented against an injectable clock + process
+registry and exercised by failure-injection tests — the logic that would
+run per-host at scale, minus the RPC transport.
+
+  * HeartbeatRegistry  — hosts check in; silence > timeout marks them
+    dead and triggers the configured callback (evict + restore).
+  * StragglerDetector  — per-step-time EWMA; a host whose step time
+    exceeds ``threshold x`` the fleet median for ``patience``
+    consecutive steps is flagged (TPU stragglers are usually a
+    thermally-throttled or pre-failing chip; mitigation = checkpoint,
+    evict, resume on spares — see ElasticPlan in elastic.py).
+  * RestartPolicy      — exponential backoff with a crash budget; the
+    train loop consults it on every failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+from typing import Callable, Dict, List, Optional
+
+__all__ = ["HeartbeatRegistry", "StragglerDetector", "RestartPolicy"]
+
+
+class HeartbeatRegistry:
+    def __init__(self, timeout_s: float, clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout_s
+        self.clock = clock
+        self.last_seen: Dict[str, float] = {}
+        self.dead: set = set()
+
+    def beat(self, host: str) -> None:
+        if host in self.dead:
+            self.dead.discard(host)  # host came back (restart completed)
+        self.last_seen[host] = self.clock()
+
+    def check(self) -> List[str]:
+        """Newly-dead hosts since last check."""
+        now = self.clock()
+        newly = []
+        for host, seen in self.last_seen.items():
+            if host not in self.dead and now - seen > self.timeout:
+                self.dead.add(host)
+                newly.append(host)
+        return newly
+
+    def alive(self) -> List[str]:
+        return [h for h in self.last_seen if h not in self.dead]
+
+
+class StragglerDetector:
+    """Flags hosts consistently slower than the fleet median."""
+
+    def __init__(self, threshold: float = 1.5, patience: int = 3,
+                 ewma: float = 0.5):
+        self.threshold = threshold
+        self.patience = patience
+        self.ewma = ewma
+        self.step_time: Dict[str, float] = {}
+        self.strikes: Dict[str, int] = defaultdict(int)
+
+    def record(self, host: str, step_seconds: float) -> None:
+        prev = self.step_time.get(host)
+        self.step_time[host] = (step_seconds if prev is None else
+                                self.ewma * step_seconds + (1 - self.ewma) * prev)
+
+    def stragglers(self) -> List[str]:
+        if len(self.step_time) < 2:
+            return []
+        times = sorted(self.step_time.values())
+        median = times[len(times) // 2]
+        out = []
+        for host, t in self.step_time.items():
+            if t > self.threshold * median:
+                self.strikes[host] += 1
+                if self.strikes[host] >= self.patience:
+                    out.append(host)
+            else:
+                self.strikes[host] = 0
+        return out
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    """Exponential backoff + crash budget (crash-loop protection)."""
+
+    max_restarts: int = 10
+    window_s: float = 3600.0
+    base_backoff_s: float = 5.0
+    max_backoff_s: float = 300.0
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        self.crashes: deque = deque()
+
+    def on_failure(self) -> Optional[float]:
+        """Returns backoff seconds before restarting, or None = give up."""
+        now = self.clock()
+        self.crashes.append(now)
+        while self.crashes and now - self.crashes[0] > self.window_s:
+            self.crashes.popleft()
+        n = len(self.crashes)
+        if n > self.max_restarts:
+            return None
+        return min(self.base_backoff_s * (2 ** (n - 1)), self.max_backoff_s)

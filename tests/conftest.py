@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests see the default single CPU device (the dry-run alone forces 512
+# placeholder devices, in its own process). Keep XLA quiet and small.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,88 @@
+"""Checkpointer: round trip, atomicity, resume, gc, elastic reshard."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(6, dtype=jnp.int32),
+                       "c": jnp.float32(3.5)}}
+
+
+def test_round_trip(tmp_path):
+    ck = Checkpointer(tmp_path)
+    t = tree()
+    ck.save(10, t, extra={"data": {"step": 10}}, blocking=True)
+    restored, extra = ck.restore(10, jax.tree.map(np.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert extra["data"]["step"] == 10
+
+
+def test_latest_and_gc(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    t = tree()
+    for s in (1, 2, 3, 4):
+        ck.save(s, t, blocking=True)
+    assert ck.latest_step() == 4
+    assert ck.all_steps() == [3, 4]
+
+
+def test_crash_mid_write_is_invisible(tmp_path):
+    """A .tmp directory (simulated crash before rename) is never listed."""
+    ck = Checkpointer(tmp_path)
+    ck.save(5, tree(), blocking=True)
+    (pathlib.Path(tmp_path) / "step_00000009.tmp").mkdir()
+    assert ck.latest_step() == 5
+
+
+def test_idempotent_resave(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(7, tree(), blocking=True)
+    ck.save(7, tree(1), blocking=True)  # same step again: no crash
+    assert ck.latest_step() == 7
+
+
+def test_restore_latest_none(tmp_path):
+    ck = Checkpointer(tmp_path)
+    step, t, extra = ck.restore_latest(tree())
+    assert step is None and t is None
+
+
+def test_restore_casts_dtype(tmp_path):
+    ck = Checkpointer(tmp_path)
+    t = {"w": jnp.ones((3, 3), jnp.float32)}
+    ck.save(1, t, blocking=True)
+    like = {"w": jnp.zeros((3, 3), jnp.bfloat16)}
+    restored, _ = ck.restore(1, like)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+def test_train_loop_resume_via_subprocess(tmp_path):
+    """Full fault-tolerance integration: crash injection + auto-resume."""
+    import subprocess
+    import sys
+    import os
+    env = dict(os.environ, PYTHONPATH="src")
+    base = [sys.executable, "-m", "repro.launch.train", "--arch", "tiny",
+            "--steps", "12", "--batch", "2", "--seq-len", "32",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "4",
+            "--log-every", "100"]
+    p1 = subprocess.run(base + ["--fail-at-step", "9"], env=env,
+                        capture_output=True, text=True, cwd="/root/repo")
+    assert p1.returncode == 42, p1.stderr[-1000:]
+    p2 = subprocess.run(base, env=env, capture_output=True, text=True,
+                        cwd="/root/repo")
+    assert p2.returncode == 0, p2.stderr[-1000:]
+    # the async save in flight at crash time may be lost (atomicity!);
+    # resume must pick up a COMMITTED step (4 or 8), never corrupt state.
+    assert "resumed from step" in p2.stdout
+    assert "done" in p2.stdout

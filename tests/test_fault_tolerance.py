@@ -1,0 +1,77 @@
+"""Heartbeats, straggler detection, restart backoff (runtime/)."""
+import pytest
+
+from repro.runtime.elastic import plan_mesh
+from repro.runtime.fault_tolerance import (HeartbeatRegistry, RestartPolicy,
+                                           StragglerDetector)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_detects_dead_host():
+    clock = FakeClock()
+    hb = HeartbeatRegistry(timeout_s=10, clock=clock)
+    for h in ("h0", "h1", "h2"):
+        hb.beat(h)
+    clock.t = 5
+    hb.beat("h0")
+    hb.beat("h1")
+    clock.t = 12  # h2 silent for 12s > 10s
+    assert hb.check() == ["h2"]
+    assert sorted(hb.alive()) == ["h0", "h1"]
+    # recovery
+    hb.beat("h2")
+    assert hb.check() == []
+    assert "h2" in hb.alive()
+
+
+def test_straggler_needs_patience():
+    sd = StragglerDetector(threshold=1.5, patience=2)
+    for step in range(3):
+        for h in ("a", "b", "c", "d"):
+            sd.record(h, 1.0 if h != "d" else 3.0)
+        flagged = sd.stragglers()
+    assert flagged == ["d"]
+
+
+def test_straggler_single_spike_not_flagged():
+    sd = StragglerDetector(threshold=1.5, patience=3, ewma=1.0)
+    for h in ("a", "b", "c", "d"):
+        sd.record(h, 1.0)
+    sd.record("d", 5.0)
+    assert sd.stragglers() == []          # strike 1 of 3
+    sd.record("d", 1.0)
+    assert sd.stragglers() == []          # recovered, strikes reset
+    sd.record("d", 1.0)
+    assert sd.stragglers() == []
+
+
+def test_restart_backoff_and_budget():
+    clock = FakeClock()
+    rp = RestartPolicy(max_restarts=3, window_s=100, base_backoff_s=1,
+                       max_backoff_s=8, clock=clock)
+    assert rp.on_failure() == 1
+    assert rp.on_failure() == 2
+    assert rp.on_failure() == 4
+    assert rp.on_failure() is None       # budget exhausted
+    clock.t = 200                        # window expired: budget refills
+    assert rp.on_failure() == 1
+
+
+def test_elastic_plan_shrink_grow():
+    full = plan_mesh(256, model_parallel=16, global_batch=256)
+    assert full.mesh_shape == (16, 16)
+    shrunk = plan_mesh(192, model_parallel=16, global_batch=256)
+    assert shrunk.mesh_shape[1] == 16
+    assert shrunk.chips_used <= 192
+    assert 256 % shrunk.mesh_shape[0] == 0   # batch still divides
+    pods = plan_mesh(512, model_parallel=16, global_batch=256, pods=2)
+    assert pods.mesh_shape == (2, 16, 16)
+    with pytest.raises(ValueError):
+        plan_mesh(8, model_parallel=16)

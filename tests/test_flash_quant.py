@@ -1,0 +1,66 @@
+"""Flash-attention kernel + quantized-PIFA composition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pifa import pivoting_factorize
+from repro.core.quantize import (apply_linear_q8, dequantize_pifa,
+                                 q8_param_bytes, quantize_pifa)
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models.linear import apply_linear, pifa_linear
+import repro.models.layers as L
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 9),
+                                           (False, 0)])
+@pytest.mark.parametrize("shape", [(2, 37, 53, 8, 4, 16),
+                                   (1, 128, 128, 2, 2, 32)])
+def test_flash_kernel_matches_mha(shape, causal, window):
+    b, sq, sk, h, hkv, d = shape
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sk, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sk, hkv, d)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    win = jnp.int32(window) if window else None
+    ref = L.mha(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_kernel_vs_own_ref_padding():
+    rng = np.random.default_rng(1)
+    b, sq, sk, h, d = 1, 50, 70, 3, 8  # deliberately non-multiples
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sk, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sk, h, d)), jnp.float32)
+    out = flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+    ref = flash_attention(q, k, v, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_quantized_pifa_roundtrip_and_apply():
+    rng = np.random.default_rng(2)
+    m, n, r = 96, 80, 32
+    w = rng.normal(size=(m, r)) @ rng.normal(size=(r, n)) / np.sqrt(n)
+    f = pivoting_factorize(w, r)
+    p = pifa_linear(f, dtype=jnp.float32)
+    x = jnp.asarray(rng.normal(size=(6, n)), jnp.float32)
+    y_ref = apply_linear(p, x)
+
+    q = quantize_pifa(p)
+    y_q = apply_linear_q8(q, x)
+    rel = float(jnp.abs(y_q - y_ref).max() / (jnp.abs(y_ref).max() + 1e-9))
+    assert rel < 0.05          # int8 rounding only
+
+    # dequantized params run through the standard dispatch
+    y_dq = apply_linear(dequantize_pifa(q), x)
+    np.testing.assert_allclose(np.asarray(y_dq), np.asarray(y_q),
+                               rtol=1e-5, atol=1e-5)
+
+    # byte accounting: ~1 byte/param + scales + int32 perm
+    fp_bytes = p["wp"].size * 4 + p["c"].size * 4 + p["inv_perm"].size * 4
+    assert q8_param_bytes(q) < 0.45 * fp_bytes

@@ -1,0 +1,71 @@
+"""Permutation folding (beyond-paper, core/folding.py) is lossless."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.folding import fold_mlp
+from repro.core.pifa import pivoting_factorize
+from repro.models.layers import mlp_block
+from repro.models.linear import dense_linear, pifa_linear, lowrank_linear
+
+
+def _pifa_lin(rng, m, n, r, bias=False):
+    w = rng.normal(size=(m, r)) @ rng.normal(size=(r, n)) / np.sqrt(n)
+    f = pivoting_factorize(w, r)
+    b = jnp.asarray(rng.normal(size=(m,)), jnp.float32) if bias else None
+    return pifa_linear(f, bias=b, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("gated", [False, True])
+@pytest.mark.parametrize("bias", [False, True])
+def test_fold_mlp_equivalence(gated, bias):
+    rng = np.random.default_rng(0)
+    d, ff, r = 32, 48, 12
+    up = _pifa_lin(rng, ff, d, r, bias=bias)
+    down = _pifa_lin(rng, d, ff, r, bias=bias)
+    gate = _pifa_lin(rng, ff, d, r, bias=bias) if gated else None
+
+    mlp = {"up": up, "down": down}
+    if gate is not None:
+        mlp["gate"] = gate
+    x = jnp.asarray(rng.normal(size=(5, d)), jnp.float32)
+    y_ref = mlp_block(mlp, x)
+
+    fup, fdown, fgate = fold_mlp(up, down, gate)
+    fm = {"up": fup, "down": fdown}
+    if fgate is not None:
+        fm["gate"] = fgate
+    y_fold = mlp_block(fm, x)
+    np.testing.assert_allclose(np.asarray(y_fold), np.asarray(y_ref),
+                               rtol=5e-5, atol=5e-5)
+    # the up gather is gone
+    assert "inv_perm" not in fup
+
+
+@pytest.mark.parametrize("down_kind", ["dense", "lowrank", "pifa"])
+def test_fold_into_any_consumer(down_kind):
+    rng = np.random.default_rng(1)
+    d, ff, r = 24, 40, 10
+    up = _pifa_lin(rng, ff, d, r)
+    if down_kind == "dense":
+        down = {"w": jnp.asarray(rng.normal(size=(d, ff)), jnp.float32)}
+    elif down_kind == "lowrank":
+        down = lowrank_linear(rng.normal(size=(d, 8)),
+                              rng.normal(size=(8, ff)), dtype=jnp.float32)
+    else:
+        down = _pifa_lin(rng, d, ff, 8)
+    x = jnp.asarray(rng.normal(size=(3, d)), jnp.float32)
+    y_ref = mlp_block({"up": up, "down": down}, x)
+    fup, fdown, _ = fold_mlp(up, down, None)
+    y_fold = mlp_block({"up": fup, "down": fdown}, x)
+    np.testing.assert_allclose(np.asarray(y_fold), np.asarray(y_ref),
+                               rtol=5e-5, atol=5e-5)
+
+
+def test_fold_noop_for_dense_up():
+    rng = np.random.default_rng(2)
+    up = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)}
+    down = {"w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)}
+    fup, fdown, fgate = fold_mlp(up, down, None)
+    assert fup is up and fdown is down and fgate is None

@@ -1,0 +1,128 @@
+"""Trip-count-aware HLO cost model (parallel/hlo_cost.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel.hlo_cost import analyze_hlo_text
+from repro.parallel.hlo_stats import collective_bytes as legacy_collective
+
+
+def _scan_fn(n_layers, unroll=1):
+    def f(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, ws, unroll=unroll)
+        return c
+    return f
+
+
+def test_scan_flops_scale_with_trip_count():
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    vals = {}
+    for L in (2, 8):
+        ws = jax.ShapeDtypeStruct((L, 128, 128), jnp.float32)
+        txt = jax.jit(_scan_fn(L)).lower(ws, x).compile().as_text()
+        vals[L] = analyze_hlo_text(txt)
+    expect = lambda L: 2 * 64 * 128 * 128 * L
+    for L, r in vals.items():
+        assert abs(r.flops - expect(L)) / expect(L) < 0.05
+        assert r.num_whiles == 1
+        assert r.max_trip_count == L
+
+
+def test_scan_equals_unroll():
+    L = 4
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+    scan_r = analyze_hlo_text(
+        jax.jit(_scan_fn(L)).lower(ws, x).compile().as_text())
+    unroll_r = analyze_hlo_text(
+        jax.jit(_scan_fn(L, unroll=L)).lower(ws, x).compile().as_text())
+    assert abs(scan_r.flops - unroll_r.flops) / unroll_r.flops < 0.05
+
+
+def test_nested_scan_multiplies():
+    def f(x):
+        def outer(c, _):
+            def inner(ci, __):
+                return jnp.tanh(ci @ ci), None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    r = analyze_hlo_text(jax.jit(f).lower(x).compile().as_text())
+    expect = 2 * 32 * 32 * 32 * 15  # 5 * 3 dots
+    assert abs(r.flops - expect) / expect < 0.1
+
+
+def test_dot_contraction_dims_parsed():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    a = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+    r = analyze_hlo_text(jax.jit(f).lower(a, b).compile().as_text())
+    expect = 2 * 4 * 8 * 32 * 16
+    assert abs(r.flops - expect) / expect < 0.05
+
+
+def test_dus_counts_slice_not_buffer():
+    def f(buf, x):
+        return jax.lax.dynamic_update_slice(buf, x, (0, 0))
+    buf = jax.ShapeDtypeStruct((4096, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((1, 256), jnp.float32)
+    r = analyze_hlo_text(jax.jit(f, donate_argnums=(0,)).lower(buf, x)
+                         .compile().as_text())
+    # in-place: ~2 * slice bytes, NOT the 4 MB buffer
+    assert r.bytes_accessed < 64 * 1024
+
+
+def test_parser_handles_synthetic_collectives():
+    txt = """
+HloModule test
+
+ENTRY %main (p0: f32[128,64]) -> f32[128,64] {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  %ag = f32[512,64]{1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar = f32[128,64]{1,0} all-reduce(%p0), to_apply=%add
+  ROOT %out = f32[128,64]{1,0} add(%ar, %ar)
+}
+"""
+    r = analyze_hlo_text(txt)
+    assert r.collective_breakdown["all-gather"] == 128 * 64 * 4
+    assert r.collective_breakdown["all-reduce"] == 128 * 64 * 4
+
+
+def test_slice_fusion_counted_as_slice():
+    """Per-layer weight slicing out of stacked scan xs must cost the
+    slice, not the stack (x trip count)."""
+    def f(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, ws)
+        return c
+
+    L = 16
+    ws = jax.ShapeDtypeStruct((L, 128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+    r = analyze_hlo_text(jax.jit(f).lower(ws, x).compile().as_text())
+    stack_bytes = L * 128 * 128 * 4
+    # if each of the L iterations were charged the full stack, bytes
+    # would exceed L * stack; the slice accounting keeps it ~2x stack.
+    assert r.bytes_accessed < 6 * stack_bytes
+
+
+def test_dus_under_convert_root():
+    """Cache updates fused under a convert root still count as slices."""
+    def f(buf, x):
+        out = jax.lax.dynamic_update_slice(buf.astype(jnp.float32),
+                                           x, (0, 0))
+        return out.astype(jnp.bfloat16)
+
+    buf = jax.ShapeDtypeStruct((8192, 256), jnp.bfloat16)
+    x = jax.ShapeDtypeStruct((1, 256), jnp.float32)
+    r = analyze_hlo_text(jax.jit(f, donate_argnums=(0,)).lower(buf, x)
+                         .compile().as_text())
+    assert r.bytes_accessed < 1024 * 1024  # not the 4 MB buffer

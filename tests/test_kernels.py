@@ -1,0 +1,119 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.lowrank_matmul.ops import lowrank_matmul, matmul
+from repro.kernels.lowrank_matmul.ref import lowrank_matmul_ref, matmul_ref
+from repro.kernels.pifa_matmul.ops import pifa_matmul
+from repro.kernels.pifa_matmul.ref import pifa_layer_ref, pifa_matmul_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+
+def _rel_err(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return np.abs(a - b).max() / (np.abs(b).max() + 1e-9)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 5e-6),
+                                       (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("shape", [(256, 256, 128, 128),
+                                   (130, 200, 96, 160),
+                                   (17, 100, 40, 60),
+                                   (64, 512, 256, 384)])
+def test_pifa_kernel_matches_ref(shape, dtype, tol):
+    b, n, r, mnp = shape
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, n)), dtype)
+    wp = jnp.asarray(rng.normal(size=(r, n)) / np.sqrt(n), dtype)
+    c = jnp.asarray(rng.normal(size=(mnp, r)) / np.sqrt(r), dtype)
+    y = pifa_matmul(x, wp, c, interpret=True, use_kernel=True)
+    yref = pifa_matmul_ref(x, wp, c)
+    assert _rel_err(y, yref) < tol
+
+
+def test_pifa_kernel_with_gather():
+    rng = np.random.default_rng(1)
+    b, n, r, mnp = 32, 64, 16, 24
+    x = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
+    wp = jnp.asarray(rng.normal(size=(r, n)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(mnp, r)), jnp.float32)
+    inv = jnp.asarray(np.random.default_rng(2).permutation(r + mnp),
+                      jnp.int32)
+    y = pifa_matmul(x, wp, c, inv, interpret=True)
+    yref = pifa_layer_ref(x, wp, c, inv)
+    assert _rel_err(y, yref) < 1e-5
+
+
+def test_pifa_kernel_leading_dims():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 7, 48)), jnp.float32)
+    wp = jnp.asarray(rng.normal(size=(16, 48)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(20, 16)), jnp.float32)
+    y = pifa_matmul(x, wp, c, interpret=True)
+    assert y.shape == (2, 7, 36)
+    yref = pifa_matmul_ref(x.reshape(-1, 48), wp, c).reshape(2, 7, 36)
+    assert _rel_err(y, yref) < 1e-5
+
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.integers(1, 80), n=st.integers(4, 160), r=st.integers(2, 64),
+       mnp=st.integers(2, 96))
+def test_pifa_kernel_property(b, n, r, mnp):
+    rng = np.random.default_rng(b * 7 + n)
+    x = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
+    wp = jnp.asarray(rng.normal(size=(r, n)) / np.sqrt(n), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(mnp, r)) / np.sqrt(r), jnp.float32)
+    y = pifa_matmul(x, wp, c, interpret=True)
+    assert _rel_err(y, pifa_matmul_ref(x, wp, c)) < 1e-4
+
+
+@pytest.mark.parametrize("dims", [(64, 96, 80), (128, 128, 128),
+                                  (33, 250, 70)])
+def test_matmul_kernel(dims):
+    b, n, m = dims
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    assert _rel_err(matmul(x, w, interpret=True), matmul_ref(x, w)) < 1e-5
+
+
+def test_lowrank_two_stage():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(70, 200)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(150, 48)), jnp.float32)
+    vt = jnp.asarray(rng.normal(size=(48, 200)), jnp.float32)
+    y = lowrank_matmul(x, u, vt, interpret=True)
+    assert _rel_err(y, lowrank_matmul_ref(x, u, vt)) < 1e-5
+
+
+@pytest.mark.parametrize("seq,chunk", [(32, 16), (50, 16), (64, 64)])
+def test_ssd_scan_kernel(seq, chunk):
+    rng = np.random.default_rng(2)
+    b, h, p, n = 2, 3, 8, 4
+    x = jnp.asarray(rng.normal(size=(b, seq, h, p)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, seq, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, seq, n)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, seq, h))) * 0.1, jnp.float32)
+    da = -0.5 * dt
+    yk, hk = ssd_scan(x, bm, cm, dt, da, chunk=chunk, interpret=True,
+                      use_kernel=True)
+    yr, hr = ssd_scan(x, bm, cm, dt, da, chunk=chunk, use_kernel=False)
+    assert _rel_err(yk, yr) < 1e-5
+    assert _rel_err(hk, hr) < 1e-5
+
+
+def test_ssd_scan_bf16():
+    rng = np.random.default_rng(3)
+    b, seq, h, p, n = 1, 32, 2, 4, 4
+    x = jnp.asarray(rng.normal(size=(b, seq, h, p)), jnp.bfloat16)
+    bm = jnp.asarray(rng.normal(size=(b, seq, n)), jnp.bfloat16)
+    cm = jnp.asarray(rng.normal(size=(b, seq, n)), jnp.bfloat16)
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, seq, h))) * 0.1, jnp.float32)
+    da = -0.5 * dt
+    yk, _ = ssd_scan(x, bm, cm, dt, da, chunk=16, interpret=True)
+    yr, _ = ssd_scan(x, bm, cm, dt, da, chunk=16, use_kernel=False)
+    assert _rel_err(yk, yr) < 3e-2

@@ -1,0 +1,145 @@
+"""End-to-end MPIFA pipeline on the tiny model (Alg. 3 + Table 5 logic)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.mpifa import (MpifaConfig, compress_expert_params,
+                              compress_linear_params, compress_transformer)
+from repro.models.linear import linear_param_count, linear_weight
+from repro.models.model import build_model
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tiny")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 48), 0,
+                                cfg.vocab_size) for i in range(3)]
+    test = jax.random.randint(jax.random.PRNGKey(99), (4, 48), 0,
+                              cfg.vocab_size)
+    ref = model.forward(params, test)
+    return cfg, model, params, calib, test, ref
+
+
+def _block_params(tree):
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def _kl(ref, logits):
+    lp = jax.nn.log_softmax(ref, -1)
+    lq = jax.nn.log_softmax(logits, -1)
+    return float(jnp.mean(jnp.sum(jnp.exp(lp) * (lp - lq), -1)))
+
+
+def test_density_accounting(tiny):
+    cfg, model, params, calib, test, ref = tiny
+    mc = MpifaConfig(density=0.5, reconstruct="none", prune="svd")
+    cp = compress_transformer(model, params, calib, mc)
+    dense_blocks = _block_params(params["blocks"])
+    comp_blocks = _block_params(cp["blocks"])
+    assert abs(comp_blocks / dense_blocks - 0.5) < 0.02
+
+
+def test_pifa_is_lossless_vs_lowrank_same_rank(tiny):
+    """W+M+PIFA at the SAME RANK == W+M (PIFA adds zero loss)."""
+    cfg, model, params, calib, test, ref = tiny
+    base = MpifaConfig(density=0.5, final_repr="lowrank")
+    lr = compress_transformer(model, params, calib, base)
+    # same ranks, re-encoded as PIFA: force identical rank via lowrank map
+    import repro.core.mpifa as M
+    orig = M.target_rank
+    try:
+        M.target_rank = lambda cfg_, m, n, name="": orig(
+            base, m, n, name)  # lowrank-rank for both
+        pf = compress_transformer(
+            model, params, calib,
+            MpifaConfig(density=0.5, final_repr="pifa", fold=False))
+    finally:
+        M.target_rank = orig
+    out_lr = model.forward_unstacked(lr, test)
+    out_pf = model.forward_unstacked(pf, test)
+    np.testing.assert_allclose(np.asarray(out_pf), np.asarray(out_lr),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mpifa_beats_lowrank_at_equal_density(tiny):
+    """At equal density PIFA's extra rank must not hurt (Tables 2/5)."""
+    cfg, model, params, calib, test, ref = tiny
+    kl_lr = _kl(ref, model.forward_unstacked(
+        compress_transformer(model, params, calib,
+                             MpifaConfig(density=0.5, final_repr="lowrank")),
+        test))
+    kl_pf = _kl(ref, model.forward_unstacked(
+        compress_transformer(model, params, calib,
+                             MpifaConfig(density=0.5, final_repr="pifa")),
+        test))
+    assert kl_pf <= kl_lr * 1.05  # PIFA >= lowrank at equal budget
+
+
+def test_folding_is_lossless(tiny):
+    cfg, model, params, calib, test, ref = tiny
+    kw = dict(density=0.5, final_repr="pifa")
+    folded = compress_transformer(model, params, calib,
+                                  MpifaConfig(fold=True, **kw))
+    unfolded = compress_transformer(model, params, calib,
+                                    MpifaConfig(fold=False, **kw))
+    yf = model.forward_unstacked(folded, test)
+    yu = model.forward_unstacked(unfolded, test)
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(yu),
+                               rtol=2e-3, atol=2e-3)
+    # and strictly fewer stored parameters (inv_perm dropped for up)
+    assert _block_params(folded["blocks"]) < _block_params(unfolded["blocks"])
+
+
+def test_whiten_beats_vanilla_svd(tiny):
+    cfg, model, params, calib, test, ref = tiny
+    kl_svd = _kl(ref, model.forward_unstacked(
+        compress_transformer(model, params, calib,
+                             MpifaConfig(density=0.5, prune="svd",
+                                         reconstruct="none",
+                                         final_repr="lowrank")), test))
+    kl_w = _kl(ref, model.forward_unstacked(
+        compress_transformer(model, params, calib,
+                             MpifaConfig(density=0.5, prune="whiten",
+                                         reconstruct="none",
+                                         final_repr="lowrank")), test))
+    assert kl_w <= kl_svd * 1.05
+
+
+def test_compress_expert_params():
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.normal(size=(4, 24, 16)), jnp.float32)}
+    mc = MpifaConfig(density=0.5, prune="svd", reconstruct="none")
+    cp = compress_expert_params(mc, p)
+    assert set(cp) == {"wp", "c", "inv_perm"}
+    assert cp["wp"].shape[0] == 4
+    # PIFA is lossless: per-expert effective weight == the SVD truncation
+    from repro.core.lowrank import svd_lowrank
+    r = cp["wp"].shape[1]
+    for e in range(4):
+        w = np.asarray(p["w"][e], np.float64)
+        u, vt = svd_lowrank(w, r)
+        eff = np.concatenate(
+            [np.asarray(cp["wp"][e]),
+             np.asarray(cp["c"][e]) @ np.asarray(cp["wp"][e])])
+        eff = eff[np.asarray(cp["inv_perm"][e])]
+        np.testing.assert_allclose(eff, u @ vt, rtol=2e-3, atol=2e-3)
+    # round-trip apply check
+    from repro.models.layers import apply_expert_linear
+    x = jnp.asarray(rng.normal(size=(4, 5, 16)), jnp.float32)
+    y = apply_expert_linear(cp, x)
+    assert y.shape == (4, 5, 24)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_compress_linear_params_data_free():
+    rng = np.random.default_rng(1)
+    p = {"w": jnp.asarray(rng.normal(size=(32, 20)), jnp.float32),
+         "b": jnp.zeros((32,), jnp.float32)}
+    cp = compress_linear_params(
+        MpifaConfig(density=0.6, prune="svd", reconstruct="none"), p)
+    assert "wp" in cp and "b" in cp
+    assert linear_param_count(cp) <= linear_param_count(p)

@@ -1,0 +1,106 @@
+"""M reconstruction closed forms (Eqs. 4/5/8/9 + App. A)."""
+import numpy as np
+import pytest
+
+from repro.core.lowrank import svd_lowrank, whitened_svd
+from repro.core.reconstruct import (CalibStats, reconstruct_uv, solve_u,
+                                    solve_u_fullbatch, solve_vt)
+
+
+def make_problem(seed=0, m=48, n=40, r=12, N=400, noise=0.3):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(m, n))
+    xo = rng.normal(size=(N, n))
+    xu = xo + noise * rng.normal(size=(N, n))
+    u, vt = svd_lowrank(w, r)
+    return rng, w, xo, xu, u, vt
+
+
+def test_online_equals_fullbatch_eq4_eq5():
+    """Associativity: Eq. 5 accumulated stats == Eq. 4 full batch."""
+    _, w, xo, xu, u, vt = make_problem()
+    st = CalibStats(40, 48)
+    for i in range(0, 400, 37):  # uneven chunks on purpose
+        xb = xu[i:i + 37]
+        st.update_inputs(w, xb, xb, lam=0.0)  # SVD-LLM target: W X_u
+    u_online = solve_u(st, vt)
+    u_batch = solve_u_fullbatch(w, vt, xu.T)
+    np.testing.assert_allclose(u_online, u_batch, rtol=1e-8, atol=1e-8)
+
+
+def test_solve_u_is_least_squares_optimum():
+    """Perturbing the Eq. 5 solution can only increase the objective."""
+    _, w, xo, xu, u, vt = make_problem()
+    st = CalibStats(40, 48)
+    st.update_inputs(w, xo, xu, lam=0.25)
+    u_star = solve_u(st, vt)
+    yt = (0.25 * xo + 0.75 * xu) @ w.T
+
+    def obj(uu):
+        return np.linalg.norm(yt - (xu @ vt.T) @ uu.T) ** 2
+
+    base = obj(u_star)
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        assert obj(u_star + 1e-3 * rng.normal(size=u_star.shape)) >= base - 1e-9
+
+
+def test_solve_vt_matches_appendix_a():
+    """V^T = (U^T U)^{-1} U^T Y X^T (X X^T)^{-1} (alpha=0 limit)."""
+    _, w, xo, xu, u, vt = make_problem(N=600)
+    st = CalibStats(40, 48)
+    st.update_inputs(w, xu, xu, lam=1.0)  # Y_t = W X_u, X = X_u
+    vt_star = solve_vt(st, u, w=None, alpha=0.0)
+    x = xu.T
+    y = w @ x
+    expect = (np.linalg.pinv(u.T @ u) @ u.T @ y @ x.T
+              @ np.linalg.pinv(x @ x.T))
+    np.testing.assert_allclose(vt_star, expect, rtol=1e-6, atol=1e-6)
+
+
+def test_alpha_regularization_fixes_singularity():
+    """Singular XX^T (fewer samples than dims) -> alpha ridge keeps the
+    solve finite and pulls U Vt toward W (App. B.1)."""
+    rng = np.random.default_rng(2)
+    m, n, r = 24, 32, 6
+    w = rng.normal(size=(m, n))
+    x = rng.normal(size=(8, n))  # 8 samples < 32 dims: XX^T singular
+    u, vt = svd_lowrank(w, r)
+    st = CalibStats(n, m)
+    st.update_inputs(w, x, x, lam=0.25)
+    vt_r = solve_vt(st, u, w=w, alpha=1e-3)
+    assert np.isfinite(vt_r).all()
+
+
+def test_m_reduces_dense_flow_error():
+    """The point of M: error vs the DENSE data flow shrinks (Sec. 4)."""
+    _, w, xo, xu, u, vt = make_problem(noise=0.5)
+    st = CalibStats(40, 48)
+    st.update_inputs(w, xo, xu, lam=0.25)
+    u2, vt2 = reconstruct_uv(w, u, vt, st, update_v=True)
+    before = np.linalg.norm(w @ xo.T - (u @ vt) @ xu.T)
+    after = np.linalg.norm(w @ xo.T - (u2 @ vt2) @ xu.T)
+    assert after < before
+
+
+def test_whitening_beats_vanilla_on_calibration_loss():
+    rng = np.random.default_rng(3)
+    n, m, r, N = 32, 48, 8, 500
+    cov_half = rng.normal(size=(n, n)) / np.sqrt(n)
+    x = (cov_half @ rng.normal(size=(n, N)))
+    w = rng.normal(size=(m, n))
+    u1, v1 = svd_lowrank(w, r)
+    u2, v2 = whitened_svd(w, x @ x.T, r)
+    e_plain = np.linalg.norm(w @ x - (u1 @ v1) @ x)
+    e_white = np.linalg.norm(w @ x - (u2 @ v2) @ x)
+    assert e_white <= e_plain + 1e-9
+
+
+def test_stats_count_and_shapes():
+    st = CalibStats(10, 20)
+    st.update(np.ones((5, 10)), np.ones((5, 20)))
+    st.update(np.ones((3, 10)), np.ones((3, 20)))
+    assert st.count == 8
+    assert st.xxt.shape == (10, 10)
+    assert st.ytxt.shape == (20, 10)
+    np.testing.assert_allclose(st.xxt, 8 * np.ones((10, 10)))

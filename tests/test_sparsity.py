@@ -1,0 +1,78 @@
+"""MPIFA_NS density allocation (App. B.2) + 2:4 baselines."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.semistructured import (check_nm, magnitude_score, nm_mask,
+                                       prune_nm, ria_score, wanda_score)
+from repro.core.sparsity import (ModuleBudget, allocate_densities,
+                                 owl_layer_densities, type_densities)
+
+
+def budgets(n_layers=4):
+    out = []
+    for i in range(n_layers):
+        out.append(ModuleBudget(f"b{i}/attn/q", i, "attn", 64 * 64))
+        out.append(ModuleBudget(f"b{i}/mlp/up", i, "mlp", 64 * 192))
+    return out
+
+
+def test_type_densities_preserve_global_budget():
+    bs = budgets()
+    for label, d in type_densities(bs, 0.5).items():
+        p_attn = sum(b.params for b in bs if b.kind == "attn")
+        p_mlp = sum(b.params for b in bs if b.kind == "mlp")
+        got = d["attn"] * p_attn + d["mlp"] * p_mlp
+        assert got == pytest.approx(0.5 * (p_attn + p_mlp), rel=1e-9)
+
+
+def test_owl_density_normalized():
+    scores = [0.1, 0.5, 0.9, 0.2]
+    params = [100, 100, 100, 100]
+    d = owl_layer_densities(scores, params, 0.5, lam=0.08)
+    assert d.shape == (4,)
+    assert float((d * params).sum() / sum(params)) == pytest.approx(0.5,
+                                                                    abs=1e-6)
+    assert d[2] > d[0]  # more outliers -> more density
+
+
+@settings(max_examples=30, deadline=None)
+@given(gd=st.floats(0.2, 0.9), nl=st.integers(1, 8),
+       lam=st.floats(0.0, 0.1))
+def test_allocation_invariants(gd, nl, lam):
+    bs = budgets(nl)
+    rng = np.random.default_rng(nl)
+    layer_d = {i: float(x) for i, x in enumerate(
+        owl_layer_densities(rng.random(nl), [1] * nl, gd, lam))}
+    alloc = allocate_densities(bs, gd, layer_density=layer_d,
+                               type_density={"attn": gd, "mlp": gd})
+    total = sum(b.params for b in bs)
+    got = sum(alloc[b.name] * b.params for b in bs)
+    assert got == pytest.approx(gd * total, rel=0.02)
+    assert all(0.02 <= v <= 1.0 for v in alloc.values())
+
+
+def test_nm_mask_validity():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(16, 64))
+    for scorer, act in [(magnitude_score, None),
+                        (wanda_score, np.abs(rng.normal(size=64))),
+                        (ria_score, np.abs(rng.normal(size=64)))]:
+        pruned = prune_nm(w, scorer, act)
+        assert check_nm(pruned, 2, 4)
+        # exactly half the weights survive
+        assert (pruned != 0).sum() == w.size // 2
+
+
+def test_nm_mask_keeps_topk_magnitude():
+    w = np.asarray([[1.0, -5.0, 0.1, 3.0]])
+    m = nm_mask(magnitude_score(w))
+    np.testing.assert_array_equal(m, [[False, True, False, True]])
+
+
+def test_nm_handles_nondivisible_width():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(4, 10))  # 10 % 4 != 0
+    pruned = prune_nm(w)
+    assert check_nm(pruned)
+    assert pruned.shape == w.shape
