@@ -21,7 +21,7 @@ from repro.core.mpifa import MpifaConfig, compress_transformer
 from repro.data.calibration import calibration_batches
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.launch.serve import generate
-from repro.models.model import build_model, make_train_step
+from repro.models.model import build_model, make_engine, make_train_step
 from repro.optim.adamw import AdamW
 
 
@@ -43,10 +43,13 @@ def main():
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 16)),
                           jnp.int32)
-    toks_d, tps_d = generate(model, params, prompts, 32, 64)
+    engine = make_engine(model)
+    res_d = engine.generate(params, prompts, 32, 64)
+    _, tps_leg = generate(model, params, prompts, 32, 64)
     nbytes = lambda t: sum(x.size * x.dtype.itemsize
                            for x in jax.tree.leaves(t))
-    print(f"[2] dense serve: {tps_d:.1f} tok/s, {nbytes(params)/1e6:.1f} MB")
+    print(f"[2] dense serve: engine {res_d.tokens_per_sec:.1f} tok/s "
+          f"(legacy loop {tps_leg:.1f}), {nbytes(params)/1e6:.1f} MB")
 
     print("[3] MPIFA compression (density 0.55, lam 0.25)...")
     t0 = time.time()
@@ -54,10 +57,11 @@ def main():
         model, params, calibration_batches(cfg.vocab_size, 8, 64),
         MpifaConfig(density=0.55))
     print(f"    compressed in {time.time()-t0:.1f}s")
-    toks_c, tps_c = generate(model, cp, prompts, 32, 64, unstacked=True)
-    agree = float(jnp.mean((toks_c == toks_d).astype(jnp.float32)))
-    print(f"[4] PIFA serve: {tps_c:.1f} tok/s, {nbytes(cp)/1e6:.1f} MB, "
-          f"token agreement {agree:.3f}")
+    res_c = engine.generate(cp, prompts, 32, 64)
+    agree = float(jnp.mean((res_c.tokens == res_d.tokens)
+                           .astype(jnp.float32)))
+    print(f"[4] PIFA serve: engine {res_c.tokens_per_sec:.1f} tok/s, "
+          f"{nbytes(cp)/1e6:.1f} MB, token agreement {agree:.3f}")
 
 
 if __name__ == "__main__":

@@ -38,7 +38,8 @@ from repro.core import lowrank as LR
 from repro.core.folding import fold_mlp
 from repro.core.pifa import PifaFactors, pivoting_factorize
 from repro.core.reconstruct import CalibStats, reconstruct_uv, solve_u_fullbatch
-from repro.models.linear import linear_weight, lowrank_linear, pifa_linear
+from repro.models.linear import (linear_kind, linear_weight, lowrank_linear,
+                                 pifa_linear)
 
 Pytree = Any
 
@@ -235,6 +236,348 @@ def compress_linear_params(cfg: MpifaConfig, p: Pytree,
     r = target_rank(cfg, m, n, name=name)
     u, vt = compress_matrix(cfg, w, r, stats)
     return finalize_linear(cfg, u, vt, bias=p.get("b"))
+
+
+# ---------------------------------------------------------------------------
+# Rank padding + bucketed restacking (the MPIFA_NS serving fast path).
+#
+# Heterogeneous per-module densities (MPIFA_NS) give every block a
+# different PIFA rank, so list-form blocks cannot be stacked for the
+# scanned KV-cache serving path and decoding degraded to an O(T^2)
+# full-recompute loop.  Zero-padding restores uniformity EXACTLY:
+#
+#   * wp gains zero rows        -> the extra y_p entries are exactly 0
+#   * c  gains zero columns     -> the zero y_p entries contribute 0
+#   * c  gains zero rows        -> the extra y_np entries are never
+#                                  gathered (inv_perm only addresses
+#                                  real outputs)
+#   * inv_perm entries >= r shift by (R - r): y_np now starts at R
+#
+# (the same argument `kernels/pifa_matmul/ops.py` uses for MXU block
+# alignment, applied at the layer level).  Blocks padded to a common
+# per-path (R, M_np) share one pytree structure and re-stack; contiguous
+# runs of blocks with similar ranks can form separate BUCKETS to bound
+# the padding FLOP waste (DP-partitioned below).
+# ---------------------------------------------------------------------------
+
+def _pad2(a: jax.Array, rows: int, cols: int) -> jax.Array:
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+def _cat_position_map(r: int, R: int, m: int) -> np.ndarray:
+    """Old concat position k -> padded concat position (y_np shifts)."""
+    pos = np.arange(m)
+    return np.where(pos < r, pos, pos + (R - r))
+
+
+def pifa_rank(p: Pytree) -> Tuple[int, int]:
+    """(rank, non-pivot rows) of a pifa / pifa_folded linear."""
+    return int(p["wp"].shape[0]), int(p["c"].shape[0])
+
+
+def pad_pifa_rank(p: Pytree, R: int, Mnp: int) -> Pytree:
+    """Zero-pad a pifa linear (with inv_perm) to rank R / Mnp c-rows."""
+    r, mnp = pifa_rank(p)
+    assert R >= r and Mnp >= mnp, (r, mnp, R, Mnp)
+    q = dict(p)
+    q["wp"] = jnp.pad(p["wp"], ((0, R - r), (0, 0)))
+    q["c"] = _pad2(p["c"], Mnp, R)
+    inv = np.asarray(p["inv_perm"])
+    q["inv_perm"] = jnp.asarray(np.where(inv >= r, inv + (R - r), inv),
+                                dtype=jnp.int32)
+    return q
+
+
+def pad_lowrank_rank(p: Pytree, R: int) -> Pytree:
+    r = p["u"].shape[1]
+    assert R >= r
+    q = dict(p)
+    q["u"] = jnp.pad(p["u"], ((0, 0), (0, R - r)))
+    q["vt"] = jnp.pad(p["vt"], ((0, R - r), (0, 0)))
+    return q
+
+
+def _scatter_rows(a: jax.Array, posmap: np.ndarray, new_len: int) -> jax.Array:
+    out = jnp.zeros((new_len,) + a.shape[1:], dtype=a.dtype)
+    return out.at[jnp.asarray(posmap)].set(a)
+
+
+def _scatter_cols(a: jax.Array, posmap: np.ndarray, new_len: int) -> jax.Array:
+    out = jnp.zeros(a.shape[:-1] + (new_len,), dtype=a.dtype)
+    return out.at[..., jnp.asarray(posmap)].set(a)
+
+
+def _scatter_output_positions(p: Pytree, posmap: np.ndarray,
+                              new_len: int) -> Pytree:
+    """Producer now emits its outputs at scattered positions (length
+    new_len, zeros/garbage-masked elsewhere).  Used for the gate of a
+    folded MLP whose `up` grew padded concat slots."""
+    k = linear_kind(p)
+    q = dict(p)
+    if k == "dense":
+        q["w"] = _scatter_rows(p["w"], posmap, new_len)
+    elif k == "lowrank":
+        q["u"] = _scatter_rows(p["u"], posmap, new_len)
+    elif k == "pifa":
+        # inserted slots gather cat entry 0 — finite garbage, multiplied
+        # by up's EXACT zero at the same slot, so the product is 0.0
+        q["inv_perm"] = _scatter_rows(p["inv_perm"].astype(jnp.int32),
+                                      posmap, new_len)
+    else:
+        raise ValueError("cannot scatter a folded pifa producer")
+    if "b" in p:
+        q["b"] = _scatter_rows(p["b"], posmap, new_len)
+    return q
+
+
+def _scatter_input_positions(p: Pytree, posmap: np.ndarray,
+                             new_len: int) -> Pytree:
+    """Consumer reads its inputs from scattered positions (padded slots
+    hit zero weight columns)."""
+    k = linear_kind(p)
+    q = dict(p)
+    if k == "dense":
+        q["w"] = _scatter_cols(p["w"], posmap, new_len)
+    elif k == "lowrank":
+        q["vt"] = _scatter_cols(p["vt"], posmap, new_len)
+    else:
+        q["wp"] = _scatter_cols(p["wp"], posmap, new_len)
+    return q
+
+
+def _pad_linear(p: Pytree, target: Tuple[int, int]) -> Pytree:
+    k = linear_kind(p)
+    if k == "pifa":
+        return pad_pifa_rank(p, target[0], target[1])
+    if k == "lowrank":
+        return pad_lowrank_rank(p, target[0])
+    if k == "dense":
+        return p
+    raise ValueError("pad a folded layer through pad_mlp_group")
+
+
+def _linear_target(p: Pytree) -> Optional[Tuple[int, int]]:
+    k = linear_kind(p)
+    if k in ("pifa", "pifa_folded"):
+        return pifa_rank(p)
+    if k == "lowrank":
+        return (int(p["u"].shape[1]), 0)
+    return (0, 0)  # dense: nothing to pad
+
+
+def pad_mlp_group(mlp: Pytree, targets: Mapping[str, Tuple[int, int]]
+                  ) -> Pytree:
+    """Pad an MLP's linears coordinately when `up` is permutation-folded.
+
+    A folded `up` emits concat order directly, so padding its rank
+    inserts zero slots MID-STREAM (positions [r, R)); the gate's output
+    scatter and down's input scatter must move in lockstep.  Lossless:
+    inserted slots carry up==0.0 exactly, so gate garbage there
+    multiplies to 0.0 and down's zero columns ignore them.
+    """
+    up = mlp["up"]
+    out = dict(mlp)
+    if linear_kind(up) != "pifa_folded":
+        for name in ("up", "down", "gate"):
+            if name in mlp:
+                out[name] = _pad_linear(mlp[name], targets[name])
+        return out
+
+    r_u, mnp_u = pifa_rank(up)
+    m_u = r_u + mnp_u
+    R_u, Mnp_u = targets["up"]
+    L = R_u + Mnp_u
+    posmap = _cat_position_map(r_u, R_u, m_u)
+
+    new_up = dict(up)
+    new_up["wp"] = jnp.pad(up["wp"], ((0, R_u - r_u), (0, 0)))
+    new_up["c"] = _pad2(up["c"], Mnp_u, R_u)
+    if "b" in up:
+        new_up["b"] = _scatter_rows(up["b"], posmap, L)
+    out["up"] = new_up
+
+    if "gate" in mlp:
+        g = _pad_linear(mlp["gate"], targets["gate"]) \
+            if linear_kind(mlp["gate"]) != "dense" else mlp["gate"]
+        out["gate"] = _scatter_output_positions(g, posmap, L)
+
+    down = _scatter_input_positions(mlp["down"], posmap, L)
+    if linear_kind(down) != "dense":
+        down = _pad_linear(down, targets["down"])
+    out["down"] = down
+    return out
+
+
+def _walk_linears(tree: Pytree, prefix: Tuple[str, ...] = ()):
+    """Yield (path, linear-params) for every linear dict in a block."""
+    if isinstance(tree, Mapping):
+        if any(k in tree for k in ("w", "u", "wp")):
+            yield prefix, tree
+            return
+        for k in sorted(tree):
+            yield from _walk_linears(tree[k], prefix + (k,))
+
+
+def block_rank_signature(bp: Pytree) -> Dict[Tuple[str, ...], Tuple]:
+    """{path: (kind, (r, mnp))} per linear; expert-stacked (3-D) weights
+    are 'opaque:<shapes>' — not paddable, bucketable only when their
+    shapes already agree across blocks (the kind string then matches)."""
+    sig = {}
+    for path, p in _walk_linears(bp):
+        k = linear_kind(p)
+        main = p["w"] if k == "dense" else (p["u"] if k == "lowrank"
+                                            else p["wp"])
+        if main.ndim != 2:
+            shapes = tuple(sorted((kk, tuple(v.shape))
+                                  for kk, v in p.items()))
+            sig[path] = (f"opaque:{shapes}", (0, 0))
+        else:
+            sig[path] = (k, _linear_target(p))
+    return sig
+
+
+def pad_blocks_to_targets(blocks: Sequence[Pytree],
+                          targets: Mapping[Tuple[str, ...], Tuple[int, int]]
+                          ) -> List[Pytree]:
+    """Pad every block's linears to per-path targets; MLPs with a
+    folded `up` are padded as a coordinated group."""
+    out = []
+    for bp in blocks:
+        new_bp = bp
+        mlp_done = False
+        for path, p in list(_walk_linears(bp)):
+            if path and path[0] == "mlp":
+                if mlp_done:
+                    continue
+                mlp_targets = {name: targets.get(("mlp", name), (0, 0))
+                               for name in ("up", "down", "gate")}
+                new_bp = _set(new_bp, ("mlp",),
+                              pad_mlp_group(new_bp["mlp"], mlp_targets))
+                mlp_done = True
+            elif (linear_kind(p) in ("pifa", "lowrank")
+                  and p[("u" if "u" in p else "wp")].ndim == 2):
+                new_bp = _set(new_bp, path,
+                              _pad_linear(_get(new_bp, path), targets[path]))
+        out.append(new_bp)
+    return out
+
+
+def _segment_targets(signatures) -> Dict[Tuple[str, ...], Tuple[int, int]]:
+    targets: Dict[Tuple[str, ...], Tuple[int, int]] = {}
+    for sig in signatures:
+        for path, (_, t) in sig.items():
+            r0, m0 = targets.get(path, (0, 0))
+            targets[path] = (max(r0, t[0]), max(m0, t[1]))
+    return targets
+
+
+def _segment_cost(signatures) -> float:
+    """Padded parameter count of one bucket (proxy for FLOP waste)."""
+    targets = _segment_targets(signatures)
+    cost = 0.0
+    for sig in signatures:
+        for path, (kind, _) in sig.items():
+            R, Mnp = targets[path]
+            if kind in ("pifa", "pifa_folded"):
+                cost += R * (Mnp + 1)  # wp rows scale with R; c is Mnp x R
+            elif kind == "lowrank":
+                cost += 2 * R
+    return cost
+
+
+def bucket_boundaries(blocks: Sequence[Pytree], max_buckets: int = 1
+                      ) -> Optional[List[Tuple[int, int]]]:
+    """Contiguous [start, end) segments minimizing padded-rank waste.
+
+    Returns None when blocks cannot be unified (different pytree
+    structure or mixed representation kinds at the same path).
+    """
+    sigs = []
+    ref_paths = None
+    for bp in blocks:
+        sig = block_rank_signature(bp)
+        if ref_paths is None:
+            ref_paths = set(sig)
+        elif set(sig) != ref_paths:
+            return None
+        sigs.append(sig)
+    for path in ref_paths:
+        kinds = {s[path][0] for s in sigs}
+        if len(kinds) > 1:
+            return None
+    n = len(blocks)
+    k_max = max(1, min(max_buckets, n))
+    if k_max == 1:
+        return [(0, n)]
+    # DP over contiguous partitions; small per-bucket penalty prefers
+    # fewer scan dispatches when the rank spread doesn't pay for a split.
+    seg = {(i, j): _segment_cost(sigs[i:j])
+           for i in range(n) for j in range(i + 1, n + 1)}
+    penalty = 0.02 * seg[(0, n)] / n
+    best: Dict[Tuple[int, int], Tuple[float, List[Tuple[int, int]]]] = {}
+
+    def solve(i: int, k: int):
+        if i == n:
+            return 0.0, []
+        if (i, k) in best:
+            return best[(i, k)]
+        if k == 1:
+            res = (seg[(i, n)] + penalty, [(i, n)])
+        else:
+            res = None
+            for j in range(i + 1, n + 1):
+                tail_cost, tail = solve(j, k - 1) if j < n else (0.0, [])
+                cand = (seg[(i, j)] + penalty + tail_cost,
+                        [(i, j)] + tail)
+                if res is None or cand[0] < res[0]:
+                    res = cand
+        best[(i, k)] = res
+        return res
+
+    _, parts = solve(0, k_max)
+    return parts
+
+
+def pad_blocks_bucketed(blocks: Sequence[Pytree], max_buckets: int = 1
+                        ) -> Optional[List[List[Pytree]]]:
+    """Partition list-form blocks into contiguous buckets and zero-pad
+    each bucket to uniform per-path ranks; every bucket then stacks.
+    Returns None when padding cannot unify the blocks."""
+    parts = bucket_boundaries(blocks, max_buckets)
+    if parts is None:
+        return None
+    out = []
+    for (i, j) in parts:
+        sigs = [block_rank_signature(b) for b in blocks[i:j]]
+        targets = _segment_targets(sigs)
+        out.append(pad_blocks_to_targets(blocks[i:j], targets))
+    return out
+
+
+def try_stack_blocks(blocks: Sequence[Pytree]) -> Optional[Pytree]:
+    """Stack list-form blocks when structure and shapes already agree
+    (uniform-density compression); None otherwise."""
+    ref = jax.tree_util.tree_structure(blocks[0])
+    shapes0 = [l.shape for l in jax.tree_util.tree_leaves(blocks[0])]
+    for b in blocks[1:]:
+        if (jax.tree_util.tree_structure(b) != ref
+                or [l.shape for l in jax.tree_util.tree_leaves(b)] != shapes0):
+            return None
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *blocks)
+
+
+def pad_and_stack_blocks(blocks: Sequence[Pytree]) -> Optional[Pytree]:
+    """Single-bucket restack: zero-pad heterogeneous-rank list-form
+    blocks to uniform per-path ranks and stack along a new leading
+    layer dim (the form every family's `lax.scan` serving path
+    consumes).  None when the blocks cannot be unified."""
+    buckets = pad_blocks_bucketed(blocks, 1)
+    if buckets is None:
+        return None
+    try:
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *buckets[0])
+    except ValueError:
+        return None  # non-factor leaves disagree; cannot unify
 
 
 def compress_expert_params(cfg: MpifaConfig, p: Pytree, name: str = "") -> Pytree:

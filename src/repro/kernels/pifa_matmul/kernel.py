@@ -35,7 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["pifa_matmul_kernel", "pifa_matmul_call"]
+__all__ = ["pifa_matmul_kernel", "pifa_matmul_call",
+           "pifa_fused_kernel", "pifa_fused_call"]
 
 
 def pifa_matmul_kernel(x_ref, wp_ref, c_ref, out_ref, yp_scratch, *,
@@ -100,3 +101,116 @@ def pifa_matmul_call(x, wp, c, *, block_b: int = 128, block_o: int = 128,
         scratch_shapes=[pltpu.VMEM((block_b, r), jnp.float32)],
         interpret=interpret,
     )(x, wp, c)
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogue variant: bias + inverse-permutation gather in-kernel.
+# ---------------------------------------------------------------------------
+
+def pifa_fused_kernel(x_ref, wp_ref, c_ref, inv_ref, bias_ref, out_ref,
+                      ycat_scratch, *, n_yp_tiles: int, n_np_tiles: int,
+                      block_o: int):
+    """One (batch-tile, stage-tile) grid step of the fully fused layer.
+
+    Three stage bands over the minor (sequential) grid dim ``j``:
+
+      j <  n_yp                    stage 1: y_p tile -> scratch
+      j <  n_yp + n_np             stage 2: y_np tile -> scratch
+      j >= n_yp + n_np             stage 3: gather + bias epilogue -> out
+
+    The epilogue applies the output permutation as a ONE-HOT SELECTION
+    MATMUL (``y_cat @ P_tile.T``) rather than a dynamic gather: a
+    minor-dim gather serializes on the TPU VPU, whereas the (bo, L)
+    one-hot contraction runs on the MXU and its FLOPs are negligible at
+    decode batch sizes.  Bias lands in the same step, so the wrapper's
+    per-call concat-then-gather-then-add chain disappears entirely.
+
+    x_ref:    (bb, n)     batch tile, full reduction dim
+    wp_ref:   (bo, n)     stage-1 weight tile (clamped elsewhere)
+    c_ref:    (bo, r)     stage-2 weight tile (clamped elsewhere)
+    inv_ref:  (1, bo)     int32 permutation tile for the owned out tile
+    bias_ref: (1, bo)     f32 bias tile for the owned out tile
+    out_ref:  (bb, bo)    final (permuted, biased) output tile
+    ycat_scratch: (bb, r + mnp) VMEM-persistent concat buffer
+    """
+    j = pl.program_id(1)
+    n_cat = n_yp_tiles + n_np_tiles
+
+    @pl.when(j < n_yp_tiles)
+    def stage1():
+        yp = jnp.dot(x_ref[...], wp_ref[...].T,
+                     preferred_element_type=jnp.float32)
+        pl.store(ycat_scratch,
+                 (slice(None), pl.dslice(j * block_o, block_o)), yp)
+
+    @pl.when(jnp.logical_and(j >= n_yp_tiles, j < n_cat))
+    def stage2():
+        r = c_ref.shape[1]
+        yp_full = pl.load(ycat_scratch, (slice(None), pl.dslice(0, r)))
+        ynp = jnp.dot(yp_full, c_ref[...].T,
+                      preferred_element_type=jnp.float32)
+        pl.store(ycat_scratch,
+                 (slice(None),
+                  pl.dslice(r + (j - n_yp_tiles) * block_o, block_o)), ynp)
+
+    @pl.when(j >= n_cat)
+    def stage3():
+        ycat = ycat_scratch[...]                       # (bb, L) f32
+        idx = inv_ref[0, :]                            # (bo,) int32
+        lanes = jax.lax.broadcasted_iota(jnp.int32,
+                                         (idx.shape[0], ycat.shape[1]), 1)
+        onehot = (idx[:, None] == lanes).astype(jnp.float32)
+        y = jnp.dot(ycat, onehot.T, preferred_element_type=jnp.float32)
+        out_ref[...] = (y + bias_ref[0, :][None, :]).astype(out_ref.dtype)
+
+
+def pifa_fused_call(x, wp, c, inv_perm, bias, *, block_b: int = 8,
+                    block_o: int = 128, interpret: bool = False):
+    """x: (B, n), wp: (r, n), c: (m-r, r), inv_perm/bias: (1, m_out)
+    -> y: (B, m_out), already permuted and biased.
+
+    ``inv_perm`` indexes the PADDED concat buffer ``[y_p(r); y_np(m-r)]``
+    (the wrapper remaps/pads indices); ``m_out`` is a multiple of
+    ``block_o`` and every other dim is already block-aligned (``ops.py``
+    pads and un-pads).  ``block_b`` may be small (8) — the decode-shaped
+    GEMV variant — because the batch dim never feeds the MXU lane dim.
+    """
+    bsz, n = x.shape
+    r = wp.shape[0]
+    mnp = c.shape[0]
+    m_out = inv_perm.shape[1]
+    assert (bsz % block_b == 0 and r % block_o == 0 and mnp % block_o == 0
+            and m_out % block_o == 0), (bsz, r, mnp, m_out, block_b, block_o)
+    n_yp = r // block_o
+    n_np = mnp // block_o
+    n_out = m_out // block_o
+    n_cat = n_yp + n_np
+    grid = (bsz // block_b, n_cat + n_out)
+
+    kern = functools.partial(pifa_fused_kernel, n_yp_tiles=n_yp,
+                             n_np_tiles=n_np, block_o=block_o)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i, j: (i, 0)),
+            # non-stage-1 steps clamp to wp tile 0 (unused there)
+            pl.BlockSpec((block_o, n),
+                         lambda i, j: (jnp.minimum(j, n_yp - 1), 0)),
+            # non-stage-2 steps clamp to c tile 0 (unused there)
+            pl.BlockSpec((block_o, r),
+                         lambda i, j: (jnp.clip(j - n_yp, 0, n_np - 1), 0)),
+            pl.BlockSpec((1, block_o),
+                         lambda i, j: (0, jnp.clip(j - n_cat, 0, n_out - 1))),
+            pl.BlockSpec((1, block_o),
+                         lambda i, j: (0, jnp.clip(j - n_cat, 0, n_out - 1))),
+        ],
+        # stage-1/2 steps park on out tile 0; the first stage-3 step owns
+        # and fully rewrites it before any block change flushes it.
+        out_specs=pl.BlockSpec((block_b, block_o),
+                               lambda i, j: (i, jnp.clip(j - n_cat, 0,
+                                                         n_out - 1))),
+        out_shape=jax.ShapeDtypeStruct((bsz, m_out), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, r + mnp), jnp.float32)],
+        interpret=interpret,
+    )(x, wp, c, inv_perm, bias)

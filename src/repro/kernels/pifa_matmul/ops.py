@@ -1,20 +1,35 @@
-"""jit'd public wrapper for the fused PIFA kernel.
+"""jit'd public wrappers for the fused PIFA kernels.
 
 Handles: flattening leading dims, padding every dim to MXU-aligned
 block multiples (zero padding is exact: padded wp rows produce zero
 y_p columns, padded c rows produce y_np rows that are sliced off),
 kernel dispatch with an interpret-mode fallback on CPU, and the
-optional output gather.
+output epilogue.
+
+Two entry points:
+
+  * :func:`pifa_matmul` — the two-stage kernel; returns the *concat*
+    output ``[y_p; y_np]`` with an optional jnp gather outside the
+    kernel (the original wrapper contract, kept for the oracle tests).
+  * :func:`pifa_matmul_fused` — the single-dispatch layer: bias and the
+    inverse-permutation gather run inside the kernel epilogue (one-hot
+    selection matmul), so nothing is concatenated or gathered per call
+    at the JAX level.  Block sizes are selected per ``(B, n, r)`` —
+    small-batch (decode/GEMV) shapes get a narrow batch tile.
+
+``interpret=None`` (the default) auto-detects the backend: the kernel
+body runs compiled on TPU and in interpreter mode elsewhere (the
+CPU-container case).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.pifa_matmul.kernel import pifa_matmul_call
+from repro.kernels.pifa_matmul.kernel import pifa_fused_call, pifa_matmul_call
 from repro.kernels.pifa_matmul.ref import pifa_matmul_ref
 
 
@@ -27,18 +42,39 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> backend auto-detect: compiled pallas on TPU, interpreter
+    everywhere else (CPU containers, GPU hosts without Mosaic)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def select_block_sizes(b: int, n: int, r: int, mnp: int) -> Tuple[int, int]:
+    """(block_b, block_o) keyed on the call shape.
+
+    Decode steps present (B, n) activations with B of a few to a few
+    dozen rows; tiling them at 128 would waste 90%+ of each MXU pass on
+    zero padding.  The batch dim only ever feeds sublanes (f32 min tile
+    8 x 128), so block_b drops to the smallest aligned tile covering B.
+    block_o stays at the 128-lane MXU width; large uniform shapes widen
+    to 256 to halve grid-step overhead.
+    """
+    block_b = 128
+    for cand in (8, 16, 32, 64):
+        if b <= cand:
+            block_b = cand
+            break
+    block_o = 128
+    if b >= 256 and r >= 256 and mnp >= 256 and n >= 256:
+        block_o = 256
+    return block_b, block_o
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "block_o",
                                              "interpret", "use_kernel"))
-def pifa_matmul(x: jax.Array, wp: jax.Array, c: jax.Array,
-                inv_perm: Optional[jax.Array] = None, *,
-                block_b: int = 128, block_o: int = 128,
-                interpret: bool = True, use_kernel: bool = True) -> jax.Array:
-    """PIFA layer forward: x (..., n) -> y (..., m).
-
-    ``interpret=True`` is the CPU-container default (the kernel body runs
-    in Python); on TPU pass ``interpret=False``.  ``use_kernel=False``
-    routes to the jnp oracle (what the models use under jit on CPU).
-    """
+def _pifa_matmul_impl(x, wp, c, inv_perm, *, block_b, block_o, interpret,
+                      use_kernel):
     lead = x.shape[:-1]
     n = x.shape[-1]
     r, mnp = wp.shape[0], c.shape[0]
@@ -62,3 +98,88 @@ def pifa_matmul(x: jax.Array, wp: jax.Array, c: jax.Array,
     if inv_perm is not None:
         ycat = jnp.take(ycat, inv_perm, axis=-1)
     return ycat.reshape(lead + (r + mnp,))
+
+
+def pifa_matmul(x: jax.Array, wp: jax.Array, c: jax.Array,
+                inv_perm: Optional[jax.Array] = None, *,
+                block_b: int = 128, block_o: int = 128,
+                interpret: Optional[bool] = None,
+                use_kernel: bool = True) -> jax.Array:
+    """PIFA layer forward: x (..., n) -> y (..., m).
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter mode
+    elsewhere.  ``use_kernel=False`` routes to the jnp oracle (what the
+    models use under jit on CPU).
+    """
+    return _pifa_matmul_impl(x, wp, c, inv_perm, block_b=block_b,
+                             block_o=block_o,
+                             interpret=_resolve_interpret(interpret),
+                             use_kernel=use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_o",
+                                             "interpret", "use_kernel"))
+def _pifa_fused_impl(x, wp, c, inv_perm, bias, *, block_b, block_o,
+                     interpret, use_kernel):
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    r, mnp = wp.shape[0], c.shape[0]
+    m = inv_perm.shape[0]
+    x2 = x.reshape(-1, n)
+    if not use_kernel:
+        y = jnp.take(pifa_matmul_ref(x2, wp, c), inv_perm, axis=-1)
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        return y.reshape(lead + (m,))
+
+    bsz = x2.shape[0]
+    xp = _pad_to(_pad_to(x2, 0, block_b), 1, 128)
+    wpp = _pad_to(_pad_to(wp, 0, block_o), 1, 128)
+    cp = _pad_to(_pad_to(c, 0, block_o), 1, block_o)
+    rp = wpp.shape[0]
+    if cp.shape[1] != rp:
+        cp = _pad_to(cp, 1, rp)[:, :rp]
+    # inv_perm indexes the UNPADDED concat [y_p(r); y_np(mnp)]; in the
+    # padded buffer y_np starts at rp, so non-pivot targets shift.
+    inv_p = jnp.where(inv_perm >= r, inv_perm + (rp - r), inv_perm)
+    inv_p = _pad_to(inv_p[None, :].astype(jnp.int32), 1, block_o)
+    b_full = (bias if bias is not None
+              else jnp.zeros((m,), jnp.float32)).astype(jnp.float32)
+    b_p = _pad_to(b_full[None, :], 1, block_o)
+    y_p = pifa_fused_call(xp, wpp, cp, inv_p, b_p, block_b=block_b,
+                          block_o=block_o, interpret=interpret)
+    return y_p[:bsz, :m].reshape(lead + (m,))
+
+
+def pifa_matmul_fused(x: jax.Array, wp: jax.Array, c: jax.Array,
+                      inv_perm: Optional[jax.Array] = None,
+                      bias: Optional[jax.Array] = None, *,
+                      block_b: Optional[int] = None,
+                      block_o: Optional[int] = None,
+                      interpret: Optional[bool] = None,
+                      use_kernel: bool = True) -> jax.Array:
+    """Single-dispatch PIFA layer: gather + bias fused into the kernel.
+
+    x (..., n) -> y (..., m) in ORIGINAL row order, bias applied.  With
+    ``inv_perm=None`` (a folded layer) the epilogue uses the identity
+    permutation, so the output is the concat order — identical to
+    ``apply_linear`` on a ``pifa_folded`` layer.
+
+    Block sizes default to :func:`select_block_sizes` on the flattened
+    batch — decode-shaped calls get the narrow-batch GEMV variant.
+    """
+    r, mnp = wp.shape[0], c.shape[0]
+    m = r + mnp
+    if inv_perm is None:
+        inv_perm = jnp.arange(m, dtype=jnp.int32)
+    bsz = 1
+    for d in x.shape[:-1]:
+        bsz *= d
+    if block_b is None or block_o is None:
+        bb, bo = select_block_sizes(bsz, x.shape[-1], r, mnp)
+        block_b = bb if block_b is None else block_b
+        block_o = bo if block_o is None else block_o
+    return _pifa_fused_impl(x, wp, c, inv_perm, bias, block_b=block_b,
+                            block_o=block_o,
+                            interpret=_resolve_interpret(interpret),
+                            use_kernel=use_kernel)

@@ -19,13 +19,20 @@ AXIS_DOC = {
 }
 
 
+def _axis_type_kwargs(n: int) -> dict:
+    """Explicit Auto axis types on jax >= 0.5; older jax (0.4.x) has no
+    AxisType and treats every mesh axis as Auto already."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh_from_spec(spec: str) -> jax.sharding.Mesh:
@@ -40,5 +47,4 @@ def make_mesh_from_spec(spec: str) -> jax.sharding.Mesh:
         axes = ("pod", "data", "model")
     else:
         raise ValueError(f"bad mesh spec {spec}")
-    return jax.make_mesh(dims, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    return jax.make_mesh(dims, axes, **_axis_type_kwargs(len(dims)))

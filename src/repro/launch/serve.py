@@ -1,9 +1,13 @@
-"""Batched serving driver: prefill + decode loop, dense or MPIFA-PIFA.
+"""Batched serving driver: dense or MPIFA-PIFA, scanned-engine decode.
 
 The paper's deployment mode: compress once (MPIFA at --density), then
-serve with PIFA layers.  Reports tokens/s for dense vs compressed on the
-same prompts — the CPU-container analogue of Table 7 (the TPU-roofline
-analogue lives in the dry-run's --compression pifa cells).
+serve with PIFA layers.  Decode runs through the single-dispatch
+generation engine (`runtime/engine.py`): prefill + the whole decode
+loop is ONE jitted `lax.scan`, and heterogeneous-rank MPIFA_NS models
+re-enter it via rank-bucketed zero-padded restacking instead of the
+old O(T^2) full-recompute fallback.  The legacy per-token Python loop
+is kept (``generate`` below) for comparison — the driver reports both,
+the CPU-container analogue of Table 7.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tiny --density 0.55
 """
@@ -21,11 +25,17 @@ from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
 from repro.core.mpifa import MpifaConfig, compress_transformer
 from repro.data.calibration import calibration_batches
 from repro.models.model import build_model
+from repro.runtime.engine import GenerationEngine
 
 
 def generate(model, params, prompts, max_new: int, cache_len: int,
              unstacked: bool = False):
-    """Greedy batched generation; returns (tokens, tokens/sec)."""
+    """LEGACY greedy batched generation; returns (tokens, tokens/sec).
+
+    Re-dispatches a jitted step per token from Python — kept as the
+    baseline the engine is measured against (and as the fallback for
+    params the restack hooks cannot unify).
+    """
     b = prompts.shape[0]
     cache = model.init_cache(b, cache_len, dtype=jnp.float32)
     if unstacked:
@@ -75,6 +85,14 @@ def main(argv=None) -> int:
     ap.add_argument("--calib-samples", type=int, default=8)
     ap.add_argument("--compression", default="pifa",
                     choices=("none", "pifa", "lowrank"))
+    ap.add_argument("--loop", default="both",
+                    choices=("engine", "legacy", "both"),
+                    help="scanned single-dispatch engine, the legacy "
+                         "per-token Python loop, or both (reports speedup)")
+    ap.add_argument("--max-buckets", type=int, default=4,
+                    help="rank buckets for MPIFA_NS restacking")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--params-npz", default=None,
                     help="trained weights from launch/train.py checkpoints")
     ap.add_argument("--seed", type=int, default=0)
@@ -90,9 +108,45 @@ def main(argv=None) -> int:
         rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
         dtype=jnp.int32)
     cache_len = args.prompt_len + args.max_new + 1
+    engine = GenerationEngine(model, max_buckets=args.max_buckets)
 
-    toks_d, tps_d = generate(model, params, prompts, args.max_new, cache_len)
-    print(f"[serve] dense: {tps_d:.1f} tokens/s", flush=True)
+    def serve(p, label, unstacked=False):
+        """Run the selected loop(s); returns the engine (or legacy)
+        tokens for agreement checks."""
+        toks = None
+        tps_leg = None
+        if args.loop in ("legacy", "both"):
+            toks, tps_leg = generate(model, p, prompts, args.max_new,
+                                     cache_len, unstacked=unstacked)
+            print(f"[serve] {label} legacy-loop: {tps_leg:.1f} tokens/s",
+                  flush=True)
+        if args.loop in ("engine", "both"):
+            try:
+                res = engine.generate(p, prompts, args.max_new, cache_len,
+                                      temperature=args.temperature,
+                                      top_k=args.top_k,
+                                      key=jax.random.PRNGKey(args.seed))
+            except ValueError as e:  # un-unifiable blocks: legacy fallback
+                print(f"[serve] {label} engine unavailable ({e}); "
+                      "use --loop legacy", flush=True)
+                if toks is None:
+                    toks, _ = generate(model, p, prompts, args.max_new,
+                                       cache_len, unstacked=unstacked)
+                return toks
+            print(f"[serve] {label} engine: {res.tokens_per_sec:.1f} tokens/s"
+                  f" (compile {res.compile_time:.2f}s)", flush=True)
+            if tps_leg is not None and args.temperature == 0.0:
+                # only comparable when both loops decode greedily (the
+                # legacy loop has no sampling path)
+                agree = float(jnp.mean((res.tokens == toks)
+                                       .astype(jnp.float32)))
+                print(f"[serve] {label} engine/legacy speedup: "
+                      f"{res.tokens_per_sec / tps_leg:.2f}x "
+                      f"(token agreement {agree:.3f})", flush=True)
+            toks = res.tokens
+        return toks
+
+    toks_d = serve(params, "dense")
 
     if args.compression != "none":
         if cfg.family not in ("dense", "vlm"):
@@ -108,11 +162,11 @@ def main(argv=None) -> int:
         cparams = compress_transformer(model, params, calib, mcfg)
         print(f"[serve] compressed in {time.time()-t0:.1f}s "
               f"(density {args.density})", flush=True)
-        toks_c, tps_c = generate(model, cparams, prompts, args.max_new,
-                                 cache_len, unstacked=True)
-        agree = float(jnp.mean((toks_c == toks_d).astype(jnp.float32)))
-        print(f"[serve] {args.compression}: {tps_c:.1f} tokens/s; "
-              f"token agreement with dense {agree:.3f}", flush=True)
+        toks_c = serve(cparams, args.compression, unstacked=True)
+        if args.temperature == 0.0:
+            agree = float(jnp.mean((toks_c == toks_d).astype(jnp.float32)))
+            print(f"[serve] {args.compression} token agreement with dense "
+                  f"{agree:.3f}", flush=True)
     return 0
 
 

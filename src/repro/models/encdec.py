@@ -189,6 +189,39 @@ class EncDecModel:
     def decode_step(self, params, token, cache):
         return self._decode_cached(params, token, cache)
 
+    # ----------------------------------------------- compression harness
+    def num_blocks(self) -> int:
+        return self.cfg.num_layers
+
+    def unstack_blocks(self, params: Pytree) -> Pytree:
+        """Stacked encoder/decoder blocks -> list form."""
+        params = dict(params)
+        for key, n in (("enc_blocks", self.cfg.encoder_layers),
+                       ("dec_blocks", self.cfg.num_layers)):
+            if not isinstance(params[key], list):
+                stacked = params[key]
+                params[key] = [jax.tree.map(lambda x, i=i: x[i], stacked)
+                               for i in range(n)]
+        return params
+
+    def restack_blocks(self, params: Pytree, *, pad: bool = False,
+                       max_buckets: int = 1):
+        """List form -> stacked for both stacks; heterogeneous PIFA
+        ranks re-enter the scan via exact zero-padding (single bucket
+        per stack)."""
+        from repro.core.mpifa import pad_and_stack_blocks, try_stack_blocks
+        params = dict(params)
+        for key in ("enc_blocks", "dec_blocks"):
+            if not isinstance(params[key], list):
+                continue
+            stacked = try_stack_blocks(params[key])
+            if stacked is None and pad:
+                stacked = pad_and_stack_blocks(params[key])
+            if stacked is None:
+                return None
+            params[key] = stacked
+        return params
+
     def _decode_cached(self, params, tokens, cache):
         cfg = self.cfg
         pos = cache["pos"]

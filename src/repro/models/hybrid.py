@@ -184,6 +184,38 @@ class HybridModel:
     def decode_step(self, params, token, cache):
         return self._step_cached(params, token, cache)
 
+    # ----------------------------------------------- compression harness
+    def num_blocks(self) -> int:
+        return self.cfg.num_layers
+
+    def unstack_blocks(self, params: Pytree) -> Pytree:
+        """Stacked mamba blocks -> list form (the shared attention block
+        is a single weight set and stays as-is)."""
+        if isinstance(params["mamba"], list):
+            return params
+        params = dict(params)
+        stacked = params["mamba"]
+        params["mamba"] = [jax.tree.map(lambda x, i=i: x[i], stacked)
+                           for i in range(self.cfg.num_layers)]
+        return params
+
+    def restack_blocks(self, params: Pytree, *, pad: bool = False,
+                       max_buckets: int = 1):
+        """List form -> stacked; heterogeneous PIFA ranks re-enter the
+        staged scan via exact zero-padding (single bucket — the
+        (n_stages, attn_every) reshape requires one uniform stack)."""
+        if not isinstance(params["mamba"], list):
+            return params
+        from repro.core.mpifa import pad_and_stack_blocks, try_stack_blocks
+        stacked = try_stack_blocks(params["mamba"])
+        if stacked is None and pad:
+            stacked = pad_and_stack_blocks(params["mamba"])
+        if stacked is None:
+            return None
+        params = dict(params)
+        params["mamba"] = stacked
+        return params
+
 
 def _mamba_prefill_block(bp, u, cfg):
     """Mamba block over a full sequence, returning decode-ready state."""

@@ -18,6 +18,7 @@ Row convention everywhere: ``y = x @ W.T`` with ``x: (..., in)``.
 """
 from __future__ import annotations
 
+import os
 from typing import Any, Dict, Optional
 
 import jax
@@ -36,7 +37,30 @@ __all__ = [
     "linear_in_dim",
     "linear_param_count",
     "linear_weight",
+    "set_pifa_kernel",
 ]
+
+# Route PIFA layers through the fused Pallas kernel (bias + inv-perm
+# gather in the epilogue, decode-shaped block selection) instead of the
+# jnp two-GEMM + concat + gather chain.  Off by default: the jnp path is
+# what XLA:CPU fuses best and what the TP sharding pins below target;
+# flip on for TPU deployments via REPRO_PIFA_KERNEL=1 or
+# set_pifa_kernel(True).
+_PIFA_KERNEL = os.environ.get("REPRO_PIFA_KERNEL", "0") == "1"
+
+
+def set_pifa_kernel(enabled: bool) -> bool:
+    """Toggle the fused-kernel PIFA path; returns the previous value.
+
+    The flag is read at TRACE time: functions already jit-cached keep
+    the path they were traced with.  GenerationEngine keys its cache on
+    the flag, so engine calls pick up a toggle; other long-lived jitted
+    callables must be re-jitted after toggling.
+    """
+    global _PIFA_KERNEL
+    prev = _PIFA_KERNEL
+    _PIFA_KERNEL = bool(enabled)
+    return prev
 
 
 def dense_linear(key: jax.Array, in_dim: int, out_dim: int, *,
@@ -136,6 +160,12 @@ def apply_linear(p: Params, x: jax.Array) -> jax.Array:
         t = x @ p["vt"].astype(dt).T
         t = constrain(t, *(("batch",) + (None,) * (t.ndim - 1)))
         y = t @ p["u"].astype(dt).T
+    elif _PIFA_KERNEL:
+        # single-dispatch fused path: both GEMMs, the output gather and
+        # the bias land in one kernel (no per-call concat-then-gather)
+        from repro.kernels.pifa_matmul.ops import pifa_matmul_fused
+        return pifa_matmul_fused(x, p["wp"].astype(dt), p["c"].astype(dt),
+                                 p.get("inv_perm"), p.get("b"))
     else:
         yp = x @ p["wp"].astype(dt).T
         # Two pins force the intended TP schedule (§Perf iteration C1/C3):

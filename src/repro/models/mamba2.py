@@ -295,6 +295,39 @@ class Mamba2Model:
         h = L.apply_norm(params["final_norm"], h[:, -1:], self.cfg.norm_eps)
         return L.unembed(params["embed"], h), new_cache
 
+    # ----------------------------------------------- compression harness
+    def num_blocks(self) -> int:
+        return self.cfg.num_layers
+
+    def unstack_blocks(self, params: Pytree) -> Pytree:
+        """Stacked blocks -> list form (per-block compression edits)."""
+        if isinstance(params["blocks"], list):
+            return params
+        params = dict(params)
+        stacked = params["blocks"]
+        params["blocks"] = [jax.tree.map(lambda x, i=i: x[i], stacked)
+                            for i in range(self.cfg.num_layers)]
+        return params
+
+    def restack_blocks(self, params: Pytree, *, pad: bool = False,
+                       max_buckets: int = 1) -> Optional[Pytree]:
+        """List form -> stacked scan form; heterogeneous-rank PIFA
+        blocks (MPIFA_NS) re-enter via exact zero-padding when
+        ``pad=True`` (core/mpifa.pad_and_stack_blocks).  The SSM decode
+        scan consumes one stacked segment, so this family always pads
+        to a single bucket."""
+        if not isinstance(params["blocks"], list):
+            return params
+        from repro.core.mpifa import pad_and_stack_blocks, try_stack_blocks
+        stacked = try_stack_blocks(params["blocks"])
+        if stacked is None and pad:
+            stacked = pad_and_stack_blocks(params["blocks"])
+        if stacked is None:
+            return None
+        params = dict(params)
+        params["blocks"] = stacked
+        return params
+
     def decode_step(self, params, token, cache):
         h = L.embed(params["embed"], token)
 

@@ -29,7 +29,7 @@ from repro.models.transformer import Transformer
 Pytree = Any
 
 __all__ = ["build_model", "example_batch", "batch_spec", "loss_fn",
-           "make_train_step"]
+           "make_train_step", "make_engine", "restack_for_serving"]
 
 
 def build_model(cfg: ModelConfig):
@@ -118,6 +118,29 @@ def make_train_step(model, cfg: ModelConfig, optim, remat: str = "none"):
         return loss, params, opt_state
 
     return step
+
+
+def make_engine(model, **kwargs):
+    """Single-dispatch generation engine for any zoo model (the scanned
+    prefill+decode path; see runtime/engine.py)."""
+    from repro.runtime.engine import GenerationEngine
+    return GenerationEngine(model, **kwargs)
+
+
+def restack_for_serving(model, params: Pytree, *, max_buckets: int = 4
+                        ) -> Pytree:
+    """List-form (compressed) params -> the scanned serving form.
+
+    Uniform blocks stack directly; heterogeneous-rank MPIFA_NS blocks
+    are zero-padded to per-bucket uniform ranks (exact).  Raises
+    ValueError when the blocks cannot be unified.
+    """
+    if not hasattr(model, "restack_blocks"):
+        return params
+    stacked = model.restack_blocks(params, pad=True, max_buckets=max_buckets)
+    if stacked is None:
+        raise ValueError("blocks cannot be re-stacked for serving")
+    return stacked
 
 
 def make_prefill_step(model, cfg: ModelConfig):

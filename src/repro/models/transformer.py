@@ -229,6 +229,8 @@ class Transformer:
         h = self.embed_tokens(params, tokens, patches)
         pos = cache["pos"]
         ratio = cfg.local_global_ratio
+        if "block_buckets" in params:  # rank-bucketed MPIFA_NS restack
+            return self._forward_cached_buckets(params, h, cache)
         if "kl" in cache:  # ring caches (local:global archs)
             return self._forward_cached_ring(params, h, cache)
         staged = (L.ATTN_WINDOW_SLICE and cfg.sliding_window and ratio
@@ -287,6 +289,47 @@ class Transformer:
         }
         logits = self.final_logits(params, h[:, -1:, :])
         return logits, new_cache
+
+    def _forward_cached_buckets(self, params: Pytree, h: jax.Array,
+                                cache: Dict[str, jax.Array]
+                                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Prefill/decode over rank-bucketed stacked blocks.
+
+        Each bucket is a stacked segment of contiguous layers whose
+        PIFA factors share padded ranks; one `lax.scan` per bucket,
+        cache sliced by static layer offsets — still a single jit with
+        O(#buckets) HLO, never the O(T^2) unstacked fallback.
+        """
+        if "kl" in cache:
+            raise ValueError(
+                "rank-bucketed blocks pair with the per-layer KV cache; "
+                "ring-cache (local:global) serving needs a single "
+                "uniform stack (restack with max_buckets=1)")
+        pos = cache["pos"]
+        windows = self._windows()
+
+        def body(carry, xs):
+            bp, w, kc, vc = xs
+            layer_cache = {"k": kc, "v": vc, "pos": pos}
+            out, nc = self.block_apply(bp, carry, window=w,
+                                       cache=layer_cache)
+            return out, (nc["k"], nc["v"])
+
+        off = 0
+        ks_parts, vs_parts = [], []
+        for seg in params["block_buckets"]:
+            n_seg = jax.tree_util.tree_leaves(seg)[0].shape[0]
+            h, (ks, vs) = jax.lax.scan(
+                body, h, (seg, windows[off:off + n_seg],
+                          cache["k"][off:off + n_seg],
+                          cache["v"][off:off + n_seg]))
+            ks_parts.append(ks)
+            vs_parts.append(vs)
+            off += n_seg
+        new_cache = {"k": jnp.concatenate(ks_parts, axis=0),
+                     "v": jnp.concatenate(vs_parts, axis=0),
+                     "pos": pos + h.shape[1]}
+        return self.final_logits(params, h[:, -1:, :]), new_cache
 
     # ------------------------------------------------- ring-cache serving
     def _ring_kv(self, bp, x, positions):
@@ -417,6 +460,15 @@ class Transformer:
         return params
 
     def unstack_blocks(self, params: Pytree) -> Pytree:
+        if "block_buckets" in params:
+            params = dict(params)
+            blocks: List[Pytree] = []
+            for seg in params.pop("block_buckets"):
+                n_seg = jax.tree_util.tree_leaves(seg)[0].shape[0]
+                blocks += [jax.tree.map(lambda x, i=i: x[i], seg)
+                           for i in range(n_seg)]
+            params["blocks"] = blocks
+            return params
         if isinstance(params["blocks"], list):
             return params
         params = dict(params)
@@ -425,28 +477,52 @@ class Transformer:
                             for i in range(self.cfg.num_layers)]
         return params
 
-    def restack_blocks(self, params: Pytree) -> Pytree:
+    def restack_blocks(self, params: Pytree, *, pad: bool = False,
+                       max_buckets: int = 1) -> Optional[Pytree]:
         """Re-stack list-form blocks for the scanned serving path.
 
         Uniform-density MPIFA gives every block identical pytree
         structure (same PIFA ranks), so compressed models regain the
-        scan + KV-cache fast path.  Heterogeneous blocks (MPIFA_NS
-        per-layer densities) stay in list form — callers fall back to
-        `forward_unstacked`.  Returns None when stacking is impossible.
+        scan + KV-cache fast path directly.  Heterogeneous blocks
+        (MPIFA_NS per-layer densities) re-enter it via ``pad=True``:
+        every block's PIFA/low-rank factors are zero-padded to per-path
+        uniform ranks (exact — see core/mpifa.pad_pifa_rank) and, with
+        ``max_buckets > 1``, the layer sequence is DP-partitioned into
+        contiguous rank buckets so padding waste stays bounded; the
+        result carries ``block_buckets`` (a list of stacked segments)
+        instead of ``blocks``.  Returns None only when padding cannot
+        unify the blocks (mixed representations at one path).
         """
         if not isinstance(params["blocks"], list):
             return params
         blocks = params["blocks"]
-        ref = jax.tree_util.tree_structure(blocks[0])
-        if any(jax.tree_util.tree_structure(b) != ref for b in blocks[1:]):
+        from repro.core.mpifa import pad_blocks_bucketed, try_stack_blocks
+        stacked_uniform = try_stack_blocks(blocks)
+        if stacked_uniform is not None:
+            params = dict(params)
+            params["blocks"] = stacked_uniform
+            return params
+        if not pad:
             return None
-        shapes0 = [l.shape for l in jax.tree.leaves(blocks[0])]
-        for b in blocks[1:]:
-            if [l.shape for l in jax.tree.leaves(b)] != shapes0:
-                return None
+        # ring-cache archs (local:global) serve through layouts the
+        # bucketed path does not understand; pad to ONE uniform stack
+        # so they stay on their own serving paths.
+        if self.cfg.sliding_window and self.cfg.local_global_ratio:
+            max_buckets = 1
+        buckets = pad_blocks_bucketed(blocks, max_buckets)
+        if buckets is None:
+            return None
+        try:
+            stacked = [jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *seg)
+                       for seg in buckets]
+        except ValueError:
+            return None  # non-factor leaves disagree; cannot unify
         params = dict(params)
-        params["blocks"] = jax.tree.map(
-            lambda *xs: jnp.stack(xs, axis=0), *blocks)
+        if len(stacked) == 1:
+            params["blocks"] = stacked[0]
+        else:
+            del params["blocks"]
+            params["block_buckets"] = stacked
         return params
 
     def forward_unstacked(self, params: Pytree, tokens: jax.Array,

@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # clean container: parametrized fallback below
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.lowrank_matmul.ops import lowrank_matmul, matmul
 from repro.kernels.lowrank_matmul.ref import lowrank_matmul_ref, matmul_ref
@@ -59,16 +64,33 @@ def test_pifa_kernel_leading_dims():
     assert _rel_err(y, yref) < 1e-5
 
 
-@settings(max_examples=12, deadline=None)
-@given(b=st.integers(1, 80), n=st.integers(4, 160), r=st.integers(2, 64),
-       mnp=st.integers(2, 96))
-def test_pifa_kernel_property(b, n, r, mnp):
+def _check_pifa_kernel_case(b, n, r, mnp):
     rng = np.random.default_rng(b * 7 + n)
     x = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
     wp = jnp.asarray(rng.normal(size=(r, n)) / np.sqrt(n), jnp.float32)
     c = jnp.asarray(rng.normal(size=(mnp, r)) / np.sqrt(r), jnp.float32)
     y = pifa_matmul(x, wp, c, interpret=True)
     assert _rel_err(y, pifa_matmul_ref(x, wp, c)) < 1e-4
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(b=st.integers(1, 80), n=st.integers(4, 160), r=st.integers(2, 64),
+           mnp=st.integers(2, 96))
+    def test_pifa_kernel_property(b, n, r, mnp):
+        _check_pifa_kernel_case(b, n, r, mnp)
+
+
+_PIFA_RNG = np.random.default_rng(11)
+_PIFA_CASES = [(1, 4, 2, 2), (80, 160, 64, 96), (1, 160, 2, 96)] + [
+    (int(_PIFA_RNG.integers(1, 81)), int(_PIFA_RNG.integers(4, 161)),
+     int(_PIFA_RNG.integers(2, 65)), int(_PIFA_RNG.integers(2, 97)))
+    for _ in range(9)]
+
+
+@pytest.mark.parametrize("b,n,r,mnp", _PIFA_CASES)
+def test_pifa_kernel_sweep(b, n, r, mnp):
+    _check_pifa_kernel_case(b, n, r, mnp)
 
 
 @pytest.mark.parametrize("dims", [(64, 96, 80), (128, 128, 128),

@@ -61,9 +61,9 @@ def test_multipod_adds_pod_axis():
 
 
 def test_sanitize_drops_nondividing_axes():
+    from repro.launch.mesh import _axis_type_kwargs
     import jax
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("model",), **_axis_type_kwargs(1))
 
     class M:
         axis_names = ("model",)

@@ -1,7 +1,12 @@
 """MPIFA_NS density allocation (App. B.2) + 2:4 baselines."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # clean container: parametrized fallback below
+    HAVE_HYPOTHESIS = False
 
 from repro.core.semistructured import (check_nm, magnitude_score, nm_mask,
                                        prune_nm, ria_score, wanda_score)
@@ -36,10 +41,7 @@ def test_owl_density_normalized():
     assert d[2] > d[0]  # more outliers -> more density
 
 
-@settings(max_examples=30, deadline=None)
-@given(gd=st.floats(0.2, 0.9), nl=st.integers(1, 8),
-       lam=st.floats(0.0, 0.1))
-def test_allocation_invariants(gd, nl, lam):
+def _check_allocation_invariants(gd, nl, lam):
     bs = budgets(nl)
     rng = np.random.default_rng(nl)
     layer_d = {i: float(x) for i, x in enumerate(
@@ -50,6 +52,25 @@ def test_allocation_invariants(gd, nl, lam):
     got = sum(alloc[b.name] * b.params for b in bs)
     assert got == pytest.approx(gd * total, rel=0.02)
     assert all(0.02 <= v <= 1.0 for v in alloc.values())
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(gd=st.floats(0.2, 0.9), nl=st.integers(1, 8),
+           lam=st.floats(0.0, 0.1))
+    def test_allocation_invariants(gd, nl, lam):
+        _check_allocation_invariants(gd, nl, lam)
+
+
+_ALLOC_RNG = np.random.default_rng(9)
+_ALLOC_CASES = [(0.2, 1, 0.0), (0.9, 8, 0.1), (0.5, 4, 0.05)] + [
+    (float(_ALLOC_RNG.uniform(0.2, 0.9)), int(_ALLOC_RNG.integers(1, 9)),
+     float(_ALLOC_RNG.uniform(0.0, 0.1))) for _ in range(9)]
+
+
+@pytest.mark.parametrize("gd,nl,lam", _ALLOC_CASES)
+def test_allocation_invariants_sweep(gd, nl, lam):
+    _check_allocation_invariants(gd, nl, lam)
 
 
 def test_nm_mask_validity():
