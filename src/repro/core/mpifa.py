@@ -485,9 +485,15 @@ def _segment_cost(signatures) -> float:
     return cost
 
 
-def bucket_boundaries(blocks: Sequence[Pytree], max_buckets: int = 1
+def bucket_boundaries(blocks: Sequence[Pytree], max_buckets: int = 1,
+                      granularity: int = 1
                       ) -> Optional[List[Tuple[int, int]]]:
     """Contiguous [start, end) segments minimizing padded-rank waste.
+
+    ``granularity`` forces every boundary onto a multiple of that many
+    layers — ring-cache (local:global) archs scan in stages of
+    ``ratio + 1`` layers, so their buckets must be stage-aligned.  A
+    layer count not divisible by ``granularity`` falls back to 1.
 
     Returns None when blocks cannot be unified (different pytree
     structure or mixed representation kinds at the same path).
@@ -506,13 +512,17 @@ def bucket_boundaries(blocks: Sequence[Pytree], max_buckets: int = 1
         if len(kinds) > 1:
             return None
     n = len(blocks)
-    k_max = max(1, min(max_buckets, n))
+    g = max(1, granularity)
+    if n % g != 0:
+        g = 1
+    k_max = max(1, min(max_buckets, n // g))
     if k_max == 1:
         return [(0, n)]
     # DP over contiguous partitions; small per-bucket penalty prefers
     # fewer scan dispatches when the rank spread doesn't pay for a split.
+    # Only granularity-aligned split points are considered.
     seg = {(i, j): _segment_cost(sigs[i:j])
-           for i in range(n) for j in range(i + 1, n + 1)}
+           for i in range(0, n, g) for j in range(i + g, n + 1, g)}
     penalty = 0.02 * seg[(0, n)] / n
     best: Dict[Tuple[int, int], Tuple[float, List[Tuple[int, int]]]] = {}
 
@@ -525,7 +535,7 @@ def bucket_boundaries(blocks: Sequence[Pytree], max_buckets: int = 1
             res = (seg[(i, n)] + penalty, [(i, n)])
         else:
             res = None
-            for j in range(i + 1, n + 1):
+            for j in range(i + g, n + 1, g):
                 tail_cost, tail = solve(j, k - 1) if j < n else (0.0, [])
                 cand = (seg[(i, j)] + penalty + tail_cost,
                         [(i, j)] + tail)
@@ -538,12 +548,13 @@ def bucket_boundaries(blocks: Sequence[Pytree], max_buckets: int = 1
     return parts
 
 
-def pad_blocks_bucketed(blocks: Sequence[Pytree], max_buckets: int = 1
+def pad_blocks_bucketed(blocks: Sequence[Pytree], max_buckets: int = 1,
+                        granularity: int = 1
                         ) -> Optional[List[List[Pytree]]]:
     """Partition list-form blocks into contiguous buckets and zero-pad
     each bucket to uniform per-path ranks; every bucket then stacks.
     Returns None when padding cannot unify the blocks."""
-    parts = bucket_boundaries(blocks, max_buckets)
+    parts = bucket_boundaries(blocks, max_buckets, granularity)
     if parts is None:
         return None
     out = []

@@ -1,0 +1,166 @@
+"""Per-bucket block-size selection for the fused PIFA kernel.
+
+``select_block_sizes`` (ops.py) is a static heuristic keyed on the call
+shape alone.  The serving engine knows strictly more: when rank-bucketed
+restacking builds ``block_buckets`` the padded rank of every bucket AND
+the decode batch (slot capacity) are fixed for the lifetime of the
+serving process — so each bucket's decode matmul can be tuned once, at
+restack time, and the winner pinned.
+
+This module keeps a process-level registry mapping the flattened call
+shape ``(B, n, r)`` to ``(block_b, block_o)``.  ``pifa_matmul_fused``
+consults it before falling back to the heuristic, so tuning is a pure
+side-channel: no model or engine code threads block sizes through call
+sites, and an empty registry reproduces the old behaviour exactly.
+
+Tuning itself times the real kernel over a small candidate grid — but
+only where timing means anything: on TPU backends the compiled Mosaic
+kernel runs; everywhere else (the CPU container runs the kernel in
+interpreter mode, whose timings do not transfer) the registry is
+seeded from the heuristic unless ``REPRO_PIFA_AUTOTUNE=force``.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "register_block_sizes",
+    "lookup_block_sizes",
+    "clear_block_size_registry",
+    "registry_snapshot",
+    "candidate_block_sizes",
+    "autotune_block_sizes",
+    "tune_pifa_params",
+]
+
+# (B, n, r) -> (block_b, block_o); B is the flattened leading dim of x.
+_REGISTRY: Dict[Tuple[int, int, int], Tuple[int, int]] = {}
+
+
+def register_block_sizes(b: int, n: int, r: int,
+                         block_b: int, block_o: int) -> None:
+    _REGISTRY[(int(b), int(n), int(r))] = (int(block_b), int(block_o))
+
+
+def lookup_block_sizes(b: int, n: int, r: int) -> Optional[Tuple[int, int]]:
+    return _REGISTRY.get((int(b), int(n), int(r)))
+
+
+def clear_block_size_registry() -> None:
+    _REGISTRY.clear()
+
+
+def registry_snapshot() -> Dict[Tuple[int, int, int], Tuple[int, int]]:
+    return dict(_REGISTRY)
+
+
+def candidate_block_sizes(b: int, n: int, r: int, mnp: int
+                          ) -> List[Tuple[int, int]]:
+    """Small grid around the feasible tile shapes for this call.
+
+    block_b tiles the (flattened) activation rows: anything past the
+    smallest aligned tile covering B only pads.  block_o tiles both
+    wp rows and c rows; values beyond the padded output dims waste a
+    full MXU pass per grid step.
+    """
+    bbs = [c for c in (8, 16, 32, 64, 128) if c < b * 2 or c == 8]
+    if not bbs:
+        bbs = [8]
+    out_dim = max(r, mnp, 1)
+    bos = [c for c in (128, 256) if c <= max(128, out_dim)]
+    return [(bb, bo) for bb in bbs for bo in bos]
+
+
+def _time_candidate(x: jax.Array, wp: jax.Array, c: jax.Array,
+                    block_b: int, block_o: int, repeats: int) -> float:
+    from repro.kernels.pifa_matmul.ops import pifa_matmul_fused
+    out = pifa_matmul_fused(x, wp, c, block_b=block_b, block_o=block_o)
+    jax.block_until_ready(out)  # compile outside the timed region
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = pifa_matmul_fused(x, wp, c, block_b=block_b, block_o=block_o)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _timing_enabled() -> bool:
+    mode = os.environ.get("REPRO_PIFA_AUTOTUNE", "auto")
+    if mode == "force":
+        return True
+    if mode == "0":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def autotune_block_sizes(b: int, n: int, r: int, mnp: int, *,
+                         dtype: Any = jnp.float32, repeats: int = 3,
+                         force: bool = False) -> Tuple[int, int]:
+    """Pick (block_b, block_o) for shape (B, n) x PIFA(r, mnp) and pin
+    it in the registry.  Times real kernel dispatches on TPU; elsewhere
+    registers the shape-keyed heuristic (still per-bucket: the decode
+    batch and padded bucket rank key the entry)."""
+    cached = lookup_block_sizes(b, n, r)
+    if cached is not None and not force:
+        return cached
+    from repro.kernels.pifa_matmul.ops import select_block_sizes
+    best = select_block_sizes(b, n, r, mnp)
+    if _timing_enabled() or force:
+        key = jax.random.PRNGKey(0)
+        kx, kw, kc = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (b, n), dtype)
+        wp = jax.random.normal(kw, (r, n), dtype)
+        c = jax.random.normal(kc, (mnp, r), dtype)
+        best_t = float("inf")
+        for bb, bo in candidate_block_sizes(b, n, r, mnp):
+            try:
+                t = _time_candidate(x, wp, c, bb, bo, repeats)
+            except Exception:
+                continue  # infeasible tile on this backend: skip
+            if t < best_t:
+                best_t, best = t, (bb, bo)
+    register_block_sizes(b, n, r, *best)
+    return best
+
+
+def _walk_pifa_shapes(tree: Any, out: set) -> None:
+    if isinstance(tree, dict):
+        if "wp" in tree and "c" in tree:
+            wp, c = tree["wp"], tree["c"]
+            if hasattr(wp, "shape") and wp.ndim >= 2:
+                # stacked factors carry a leading layer dim; the matmul
+                # shape is the trailing (r, n) / (mnp, r)
+                r, n = int(wp.shape[-2]), int(wp.shape[-1])
+                mnp = int(c.shape[-2])
+                out.add((n, r, mnp))
+            return
+        for v in tree.values():
+            _walk_pifa_shapes(v, out)
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            _walk_pifa_shapes(v, out)
+
+
+def tune_pifa_params(params: Any, batch: int, *, repeats: int = 3
+                     ) -> Dict[Tuple[int, int, int], Tuple[int, int]]:
+    """Walk (restacked) params, tune every distinct PIFA matmul shape
+    for decode calls of ``batch`` rows, and return the chosen entries.
+
+    Called by the generation engine / serving scheduler right after
+    rank-bucketed restacking: each bucket's padded rank yields its own
+    (B, n, r) key, so heterogeneous-rank MPIFA_NS models get per-bucket
+    tuned decode kernels instead of one generic heuristic.
+    """
+    shapes: set = set()
+    _walk_pifa_shapes(params, shapes)
+    chosen = {}
+    for (n, r, mnp) in sorted(shapes):
+        chosen[(batch, n, r)] = autotune_block_sizes(batch, n, r, mnp,
+                                                     repeats=repeats)
+    return chosen

@@ -165,8 +165,11 @@ def pifa_matmul_fused(x: jax.Array, wp: jax.Array, c: jax.Array,
     permutation, so the output is the concat order — identical to
     ``apply_linear`` on a ``pifa_folded`` layer.
 
-    Block sizes default to :func:`select_block_sizes` on the flattened
-    batch — decode-shaped calls get the narrow-batch GEMV variant.
+    Block sizes default to the restack-time autotune registry
+    (per-bucket tuned entries keyed on the flattened call shape; see
+    kernels/pifa_matmul/autotune.py) and fall back to
+    :func:`select_block_sizes` — decode-shaped calls get the
+    narrow-batch GEMV variant.
     """
     r, mnp = wp.shape[0], c.shape[0]
     m = r + mnp
@@ -176,7 +179,10 @@ def pifa_matmul_fused(x: jax.Array, wp: jax.Array, c: jax.Array,
     for d in x.shape[:-1]:
         bsz *= d
     if block_b is None or block_o is None:
-        bb, bo = select_block_sizes(bsz, x.shape[-1], r, mnp)
+        from repro.kernels.pifa_matmul.autotune import lookup_block_sizes
+        tuned = lookup_block_sizes(bsz, x.shape[-1], r)
+        bb, bo = (tuned if tuned is not None
+                  else select_block_sizes(bsz, x.shape[-1], r, mnp))
         block_b = bb if block_b is None else block_b
         block_o = bo if block_o is None else block_o
     return _pifa_fused_impl(x, wp, c, inv_perm, bias, block_b=block_b,

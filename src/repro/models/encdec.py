@@ -162,8 +162,11 @@ class EncDecModel:
             "pos": jnp.zeros((batch,), dtype=jnp.int32),
         }
 
-    def prefill(self, params, batch, cache, patches=None):
-        """Encode audio, precompute cross-KV, then run prompt tokens."""
+    def prefill(self, params, batch, cache, patches=None, last_idx=None):
+        """Encode audio, precompute cross-KV, then run prompt tokens.
+
+        ``last_idx`` (b,) selects per-row logits positions for
+        bucket-padded slot prefills (serving scheduler)."""
         cfg = self.cfg
         hd = cfg.resolved_head_dim
         memory = self.encode(params, batch["frames"])
@@ -184,7 +187,8 @@ class EncDecModel:
         cache = dict(cache)
         cache["xk"], cache["xv"] = (xk.astype(cache["xk"].dtype),
                                     xv.astype(cache["xv"].dtype))
-        return self._decode_cached(params, batch["tokens"], cache)
+        return self._decode_cached(params, batch["tokens"], cache,
+                                   last_idx=last_idx)
 
     def decode_step(self, params, token, cache):
         return self._decode_cached(params, token, cache)
@@ -222,7 +226,7 @@ class EncDecModel:
             params[key] = stacked
         return params
 
-    def _decode_cached(self, params, tokens, cache):
+    def _decode_cached(self, params, tokens, cache, last_idx=None):
         cfg = self.cfg
         pos = cache["pos"]
         sq = tokens.shape[1]
@@ -243,5 +247,6 @@ class EncDecModel:
                       cache["xk"], cache["xv"]))
         new_cache = dict(cache)
         new_cache.update({"k": ks, "v": vs, "pos": pos + sq})
-        h = L.apply_norm(params["dec_norm"], h[:, -1:], cfg.norm_eps)
+        h = L.apply_norm(params["dec_norm"], L.take_last(h, last_idx),
+                         cfg.norm_eps)
         return L.unembed(params["embed"], h), new_cache

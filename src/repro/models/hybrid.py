@@ -123,7 +123,7 @@ class HybridModel:
             "pos": jnp.zeros((batch,), dtype=jnp.int32),
         }
 
-    def _step_cached(self, params, tokens, cache):
+    def _step_cached(self, params, tokens, cache, last_idx=None):
         """Shared prefill/decode path over the cache (decode: sq == 1)."""
         cfg = self.cfg
         h = L.embed(params["embed"], tokens)
@@ -175,11 +175,15 @@ class HybridModel:
             new_ssm = jnp.concatenate([new_ssm, ts], axis=0)
         new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
                      "ssm": new_ssm, "k": ks, "v": vs, "pos": pos + sq}
-        h = L.apply_norm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+        h = L.apply_norm(params["final_norm"], L.take_last(h, last_idx),
+                         cfg.norm_eps)
         return L.unembed(params["embed"], h), new_cache
 
-    def prefill(self, params, tokens, cache, patches=None):
-        return self._step_cached(params, tokens, cache)
+    def prefill(self, params, tokens, cache, patches=None, last_idx=None):
+        """``last_idx`` selects per-row logits positions; the SSM state
+        integrates every token, so scheduler prefills for this family
+        are exact-length (see runtime/scheduler.py)."""
+        return self._step_cached(params, tokens, cache, last_idx=last_idx)
 
     def decode_step(self, params, token, cache):
         return self._step_cached(params, token, cache)

@@ -26,6 +26,18 @@ from repro.parallel.sharding import constrain
 
 Pytree = Any
 
+def take_last(h: jax.Array, last_idx: Optional[jax.Array]) -> jax.Array:
+    """(b, s, d) -> (b, 1, d) at per-row ``last_idx`` (or s-1).
+
+    Serving-scheduler slot prefills right-pad prompts to a static
+    bucket, so the "last real token" differs per row; the pad tail is
+    causally masked and never feeds these logits.
+    """
+    if last_idx is None:
+        return h[:, -1:, :]
+    return jnp.take_along_axis(h, last_idx[:, None, None], axis=1)
+
+
 # --------------------------------------------------------------------------
 # Norms
 # --------------------------------------------------------------------------
@@ -318,23 +330,39 @@ def attention_block(
             q = apply_rope(q, positions, rope_theta)
             k = apply_rope(k, positions, rope_theta)
         if cache is not None:
-            # write new k/v at pos .. pos+sq (uniform pos across batch per
-            # decode convention; per-seq pos handled via dynamic slice)
-            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache["pos"][0], axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache["pos"][0], axis=1)
+            if sq == 1:
+                # decode: per-row scatter at each sequence's own pos —
+                # continuous-batching slots decode at *different*
+                # positions (runtime/scheduler.py), so the write index
+                # must be per-row, not pos[0]
+                rows = jnp.arange(b)
+                kc = cache["k"].at[rows, cache["pos"]].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                vc = cache["v"].at[rows, cache["pos"]].set(
+                    v[:, 0].astype(cache["v"].dtype))
+            else:
+                # prefill: uniform pos across batch (slot prefills run
+                # batch-1 from pos 0; training-free paths never mix)
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype),
+                    cache["pos"][0], axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype),
+                    cache["pos"][0], axis=1)
             new_cache = {"k": kc, "v": vc, "pos": cache["pos"] + sq}
             if (ATTN_WINDOW_SLICE and window_slice and sq == 1
                     and kc.shape[1] > window_slice):
                 # sliding-window decode: touch only the trailing `window`
                 # cache entries (hillclimb: gemma3 long_500k read the
-                # full 524k buffer for its 1024-window local layers)
-                start = jnp.clip(cache["pos"][0] + sq - window_slice, 0,
+                # full 524k buffer for its 1024-window local layers);
+                # the slice start is per-row for slot-batched decode
+                start = jnp.clip(cache["pos"] + sq - window_slice, 0,
                                  kc.shape[1] - window_slice)
-                kw = jax.lax.dynamic_slice_in_dim(kc, start, window_slice, 1)
-                vw = jax.lax.dynamic_slice_in_dim(vc, start, window_slice, 1)
-                kv_positions = jnp.broadcast_to(
-                    (start + jnp.arange(window_slice))[None, :],
-                    (b, window_slice))
+                kw = jax.vmap(lambda kr, st: jax.lax.dynamic_slice_in_dim(
+                    kr, st, window_slice, 0))(kc, start)
+                vw = jax.vmap(lambda vr, st: jax.lax.dynamic_slice_in_dim(
+                    vr, st, window_slice, 0))(vc, start)
+                kv_positions = start[:, None] + jnp.arange(window_slice)[None, :]
                 out = mha(q, kw.astype(q.dtype), vw.astype(q.dtype),
                           causal=True, window=window, q_positions=positions,
                           kv_positions=kv_positions, kv_len=new_cache["pos"])

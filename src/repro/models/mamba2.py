@@ -257,10 +257,14 @@ class Mamba2Model:
             "pos": jnp.zeros((batch,), dtype=jnp.int32),
         }
 
-    def prefill(self, params, tokens, cache, patches=None):
+    def prefill(self, params, tokens, cache, patches=None, last_idx=None):
         """Run the chunked scan then *materialize* the decode state.
 
         Prefill state extraction reuses the chunk scan's final state.
+        ``last_idx`` selects per-row logits positions; note the SSM
+        state integrates every input token, so scheduler prefills for
+        this family must be exact-length (no right padding) — the
+        scheduler's exact prompt mode handles that.
         """
         h = L.embed(params["embed"], tokens)
         convs, ssms = [], []
@@ -292,7 +296,8 @@ class Mamba2Model:
         new_cache = {"conv": convs.astype(cache["conv"].dtype),
                      "ssm": ssms,
                      "pos": cache["pos"] + tokens.shape[1]}
-        h = L.apply_norm(params["final_norm"], h[:, -1:], self.cfg.norm_eps)
+        h = L.apply_norm(params["final_norm"], L.take_last(h, last_idx),
+                         self.cfg.norm_eps)
         return L.unembed(params["embed"], h), new_cache
 
     # ----------------------------------------------- compression harness

@@ -29,7 +29,8 @@ from repro.models.transformer import Transformer
 Pytree = Any
 
 __all__ = ["build_model", "example_batch", "batch_spec", "loss_fn",
-           "make_train_step", "make_engine", "restack_for_serving"]
+           "make_train_step", "make_engine", "make_scheduler",
+           "restack_for_serving"]
 
 
 def build_model(cfg: ModelConfig):
@@ -125,6 +126,13 @@ def make_engine(model, **kwargs):
     prefill+decode path; see runtime/engine.py)."""
     from repro.runtime.engine import GenerationEngine
     return GenerationEngine(model, **kwargs)
+
+
+def make_scheduler(model, params, **kwargs):
+    """Continuous-batching serving scheduler: slot-allocated KV cache,
+    chunked scan decode, mid-flight admission (runtime/scheduler.py)."""
+    from repro.runtime.scheduler import ServingScheduler
+    return ServingScheduler(model, params, **kwargs)
 
 
 def restack_for_serving(model, params: Pytree, *, max_buckets: int = 4

@@ -213,9 +213,12 @@ class Transformer:
             "pos": jnp.zeros((batch,), dtype=jnp.int32),
         }
 
+    _take_last = staticmethod(L.take_last)
+
     def forward_cached(self, params: Pytree, tokens: jax.Array,
                        cache: Dict[str, jax.Array],
-                       patches: Optional[jax.Array] = None
+                       patches: Optional[jax.Array] = None,
+                       last_idx: Optional[jax.Array] = None
                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         """Prefill or decode: runs `tokens` against the cache.
 
@@ -229,10 +232,12 @@ class Transformer:
         h = self.embed_tokens(params, tokens, patches)
         pos = cache["pos"]
         ratio = cfg.local_global_ratio
-        if "block_buckets" in params:  # rank-bucketed MPIFA_NS restack
-            return self._forward_cached_buckets(params, h, cache)
         if "kl" in cache:  # ring caches (local:global archs)
-            return self._forward_cached_ring(params, h, cache)
+            return self._forward_cached_ring(params, h, cache,
+                                             last_idx=last_idx)
+        if "block_buckets" in params:  # rank-bucketed MPIFA_NS restack
+            return self._forward_cached_buckets(params, h, cache,
+                                                last_idx=last_idx)
         staged = (L.ATTN_WINDOW_SLICE and cfg.sliding_window and ratio
                   and cfg.num_layers % (ratio + 1) == 0
                   and tokens.shape[1] == 1
@@ -251,7 +256,7 @@ class Transformer:
             h, (ks, vs) = jax.lax.scan(
                 body, h, (params["blocks"], windows, cache["k"], cache["v"]))
             new_cache = {"k": ks, "v": vs, "pos": pos + h.shape[1]}
-            logits = self.final_logits(params, h[:, -1:, :])
+            logits = self.final_logits(params, self._take_last(h, last_idx))
             return logits, new_cache
 
         # staged local:global decode
@@ -287,24 +292,23 @@ class Transformer:
             "v": vs.reshape((cfg.num_layers,) + vs.shape[2:]),
             "pos": pos + h.shape[1],
         }
-        logits = self.final_logits(params, h[:, -1:, :])
+        logits = self.final_logits(params, self._take_last(h, last_idx))
         return logits, new_cache
 
     def _forward_cached_buckets(self, params: Pytree, h: jax.Array,
-                                cache: Dict[str, jax.Array]
+                                cache: Dict[str, jax.Array],
+                                last_idx: Optional[jax.Array] = None
                                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         """Prefill/decode over rank-bucketed stacked blocks.
 
         Each bucket is a stacked segment of contiguous layers whose
         PIFA factors share padded ranks; one `lax.scan` per bucket,
         cache sliced by static layer offsets — still a single jit with
-        O(#buckets) HLO, never the O(T^2) unstacked fallback.
+        O(#buckets) HLO, never the O(T^2) unstacked fallback.  Ring
+        caches never reach here: ``forward_cached`` routes them to
+        ``_forward_cached_ring``, which understands stage-aligned
+        buckets itself.
         """
-        if "kl" in cache:
-            raise ValueError(
-                "rank-bucketed blocks pair with the per-layer KV cache; "
-                "ring-cache (local:global) serving needs a single "
-                "uniform stack (restack with max_buckets=1)")
         pos = cache["pos"]
         windows = self._windows()
 
@@ -329,7 +333,8 @@ class Transformer:
         new_cache = {"k": jnp.concatenate(ks_parts, axis=0),
                      "v": jnp.concatenate(vs_parts, axis=0),
                      "pos": pos + h.shape[1]}
-        return self.final_logits(params, h[:, -1:, :]), new_cache
+        return (self.final_logits(params, self._take_last(h, last_idx)),
+                new_cache)
 
     # ------------------------------------------------- ring-cache serving
     def _ring_kv(self, bp, x, positions):
@@ -344,13 +349,21 @@ class Transformer:
         k = L.apply_rope(k, positions, cfg.rope_theta)
         return k, v
 
-    def _forward_cached_ring(self, params, h, cache):
+    def _forward_cached_ring(self, params, h, cache, last_idx=None):
         """Prefill (pos==0) or decode over ring local caches.
 
         Local layers keep a circular (window)-slot buffer: slot of
         absolute position p is ``p % window``; stale/garbage slots are
         masked by remapping their position to the future (causal mask
-        kills them).
+        kills them).  Per-row ``pos`` is honoured throughout (ring
+        writes scatter at each row's own slot), so continuous-batching
+        slot decode works on ring archs too.
+
+        Rank-bucketed restacks (``block_buckets``) are handled by
+        running the stage scan once per bucket segment; restacking
+        aligns bucket boundaries to (ratio+1)-layer stages
+        (`restack_blocks` passes ``granularity``), so every segment is
+        a whole number of stages and cache slices stay static.
         """
         cfg = self.cfg
         ratio = cfg.local_global_ratio
@@ -359,9 +372,6 @@ class Transformer:
         pos = cache["pos"]
         b, sq, _ = h.shape
         stack_l = lambda x: x.reshape((ns, ratio) + x.shape[1:])
-        blocks_st = jax.tree.map(
-            lambda x: x.reshape((ns, ratio + 1) + x.shape[1:]),
-            params["blocks"])
         kl_st, vl_st = stack_l(cache["kl"]), stack_l(cache["vl"])
         positions = pos[:, None] + jnp.arange(sq)[None, :]
 
@@ -376,22 +386,19 @@ class Transformer:
             q = L.apply_rope(q, positions, cfg.rope_theta)
             k, v = self._ring_kv(bp, a_in, positions)
             if decode:
-                slot = pos[0] % w
-                kl = jax.lax.dynamic_update_slice_in_dim(
-                    kl, k.astype(kl.dtype), slot, axis=1)
-                vl = jax.lax.dynamic_update_slice_in_dim(
-                    vl, v.astype(vl.dtype), slot, axis=1)
-                # absolute position held by each slot j:
+                rows = jnp.arange(b)
+                slot = jnp.mod(pos, w)                      # (b,)
+                kl = kl.at[rows, slot].set(k[:, 0].astype(kl.dtype))
+                vl = vl.at[rows, slot].set(v[:, 0].astype(vl.dtype))
+                # absolute position held by each row's slot j:
                 # p_j = pos - ((pos - j) mod w); garbage (p<0) -> future
                 j = jnp.arange(w)
-                p_now = pos[0] + 1  # after write, slots cover <= pos
-                kvpos = pos[0] - jnp.mod(pos[0] - j, w)
-                kvpos = jnp.where(kvpos >= 0, kvpos, pos[0] + w + 1)
-                kv_positions = jnp.broadcast_to(kvpos[None, :], (b, w))
+                kvpos = pos[:, None] - jnp.mod(pos[:, None] - j[None, :], w)
+                kvpos = jnp.where(kvpos >= 0, kvpos, pos[:, None] + w + 1)
                 out = L.mha(q, kl.astype(q.dtype), vl.astype(q.dtype),
                             causal=True, window=jnp.int32(w),
                             q_positions=positions,
-                            kv_positions=kv_positions)
+                            kv_positions=kvpos)
             else:
                 # prefill from pos==0: attend within the sequence, then
                 # write the trailing window into the ring
@@ -424,19 +431,46 @@ class Transformer:
                 cache={"k": kg, "v": vg, "pos": pos}, positions=positions)
             return out, (nkl, nvl, ncg["k"], ncg["v"])
 
-        h, (kls, vls, kgs, vgs) = jax.lax.scan(
-            stage, h, (blocks_st, cache["k"], cache["v"], kl_st, vl_st))
+        segments = (params["block_buckets"] if "block_buckets" in params
+                    else [params["blocks"]])
+        so = 0  # stage offset
+        kl_parts, vl_parts, kg_parts, vg_parts = [], [], [], []
+        for seg in segments:
+            n_seg = jax.tree_util.tree_leaves(seg)[0].shape[0]
+            if n_seg % (ratio + 1) != 0:
+                raise ValueError(
+                    "ring-cache serving needs stage-aligned buckets: "
+                    f"segment of {n_seg} layers vs stage size {ratio + 1} "
+                    "(restack with granularity=local_global_ratio+1)")
+            st_seg = n_seg // (ratio + 1)
+            bp_st = jax.tree.map(
+                lambda x: x.reshape((st_seg, ratio + 1) + x.shape[1:]), seg)
+            h, (kls, vls, kgs, vgs) = jax.lax.scan(
+                stage, h, (bp_st, cache["k"][so:so + st_seg],
+                           cache["v"][so:so + st_seg],
+                           kl_st[so:so + st_seg], vl_st[so:so + st_seg]))
+            kl_parts.append(kls)
+            vl_parts.append(vls)
+            kg_parts.append(kgs)
+            vg_parts.append(vgs)
+            so += st_seg
+        kls = jnp.concatenate(kl_parts, axis=0)
+        vls = jnp.concatenate(vl_parts, axis=0)
         new_cache = {
-            "k": kgs, "v": vgs,
+            "k": jnp.concatenate(kg_parts, axis=0),
+            "v": jnp.concatenate(vg_parts, axis=0),
             "kl": kls.reshape((ns * ratio,) + kls.shape[2:]),
             "vl": vls.reshape((ns * ratio,) + vls.shape[2:]),
             "pos": pos + sq,
         }
-        logits = self.final_logits(params, h[:, -1:, :])
+        logits = self.final_logits(params, self._take_last(h, last_idx))
         return logits, new_cache
 
-    def prefill(self, params, tokens, cache, patches=None):
-        return self.forward_cached(params, tokens, cache, patches)
+    def prefill(self, params, tokens, cache, patches=None, last_idx=None):
+        """``last_idx`` (b,) selects the per-row logits position — used
+        by the serving scheduler's bucket-padded slot prefills."""
+        return self.forward_cached(params, tokens, cache, patches,
+                                   last_idx=last_idx)
 
     def decode_step(self, params, token, cache):
         """token: (b, 1) int32 -> (logits (b, 1, V), cache)."""
@@ -504,12 +538,15 @@ class Transformer:
             return params
         if not pad:
             return None
-        # ring-cache archs (local:global) serve through layouts the
-        # bucketed path does not understand; pad to ONE uniform stack
-        # so they stay on their own serving paths.
-        if self.cfg.sliding_window and self.cfg.local_global_ratio:
-            max_buckets = 1
-        buckets = pad_blocks_bucketed(blocks, max_buckets)
+        # ring-cache archs (local:global) scan in stages of ratio+1
+        # layers, so bucket boundaries must land on stage boundaries —
+        # `_forward_cached_ring` then runs one stage scan per bucket.
+        granularity = 1
+        cfg = self.cfg
+        if (cfg.sliding_window and cfg.local_global_ratio
+                and cfg.num_layers % (cfg.local_global_ratio + 1) == 0):
+            granularity = cfg.local_global_ratio + 1
+        buckets = pad_blocks_bucketed(blocks, max_buckets, granularity)
         if buckets is None:
             return None
         try:

@@ -201,14 +201,38 @@ def analyze_hlo_text(text: str, top_k: int = 0) -> HloCostResult:
         ops = comp_opcodes.get(comp_name, set())
         return ("convert" in ops) and ops.issubset(_LAYOUT_ONLY)
 
+    # scalar index arithmetic XLA fuses next to a dynamic-(update-)slice
+    # (negative-index wrapping: compare/add/select on s32[]).  Listed
+    # explicitly so a scalar-result reduce over a big operand does NOT
+    # make its fusion look traffic-free.
+    _INDEX_ARITH = {"compare", "add", "subtract", "multiply", "divide",
+                    "remainder", "select", "clamp", "minimum", "maximum"}
+
+    def _scalar_ops_only(comp_name: str, allowed: set) -> bool:
+        """True when every op outside ``allowed``/layout is a
+        scalar-valued index-arithmetic op — those move no HBM."""
+        comp = by_name.get(comp_name)
+        if comp is None:
+            return False
+        for op in comp.ops:
+            if op.opcode in _LAYOUT_ONLY or op.opcode in allowed:
+                continue
+            if op.opcode not in _INDEX_ARITH:
+                return False
+            if _shape_elems_first(op.result_txt)[0] > 1:
+                return False
+        return True
+
     def _is_slice_fusion(comp_name: str) -> bool:
-        """Fusion bodies of {dynamic-slice + layout ops}: per-layer
-        weight/cache slicing out of a scan's stacked xs.  Real traffic
-        is the slice, not the stacked operand (which my operand-counting
-        would otherwise charge at full size, x trip count)."""
+        """Fusion bodies of {dynamic-slice + layout/scalar-index ops}:
+        per-layer weight/cache slicing out of a scan's stacked xs.  Real
+        traffic is the slice, not the stacked operand (which my
+        operand-counting would otherwise charge at full size, x trip
+        count).  Scalar index arithmetic (the select/add wrap of
+        negative scan indices) rides along for free."""
         ops = comp_opcodes.get(comp_name, set())
-        return ("dynamic-slice" in ops) and ops.issubset(
-            _LAYOUT_ONLY | {"dynamic-slice"})
+        return ("dynamic-slice" in ops
+                and _scalar_ops_only(comp_name, {"dynamic-slice"}))
 
     def _dus_update_bytes(comp_name: str) -> Optional[int]:
         """If the fusion wraps a dynamic-update-slice (possibly under a
@@ -218,8 +242,8 @@ def analyze_hlo_text(text: str, top_k: int = 0) -> HloCostResult:
         if comp is None:
             return None
         ops = comp_opcodes.get(comp_name, set())
-        if "dynamic-update-slice" not in ops or not ops.issubset(
-                _LAYOUT_ONLY | {"dynamic-update-slice"}):
+        if "dynamic-update-slice" not in ops or not _scalar_ops_only(
+                comp_name, {"dynamic-update-slice"}):
             return None
         shp: Dict[str, str] = dict(comp.header_args)
         dus = None
@@ -313,9 +337,13 @@ def analyze_hlo_text(text: str, top_k: int = 0) -> HloCostResult:
                 # approximate as 2 * |result| if ever present.
                 flops += m * 2.0 * res_elems
             # ---------------- bytes ----------------
+            # ``call`` is a control-flow boundary, not data movement: its
+            # callee's ops are charged via the multiplicity edge (the CPU
+            # backend wraps parallel fusions in one-op call computations,
+            # which would otherwise double-charge the full buffer).
             if not in_fusion and oc not in (
                     "parameter", "constant", "get-tuple-element", "tuple",
-                    "bitcast", "after-all"):
+                    "bitcast", "after-all", "call"):
                 if oc == "dynamic-update-slice":
                     # in-place: read update + write the updated region
                     upd = (_shape_bytes(shapes.get(op.operands[1], ""))

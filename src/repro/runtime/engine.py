@@ -22,6 +22,11 @@ hooks: uniform-rank MPIFA restacks directly; heterogeneous-rank
 MPIFA_NS is zero-padded to per-bucket uniform ranks
 (`core/mpifa.pad_blocks_bucketed` — exact) instead of falling back to
 the O(T^2) full-recompute loop.
+
+This engine runs one batch to completion; for staggered arrivals use
+the continuous-batching scheduler on top (`runtime/scheduler.py`),
+which shares the restack/prefill/decode surface and admits new
+requests into freed KV-cache slots mid-flight.
 """
 from __future__ import annotations
 
@@ -170,13 +175,21 @@ class GenerationEngine:
         b, s = prompts.shape[0], prompts.shape[1]
         if cache_len is None:
             cache_len = s + max_new + 1
+        from repro.models.linear import _PIFA_KERNEL
+        if _PIFA_KERNEL:
+            # pin per-bucket kernel block sizes for this decode batch
+            # BEFORE tracing: bucket ranks are known post-restack, and
+            # the registry is read at trace time (kernels/pifa_matmul/
+            # autotune.py) — entries registered later would not retrace
+            # an already-cached generate fn.
+            from repro.kernels.pifa_matmul.autotune import tune_pifa_params
+            tune_pifa_params(params, b)
         # the kernel-routing flag is read at trace time inside
         # apply_linear, so it must be part of the jit-cache key or a
         # toggle would silently keep serving the stale path; params
         # structure/shapes/dtypes are part of the key so the cold/warm
         # distinction below matches jit's actual retrace conditions
         # (dense vs pifa params under one engine must not alias)
-        from repro.models.linear import _PIFA_KERNEL
         leaves, treedef = jax.tree_util.tree_flatten(params)
         sig = (max_new, float(temperature), int(top_k), eos_id, b, s,
                cache_len, _PIFA_KERNEL, treedef,

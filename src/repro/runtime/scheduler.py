@@ -1,0 +1,454 @@
+"""Continuous-batching serving scheduler: slot-allocated KV cache with
+mid-flight admission.
+
+The generation engine (runtime/engine.py) fixed per-token dispatch
+overhead, but it still runs one batch to completion: under staggered
+arrivals every finished row idles until the slowest request drains —
+the end-to-end overhead that makes low-rank serving look slower than it
+is at the layer level.  This scheduler closes that gap:
+
+  * a **slot allocator** over a fixed-capacity KV cache: each of the
+    ``capacity`` cache rows is a slot with its own ``pos`` (cache write
+    pointer), ``done`` flag, generation count and token budget, all
+    living on device;
+  * a **chunked scan** hot loop: one jitted dispatch scans ``chunk``
+    decode steps over all slots (finished/free rows are frozen — their
+    ``pos`` stops advancing and they emit fill tokens), so admission
+    control costs O(1) dispatches per chunk instead of per token;
+  * **mid-flight admission**: at each chunk boundary, freed slots are
+    refilled from a host-side arrival queue.  An admitted request's
+    prompt is right-padded to a static bucket length and prefilled
+    batch-1 into a scratch cache, whose rows are then scattered into
+    the assigned slot — in-flight rows are never touched.
+
+Exactness: right padding keeps every real token at its true position
+(rope + causal mask are position-exact, pad columns are masked to
+exactly zero probability), and the per-row write pointer starts at the
+*unpadded* prompt length so the first generated token overwrites the
+first pad entry — junk beyond each row's write pointer is causally
+masked until overwritten.  Greedy decoding is therefore bit-identical
+to a single-request ``GenerationEngine.generate`` of the same prompt
+(tests/test_scheduler.py asserts this token-for-token).
+
+SSM families (mamba2/hybrid) integrate state over every input token,
+and ring-cache (local:global) archs fold the trailing window of the
+*padded* prompt into their circular buffers — both get exact-length
+slot prefills (``prompt_buckets=None`` is forced); plain attention
+families use buckets to bound prefill compiles.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+__all__ = ["Request", "RequestResult", "SchedulerRun", "ServingScheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request; ``arrival_time`` is seconds after run start
+    (0 = already queued)."""
+
+    request_id: int
+    prompt: np.ndarray            # (len,) int32
+    max_new: int
+    arrival_time: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    request_id: int
+    tokens: np.ndarray            # prompt + generated tokens
+    generated: int                # real generated count (pre-eos)
+    prompt_len: int
+    slot: int
+    arrival_time: float
+    admitted_at: float            # seconds after run start
+    finished_at: float
+
+    @property
+    def latency(self) -> float:
+        return self.finished_at - self.arrival_time
+
+
+@dataclasses.dataclass
+class SchedulerRun:
+    """One scheduler drain: per-request results + aggregate accounting."""
+
+    results: List[RequestResult]
+    elapsed: float                # wall-clock seconds for the drain
+    generated: int                # total real generated tokens
+    chunks: int                   # chunk dispatches
+    occupancy: List[Tuple[float, int]]   # (t, active slots) per chunk
+
+    @property
+    def tokens_per_sec(self) -> float:
+        return self.generated / max(self.elapsed, 1e-9)
+
+    @property
+    def mean_occupancy(self) -> float:
+        if not self.occupancy:
+            return 0.0
+        return float(np.mean([o for _, o in self.occupancy]))
+
+    def latencies(self) -> np.ndarray:
+        return np.asarray(sorted(r.latency for r in self.results))
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    count: int = 0                # generated so far (device n_gen mirror)
+    admitted_at: float = 0.0
+
+
+class ServingScheduler:
+    """Continuous-batching scheduler over any zoo model's cache surface.
+
+    One scheduler per (model, params, capacity); jitted chunk/admit
+    functions are cached, so steady-state serving pays one dispatch per
+    ``chunk`` decode steps plus one per admission.
+    """
+
+    def __init__(self, model, params: Pytree, *, capacity: int = 8,
+                 chunk: int = 8, cache_len: Optional[int] = None,
+                 eos_id: Optional[int] = None,
+                 prompt_buckets: Optional[Sequence[int]] = (16, 32, 64, 128),
+                 pad_id: Optional[int] = None, max_buckets: int = 4,
+                 cache_dtype: Any = jnp.float32,
+                 admission: str = "continuous"):
+        if admission not in ("continuous", "drain"):
+            raise ValueError("admission: 'continuous' or 'drain'")
+        family = getattr(getattr(model, "cfg", None), "family", "dense")
+        if family == "encdec":
+            raise ValueError("scheduler serves token-prompt families; "
+                             "enc-dec prefill needs frames")
+        if family in ("ssm", "hybrid"):
+            # SSM state integrates pad tokens: exact-length prefills only
+            prompt_buckets = None
+        cfg = getattr(model, "cfg", None)
+        if (cfg is not None and getattr(cfg, "sliding_window", 0)
+                and getattr(cfg, "local_global_ratio", 0)):
+            # ring-capable archs: ring prefill folds the TRAILING window
+            # into the circular buffer, so a right-padded prompt would
+            # plant pad k/v at slots the decode position formula treats
+            # as real past positions — exact-length prefills only
+            prompt_buckets = None
+        self.model = model
+        self.capacity = int(capacity)
+        self.chunk = int(chunk)
+        self.eos_id = eos_id
+        self.pad_id = int(pad_id if pad_id is not None
+                          else (eos_id if eos_id is not None else 0))
+        self.prompt_buckets = (tuple(sorted(prompt_buckets))
+                               if prompt_buckets else None)
+        # "continuous": refill freed slots at every chunk boundary.
+        # "drain": run-to-completion batching — only admit when ALL
+        # slots are free.  Same compute machinery either way, so the
+        # serving benchmark's comparison isolates the admission policy.
+        self.admission = admission
+        self.cache_dtype = cache_dtype
+        self._cache_len = cache_len
+        # restack list-form (compressed) params onto the scan path; the
+        # engine's identity-keyed cache logic is reused via a private
+        # engine instance (also keeps restacks shared if callers use
+        # both surfaces on one model)
+        from repro.runtime.engine import GenerationEngine
+        self._restacker = GenerationEngine(model, max_buckets=max_buckets,
+                                           cache_dtype=cache_dtype)
+        self.params = self._restacker.prepare_params(params)
+        from repro.models.linear import _PIFA_KERNEL
+        if _PIFA_KERNEL:
+            # per-bucket decode kernels: bucket ranks are known now, the
+            # decode batch is `capacity` — pin block sizes before any
+            # trace reads the registry
+            from repro.kernels.pifa_matmul.autotune import tune_pifa_params
+            tune_pifa_params(self.params, self.capacity)
+
+        # host-side state
+        self._slots: List[_Slot] = [_Slot() for _ in range(self.capacity)]
+        self._free: List[int] = list(range(self.capacity))[::-1]
+        self._queue: Deque[Request] = collections.deque()
+        self._chunk_fn = None
+        self._admit_fns: Dict[int, Any] = {}
+        self._slot_axes = None
+        self._dev = None              # (cache, tok, done, n_gen, budget)
+
+    # ------------------------------------------------------------- queue
+    def submit(self, request: Request) -> None:
+        self._queue.append(request)
+
+    # ------------------------------------------------------- device state
+    def _bucket_for(self, n: int) -> int:
+        if self.prompt_buckets is None:
+            return n
+        for b in self.prompt_buckets:
+            if n <= b:
+                return b
+        b = self.prompt_buckets[-1]
+        while b < n:
+            b *= 2
+        return b
+
+    def _required_cache_len(self) -> int:
+        longest = max((self._bucket_for(len(r.prompt)) + r.max_new
+                       for r in self._queue), default=32)
+        return longest + 1
+
+    def _slot_axis_tree(self, cache_len: int):
+        """Per-leaf batch axis of the cache pytree, discovered by
+        comparing abstract cache shapes at two batch sizes — works for
+        every family (k/v at axis 1, ring kl/vl at axis 1, mamba
+        conv/ssm at axis 1, pos at axis 0) with no per-family tables."""
+        c1 = jax.eval_shape(lambda: self.model.init_cache(
+            1, cache_len, dtype=self.cache_dtype))
+        c2 = jax.eval_shape(lambda: self.model.init_cache(
+            2, cache_len, dtype=self.cache_dtype))
+
+        def axis(a, b):
+            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+                if x != y:
+                    return i
+            raise ValueError(f"cache leaf {a.shape} has no batch axis")
+
+        return jax.tree.map(axis, c1, c2)
+
+    def _ensure_state(self) -> None:
+        if self._dev is not None:
+            return
+        if self._cache_len is None:
+            self._cache_len = self._required_cache_len()
+        cache = self.model.init_cache(self.capacity, self._cache_len,
+                                      dtype=self.cache_dtype)
+        # ring caches change *structure* with max_len: scratch prefill
+        # caches must then match the big cache's length exactly
+        self._ring = isinstance(cache, dict) and "kl" in cache
+        self._slot_axes = self._slot_axis_tree(self._cache_len)
+        b = self.capacity
+        self._dev = (cache,
+                     jnp.zeros((b, 1), jnp.int32),        # next input token
+                     jnp.ones((b,), jnp.bool_),           # done (free=done)
+                     jnp.zeros((b,), jnp.int32),          # n_gen
+                     jnp.zeros((b,), jnp.int32))          # budget
+
+    # --------------------------------------------------------- jitted fns
+    def _build_chunk_fn(self):
+        model = self.model
+        eos_id = self.eos_id
+        fill = jnp.int32(eos_id if eos_id is not None else self.pad_id)
+        chunk = self.chunk
+
+        def run(params, cache, tok, done, n_gen, budget):
+            def body(carry, _):
+                tok, cache, done, n_gen = carry
+                logits, cache2 = model.decode_step(params, tok, cache)
+                nxt = jnp.argmax(logits[:, -1, :], axis=-1
+                                 ).astype(jnp.int32)[:, None]
+                nxt = jnp.where(done[:, None], fill, nxt)
+                n_gen2 = jnp.where(done, n_gen, n_gen + 1)
+                d2 = done
+                if eos_id is not None:
+                    d2 = d2 | (nxt[:, 0] == eos_id)
+                d2 = d2 | (n_gen2 >= budget)
+                # freeze finished/free rows: their write pointer stops
+                # one past the last real entry, so junk writes land on a
+                # sentinel index forever (never read, never out of
+                # bounds) and the row state is untouched until re-admission
+                cache2 = {**cache2,
+                          "pos": jnp.where(done, cache["pos"], cache2["pos"])}
+                return (nxt, cache2, d2, n_gen2), nxt[:, 0]
+
+            (tok, cache, done, n_gen), toks = jax.lax.scan(
+                body, (tok, cache, done, n_gen), None, length=chunk)
+            return cache, tok, done, n_gen, toks.T   # toks (B, chunk)
+
+        return jax.jit(run, donate_argnums=(1, 2, 3, 4))
+
+    def _build_admit_fn(self, bucket: int):
+        model = self.model
+        eos_id = self.eos_id
+        # scratch caches only need the prompt bucket's length: the
+        # scatter below writes a sub-slab (dynamic_update_slice accepts
+        # updates smaller than the target), and everything past each
+        # row's write pointer is masked until overwritten.  Ring caches
+        # are the exception — their *structure* depends on length.
+        cache_len = self._cache_len if self._ring else bucket
+        cache_dtype = self.cache_dtype
+        axes = self._slot_axes
+
+        def run(params, prompt, plen, max_new, slot,
+                cache, tok, done, n_gen, budget):
+            # batch-1 prefill into a scratch cache; the padded tail is
+            # causally masked, logits read at the true last token
+            small = model.init_cache(1, cache_len, dtype=cache_dtype)
+            logits, small = model.prefill(
+                params, prompt, small,
+                last_idx=jnp.reshape(plen, (1,)) - 1)
+            first = jnp.argmax(logits[:, -1, :], axis=-1
+                               ).astype(jnp.int32)[:, None]   # (1, 1)
+            # write pointer starts at the UNPADDED length: generated
+            # tokens overwrite the pad tail entry by entry, and junk
+            # beyond the pointer stays causally masked (exactness note
+            # in the module docstring)
+            small = {**small,
+                     "pos": jnp.reshape(plen, (1,)).astype(jnp.int32)}
+
+            def scatter(big, sm, ax):
+                starts = [jnp.int32(0)] * big.ndim
+                starts[ax] = slot
+                return jax.lax.dynamic_update_slice(
+                    big, sm.astype(big.dtype), tuple(starts))
+
+            cache = jax.tree.map(scatter, cache, small, axes)
+            first_done = jnp.asarray(max_new <= 1)
+            if eos_id is not None:
+                first_done = first_done | (first[0, 0] == eos_id)
+            tok = jax.lax.dynamic_update_slice_in_dim(tok, first, slot, 0)
+            done = done.at[slot].set(first_done)
+            n_gen = n_gen.at[slot].set(1)
+            budget = budget.at[slot].set(max_new)
+            return cache, tok, done, n_gen, budget, first[0, 0]
+
+        return jax.jit(run, donate_argnums=(5, 6, 7, 8, 9))
+
+    # ---------------------------------------------------------- admission
+    def _admit(self, req: Request, now: float) -> None:
+        plen = len(req.prompt)
+        bucket = self._bucket_for(plen)
+        if bucket + req.max_new + 1 > self._cache_len:
+            # out-of-bounds cache writes would be silently dropped by
+            # the scatter; refuse instead
+            raise ValueError(
+                f"request {req.request_id}: prompt bucket {bucket} + "
+                f"max_new {req.max_new} exceeds cache_len "
+                f"{self._cache_len}")
+        slot = self._free.pop()
+        padded = np.full((1, bucket), self.pad_id, np.int32)
+        padded[0, :plen] = np.asarray(req.prompt, np.int32)
+        fn = self._admit_fns.get(bucket)
+        if fn is None:
+            fn = self._admit_fns[bucket] = self._build_admit_fn(bucket)
+        cache, tok, done, n_gen, budget = self._dev
+        cache, tok, done, n_gen, budget, first = fn(
+            self.params, jnp.asarray(padded), jnp.int32(plen),
+            jnp.int32(req.max_new), jnp.int32(slot),
+            cache, tok, done, n_gen, budget)
+        self._dev = (cache, tok, done, n_gen, budget)
+        st = self._slots[slot]
+        st.request = req
+        # keep the first token as a device scalar: int() here would
+        # block the host on the prefill dispatch; finalize converts
+        st.tokens = [first]
+        st.count = 1
+        st.admitted_at = now
+
+    def _finalize(self, slot: int, now: float,
+                  results: List[RequestResult]) -> None:
+        st = self._slots[slot]
+        req = st.request
+        results.append(RequestResult(
+            request_id=req.request_id,
+            tokens=np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray([int(t) for t in st.tokens],
+                                              np.int32)]),
+            generated=st.count,
+            prompt_len=len(req.prompt),
+            slot=slot,
+            arrival_time=req.arrival_time,
+            admitted_at=st.admitted_at,
+            finished_at=now,
+        ))
+        st.request = None
+        st.tokens = []
+        st.count = 0
+        self._free.append(slot)
+
+    # --------------------------------------------------------------- run
+    def run(self, requests: Optional[Sequence[Request]] = None
+            ) -> SchedulerRun:
+        """Drain ``requests`` (plus anything already submitted).
+
+        Arrivals are honoured against the wall clock: a request with
+        ``arrival_time=t`` becomes admissible ``t`` seconds after the
+        drain starts.  Admission happens at chunk boundaries; the hot
+        loop is one jitted chunk dispatch per ``chunk`` decode steps.
+        """
+        for r in requests or ():
+            self.submit(r)
+        self._queue = collections.deque(
+            sorted(self._queue, key=lambda r: r.arrival_time))
+        self._ensure_state()
+        if self._chunk_fn is None:
+            self._chunk_fn = self._build_chunk_fn()
+
+        results: List[RequestResult] = []
+        occupancy: List[Tuple[float, int]] = []
+        chunks = 0
+        t0 = time.perf_counter()
+
+        def now() -> float:
+            return time.perf_counter() - t0
+
+        while self._queue or len(self._free) < self.capacity:
+            # admission: continuous refills freed slots every chunk
+            # boundary; drain is textbook static batching — it waits
+            # for ALL slots to free, then for a full batch's worth of
+            # arrivals (or the queue tail), and admits them at once
+            if self.admission == "continuous":
+                while (self._free and self._queue
+                       and self._queue[0].arrival_time <= now()):
+                    self._admit(self._queue.popleft(), now())
+            elif len(self._free) == self.capacity and self._queue:
+                need = min(self.capacity, len(self._queue))
+                nth_arrival = list(self._queue)[need - 1].arrival_time
+                if nth_arrival <= now():
+                    for _ in range(need):
+                        self._admit(self._queue.popleft(), now())
+            active = self.capacity - len(self._free)
+            if active == 0:
+                # idle: sleep up to the next admissible arrival
+                if self.admission == "continuous":
+                    target = self._queue[0].arrival_time
+                else:
+                    need = min(self.capacity, len(self._queue))
+                    target = list(self._queue)[need - 1].arrival_time
+                wait = target - now()
+                if wait > 0:
+                    time.sleep(min(wait, 0.01))
+                continue
+            occupancy.append((now(), active))
+            budget = self._dev[4]            # not donated: unchanged
+            cache, tok, done, n_gen, toks = self._chunk_fn(
+                self.params, *self._dev)
+            self._dev = (cache, tok, done, n_gen, budget)
+            chunks += 1
+            done_h = np.asarray(done)
+            ngen_h = np.asarray(n_gen)
+            toks_h = np.asarray(toks)
+            tnow = now()
+            for slot in range(self.capacity):
+                st = self._slots[slot]
+                if st.request is None:
+                    continue
+                # a slot's real tokens are the first (n_gen - seen)
+                # entries of its chunk row: once done it emits fill
+                new = int(ngen_h[slot]) - st.count
+                if new > 0:
+                    st.tokens.extend(int(t) for t in toks_h[slot, :new])
+                    st.count += new
+                if done_h[slot]:
+                    self._finalize(slot, tnow, results)
+
+        elapsed = now()
+        gen = sum(r.generated for r in results)
+        return SchedulerRun(results=results, elapsed=elapsed, generated=gen,
+                            chunks=chunks, occupancy=occupancy)
