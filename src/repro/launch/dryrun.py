@@ -235,6 +235,10 @@ def build_cell(arch: str, shape_name: str, mesh, *, compression: str = "dense",
 
 def analyze(compiled, meta: Dict, tokens_per_step: int) -> Dict:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        # jax < 0.5 returns a one-element list of per-device dicts;
+        # newer versions return the dict directly
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     text = compiled.as_text()
     # Trip-count-aware accounting (XLA's cost_analysis counts while

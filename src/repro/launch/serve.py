@@ -9,7 +9,15 @@ old O(T^2) full-recompute fallback.  The legacy per-token Python loop
 is kept (``generate`` below) for comparison — the driver reports both,
 the CPU-container analogue of Table 7.
 
+``--draft-density`` turns on speculative decoding: a SECOND, more
+aggressively compressed MPIFA model drafts ``--spec-k`` tokens per
+round and the serving target verifies them in one dispatch
+(runtime/speculative.py).  Greedy speculative output is checked
+bit-identical against plain engine generation.
+
   PYTHONPATH=src python -m repro.launch.serve --arch tiny --density 0.55
+  PYTHONPATH=src python -m repro.launch.serve --arch tiny \
+      --draft-density 0.35 --spec-k 4
 """
 from __future__ import annotations
 
@@ -32,7 +40,8 @@ from repro.runtime.scheduler import Request, ServingScheduler
 def serve_continuous(model, params, *, vocab_size: int, n_requests: int = 8,
                      capacity: int = 4, chunk: int = 4, max_new: int = 16,
                      prompt_len: int = 16, eos_id=None, seed: int = 0,
-                     label: str = "dense") -> float:
+                     label: str = "dense", draft_params=None,
+                     spec_k: int = 4) -> float:
     """Continuous-batching vs run-to-completion on one request mix.
 
     Mixed generation budgets under simultaneous arrival: the drain
@@ -64,13 +73,19 @@ def serve_continuous(model, params, *, vocab_size: int, n_requests: int = 8,
                                  chunk=chunk, eos_id=eos_id,
                                  admission=mode,
                                  prompt_buckets=(prompt_len,),
-                                 cache_len=prompt_len + max_new + 1)
+                                 cache_len=(prompt_len + max_new + 1
+                                            + (spec_k if draft_params
+                                               is not None else 0)),
+                                 draft_params=draft_params, spec_k=spec_k)
         sched.run(list(warm_set))           # warm: compile chunk/admits
         runs[mode] = sched.run(list(bench_set))  # same mix for both modes
         r = runs[mode]
+        spec_note = (f", accept {r.acceptance_rate:.2f}"
+                     if draft_params is not None else "")
         print(f"[serve] {label} {mode:10s}: {r.tokens_per_sec:7.1f} "
               f"tokens/s  ({r.generated} tokens, {r.chunks} chunks, "
-              f"occupancy {r.mean_occupancy:.2f}/{capacity})", flush=True)
+              f"occupancy {r.mean_occupancy:.2f}/{capacity}{spec_note})",
+              flush=True)
     speedup = (runs["continuous"].tokens_per_sec
                / max(runs["drain"].tokens_per_sec, 1e-9))
     print(f"[serve] {label} continuous/drain speedup: {speedup:.2f}x",
@@ -152,6 +167,11 @@ def main(argv=None) -> int:
                     help="requests for the --continuous comparison")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--draft-density", type=float, default=None,
+                    help="MPIFA density for a speculative DRAFT model; "
+                         "enables draft/verify decoding")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per verify dispatch")
     ap.add_argument("--params-npz", default=None,
                     help="trained weights from launch/train.py checkpoints")
     ap.add_argument("--seed", type=int, default=0)
@@ -205,12 +225,56 @@ def main(argv=None) -> int:
             toks = res.tokens
         return toks
 
+    draft = None
+    if args.draft_density is not None:
+        if cfg.family not in ("dense", "vlm"):
+            print("[serve] --draft-density needs the transformer-family "
+                  "MPIFA driver; other archs compress drafts via "
+                  "core.mpifa.compress_linear_params", flush=True)
+            return 1
+        calib_d = calibration_batches(cfg.vocab_size, args.calib_samples, 64)
+        t0 = time.time()
+        draft = compress_transformer(
+            model, params, calib_d, MpifaConfig(density=args.draft_density))
+        print(f"[serve] draft compressed in {time.time()-t0:.1f}s "
+              f"(density {args.draft_density})", flush=True)
+
+    def serve_speculative(target_p, label, ref_toks):
+        res = engine.generate_speculative(
+            target_p, draft, prompts, args.max_new,
+            spec_k=args.spec_k, temperature=args.temperature,
+            top_k=args.top_k, key=jax.random.PRNGKey(args.seed))
+        print(f"[serve] {label} speculative (k={args.spec_k}, draft "
+              f"density {args.draft_density}): {res.tokens_per_sec:.1f} "
+              f"tokens/s, accept {res.acceptance_rate:.2f}, "
+              f"{res.emitted_per_dispatch:.2f} tokens/dispatch "
+              f"({res.rounds} verify dispatches)", flush=True)
+        if args.temperature == 0.0 and ref_toks is not None:
+            exact = bool(jnp.all(res.tokens == ref_toks))
+            print(f"[serve] {label} speculative greedy bit-identity: "
+                  f"{exact}", flush=True)
+            if not exact:
+                raise SystemExit(
+                    f"{label}: speculative greedy output diverged from "
+                    "plain engine generation")
+        return res
+
     toks_d = serve(params, "dense")
+    if draft is not None:
+        serve_speculative(params, "dense", toks_d)
     if args.continuous:
         serve_continuous(model, params, vocab_size=cfg.vocab_size,
                          n_requests=args.requests, capacity=args.capacity,
                          chunk=args.chunk, max_new=args.max_new,
                          prompt_len=args.prompt_len, seed=args.seed)
+        if draft is not None:
+            serve_continuous(model, params, vocab_size=cfg.vocab_size,
+                             n_requests=args.requests,
+                             capacity=args.capacity, chunk=args.chunk,
+                             max_new=args.max_new,
+                             prompt_len=args.prompt_len, seed=args.seed,
+                             label="dense+spec", draft_params=draft,
+                             spec_k=args.spec_k)
 
     if args.compression != "none":
         if cfg.family not in ("dense", "vlm"):
@@ -227,6 +291,8 @@ def main(argv=None) -> int:
         print(f"[serve] compressed in {time.time()-t0:.1f}s "
               f"(density {args.density})", flush=True)
         toks_c = serve(cparams, args.compression, unstacked=True)
+        if draft is not None and args.compression == "pifa":
+            serve_speculative(cparams, args.compression, toks_c)
         if args.continuous:
             serve_continuous(model, cparams, vocab_size=cfg.vocab_size,
                              n_requests=args.requests,

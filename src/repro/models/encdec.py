@@ -96,14 +96,15 @@ class EncDecModel:
 
     # ------------------------------------------------------------ decoder
     def _dec_block(self, bp, h, memory=None, cross_kv=None, cache=None,
-                   positions=None):
+                   positions=None, per_row=False):
         cfg = self.cfg
         hd = cfg.resolved_head_dim
         a_in = L.apply_norm(bp["ln1"], h, cfg.norm_eps)
         a_out, nc = L.attention_block(
             bp["attn"], a_in, num_heads=cfg.num_heads,
             num_kv_heads=cfg.num_kv_heads, head_dim=hd, causal=True,
-            use_rope=False, cache=cache, positions=positions)
+            use_rope=False, cache=cache, positions=positions,
+            per_row=per_row)
         h = h + a_out
         x_in = L.apply_norm(bp["ln_x"], h, cfg.norm_eps)
         if cross_kv is None:
@@ -193,6 +194,14 @@ class EncDecModel:
     def decode_step(self, params, token, cache):
         return self._decode_cached(params, token, cache)
 
+    def verify_step(self, params, tokens, cache):
+        """Speculative multi-token verify: the decoder self-attention
+        cache is purely positional (cross-KV is static memory), so
+        rejected suffixes roll back by resetting ``pos`` exactly as in
+        the decoder-only transformer."""
+        return self._decode_cached(params, tokens, cache, per_row=True,
+                                   all_logits=True)
+
     # ----------------------------------------------- compression harness
     def num_blocks(self) -> int:
         return self.cfg.num_layers
@@ -226,7 +235,8 @@ class EncDecModel:
             params[key] = stacked
         return params
 
-    def _decode_cached(self, params, tokens, cache, last_idx=None):
+    def _decode_cached(self, params, tokens, cache, last_idx=None,
+                       per_row=False, all_logits=False):
         cfg = self.cfg
         pos = cache["pos"]
         sq = tokens.shape[1]
@@ -239,7 +249,8 @@ class EncDecModel:
             bp, kc, vc, xk, xv = xs
             out, nc = self._dec_block(
                 bp, carry, cross_kv=(xk.astype(carry.dtype), xv.astype(carry.dtype)),
-                cache={"k": kc, "v": vc, "pos": pos}, positions=positions)
+                cache={"k": kc, "v": vc, "pos": pos}, positions=positions,
+                per_row=per_row)
             return out, (nc["k"], nc["v"])
 
         h, (ks, vs) = jax.lax.scan(
@@ -247,6 +258,6 @@ class EncDecModel:
                       cache["xk"], cache["xv"]))
         new_cache = dict(cache)
         new_cache.update({"k": ks, "v": vs, "pos": pos + sq})
-        h = L.apply_norm(params["dec_norm"], L.take_last(h, last_idx),
-                         cfg.norm_eps)
+        sel = h if all_logits else L.take_last(h, last_idx)
+        h = L.apply_norm(params["dec_norm"], sel, cfg.norm_eps)
         return L.unembed(params["embed"], h), new_cache

@@ -188,6 +188,13 @@ class HybridModel:
     def decode_step(self, params, token, cache):
         return self._step_cached(params, token, cache)
 
+    def verify_step(self, params, tokens, cache):
+        raise NotImplementedError(
+            "speculative verify needs positional rollback; the hybrid's "
+            "SSM backbone integrates every token irreversibly, so a "
+            "rejected suffix cannot be rolled out of the recurrence — "
+            "draft/verify serves attention-cache families only")
+
     # ----------------------------------------------- compression harness
     def num_blocks(self) -> int:
         return self.cfg.num_layers

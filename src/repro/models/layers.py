@@ -290,6 +290,7 @@ def attention_block(
     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
     use_rope: bool = True,
     window_slice: Optional[int] = None,
+    per_row: bool = False,
     tap=None,
     tap_prefix: str = "",
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
@@ -298,6 +299,9 @@ def attention_block(
     cache: {"k": (b, L, hkv, d), "v": ..., "pos": (b,) int32} -- decode
     appends at ``pos`` and attends over the first ``pos+sq`` slots.
     cross_kv: precomputed (k, v) from the encoder (whisper decoder).
+    per_row: multi-token cached writes scatter at each row's OWN ``pos``
+    (speculative verify scores k+1 tokens from diverged per-row
+    offsets) instead of the uniform ``pos[0]`` prefill slab write.
     """
     b, sq, _ = x.shape
     if tap is not None:
@@ -330,16 +334,19 @@ def attention_block(
             q = apply_rope(q, positions, rope_theta)
             k = apply_rope(k, positions, rope_theta)
         if cache is not None:
-            if sq == 1:
-                # decode: per-row scatter at each sequence's own pos —
-                # continuous-batching slots decode at *different*
-                # positions (runtime/scheduler.py), so the write index
+            if sq == 1 or per_row:
+                # decode / speculative verify: per-row scatter at each
+                # sequence's own pos — continuous-batching slots decode
+                # at *different* positions (runtime/scheduler.py) and
+                # verify scores k+1 tokens from diverged per-row
+                # offsets (runtime/speculative.py), so the write index
                 # must be per-row, not pos[0]
-                rows = jnp.arange(b)
-                kc = cache["k"].at[rows, cache["pos"]].set(
-                    k[:, 0].astype(cache["k"].dtype))
-                vc = cache["v"].at[rows, cache["pos"]].set(
-                    v[:, 0].astype(cache["v"].dtype))
+                rows = jnp.arange(b)[:, None]
+                idx = cache["pos"][:, None] + jnp.arange(sq)[None, :]
+                kc = cache["k"].at[rows, idx].set(
+                    k.astype(cache["k"].dtype))
+                vc = cache["v"].at[rows, idx].set(
+                    v.astype(cache["v"].dtype))
             else:
                 # prefill: uniform pos across batch (slot prefills run
                 # batch-1 from pos 0; training-free paths never mix)

@@ -333,6 +333,13 @@ class Mamba2Model:
         params["blocks"] = stacked
         return params
 
+    def verify_step(self, params, tokens, cache):
+        raise NotImplementedError(
+            "speculative verify needs positional rollback; the SSM state "
+            "integrates every token irreversibly, so a rejected suffix "
+            "cannot be rolled out of the recurrence — draft/verify "
+            "serves attention-cache families only")
+
     def decode_step(self, params, token, cache):
         h = L.embed(params["embed"], token)
 

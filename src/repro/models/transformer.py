@@ -101,6 +101,7 @@ class Transformer:
         positions: Optional[jax.Array] = None,
         cache: Optional[Dict[str, jax.Array]] = None,
         window_slice: Optional[int] = None,
+        per_row: bool = False,
         tap: Optional[Callable[[str, jax.Array], None]] = None,
     ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
         cfg = self.cfg
@@ -110,7 +111,8 @@ class Transformer:
             num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
             window=window, positions=positions, cache=cache,
-            window_slice=window_slice, tap=tap, tap_prefix="attn/")
+            window_slice=window_slice, per_row=per_row,
+            tap=tap, tap_prefix="attn/")
         h = h + a_out
         m_in = L.apply_norm(bp["ln2"], h, cfg.norm_eps)
         m_out = jnp.zeros_like(h)
@@ -218,7 +220,9 @@ class Transformer:
     def forward_cached(self, params: Pytree, tokens: jax.Array,
                        cache: Dict[str, jax.Array],
                        patches: Optional[jax.Array] = None,
-                       last_idx: Optional[jax.Array] = None
+                       last_idx: Optional[jax.Array] = None,
+                       per_row: bool = False,
+                       all_logits: bool = False
                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         """Prefill or decode: runs `tokens` against the cache.
 
@@ -227,6 +231,11 @@ class Transformer:
         reads sliced to the window) then one global layer — so a decode
         step touches O(window) bytes per local layer instead of the full
         cache (EXPERIMENTS.md §Perf, long_500k hillclimb).
+
+        ``per_row`` scatter-writes multi-token k/v at each row's own
+        ``pos`` and ``all_logits`` returns logits at every position —
+        together they are the speculative multi-token verify mode
+        (``verify_step``).
         """
         cfg = self.cfg
         h = self.embed_tokens(params, tokens, patches)
@@ -237,7 +246,9 @@ class Transformer:
                                              last_idx=last_idx)
         if "block_buckets" in params:  # rank-bucketed MPIFA_NS restack
             return self._forward_cached_buckets(params, h, cache,
-                                                last_idx=last_idx)
+                                                last_idx=last_idx,
+                                                per_row=per_row,
+                                                all_logits=all_logits)
         staged = (L.ATTN_WINDOW_SLICE and cfg.sliding_window and ratio
                   and cfg.num_layers % (ratio + 1) == 0
                   and tokens.shape[1] == 1
@@ -250,13 +261,15 @@ class Transformer:
                 bp, w, kc, vc = xs
                 layer_cache = {"k": kc, "v": vc, "pos": pos}
                 out, nc = self.block_apply(bp, carry, window=w,
-                                           cache=layer_cache)
+                                           cache=layer_cache,
+                                           per_row=per_row)
                 return out, (nc["k"], nc["v"])
 
             h, (ks, vs) = jax.lax.scan(
                 body, h, (params["blocks"], windows, cache["k"], cache["v"]))
             new_cache = {"k": ks, "v": vs, "pos": pos + h.shape[1]}
-            logits = self.final_logits(params, self._take_last(h, last_idx))
+            sel = h if all_logits else self._take_last(h, last_idx)
+            logits = self.final_logits(params, sel)
             return logits, new_cache
 
         # staged local:global decode
@@ -297,7 +310,9 @@ class Transformer:
 
     def _forward_cached_buckets(self, params: Pytree, h: jax.Array,
                                 cache: Dict[str, jax.Array],
-                                last_idx: Optional[jax.Array] = None
+                                last_idx: Optional[jax.Array] = None,
+                                per_row: bool = False,
+                                all_logits: bool = False
                                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         """Prefill/decode over rank-bucketed stacked blocks.
 
@@ -316,7 +331,7 @@ class Transformer:
             bp, w, kc, vc = xs
             layer_cache = {"k": kc, "v": vc, "pos": pos}
             out, nc = self.block_apply(bp, carry, window=w,
-                                       cache=layer_cache)
+                                       cache=layer_cache, per_row=per_row)
             return out, (nc["k"], nc["v"])
 
         off = 0
@@ -333,8 +348,8 @@ class Transformer:
         new_cache = {"k": jnp.concatenate(ks_parts, axis=0),
                      "v": jnp.concatenate(vs_parts, axis=0),
                      "pos": pos + h.shape[1]}
-        return (self.final_logits(params, self._take_last(h, last_idx)),
-                new_cache)
+        sel = h if all_logits else self._take_last(h, last_idx)
+        return self.final_logits(params, sel), new_cache
 
     # ------------------------------------------------- ring-cache serving
     def _ring_kv(self, bp, x, positions):
@@ -475,6 +490,27 @@ class Transformer:
     def decode_step(self, params, token, cache):
         """token: (b, 1) int32 -> (logits (b, 1, V), cache)."""
         return self.forward_cached(params, token, cache)
+
+    def verify_step(self, params, tokens, cache):
+        """Speculative multi-token verify: score ``tokens`` (b, k+1)
+        starting at each row's OWN cache position, in one dispatch.
+
+        Returns (logits (b, k+1, vocab), cache advanced by k+1): k/v
+        for all k+1 positions are scatter-written at per-row offsets
+        and logits are gathered at every position.  The caller rolls
+        back rejected suffixes by resetting ``pos`` — junk beyond each
+        row's write pointer stays causally masked until overwritten
+        (the scheduler's slot-prefill exactness argument).  Ring caches
+        refuse: their circular buffers overwrite live history, so a
+        rejected suffix cannot be rolled back.
+        """
+        if "kl" in cache:
+            raise ValueError(
+                "speculative verify needs positional rollback; ring "
+                "(local:global) caches overwrite live history in their "
+                "circular buffers — serve this arch without a draft")
+        return self.forward_cached(params, tokens, cache, per_row=True,
+                                   all_logits=True)
 
     # ----------------------------------------------- compression harness
     def num_blocks(self) -> int:

@@ -78,6 +78,7 @@ class GenerationEngine:
         self.max_buckets = max_buckets
         self.cache_dtype = cache_dtype
         self._fns: Dict[Tuple, Any] = {}
+        self._spec = None          # lazy SpeculativeEngine (shares restacks)
         # (source-params-object, restacked) pairs; identity-keyed so
         # repeated generate() calls with the same compressed params
         # skip the pad+stack walk (the held reference keeps ids live)
@@ -226,3 +227,28 @@ class GenerationEngine:
                                 tokens_per_sec=n / max(dt, 1e-9),
                                 generated=n,
                                 compile_time=compile_time)
+
+    # ------------------------------------------------------- speculative
+    def generate_speculative(self, params: Pytree, draft_params: Pytree,
+                             prompts: jax.Array, max_new: int,
+                             cache_len: Optional[int] = None, *,
+                             spec_k: int = 4, temperature: float = 0.0,
+                             top_k: int = 0, eos_id: Optional[int] = None,
+                             key: Optional[jax.Array] = None):
+        """Draft-then-verify generation: ``draft_params`` (a more
+        aggressively compressed model of the same architecture)
+        proposes ``spec_k`` tokens per round, ``params`` verifies all
+        k+1 positions in one dispatch.  Greedy output is bit-identical
+        to :meth:`generate`; sampled output draws from the same
+        distribution.  See runtime/speculative.py for the accept /
+        rollback machinery and accounting.
+        """
+        if self._spec is None:
+            from repro.runtime.speculative import SpeculativeEngine
+            self._spec = SpeculativeEngine(
+                self.model, max_buckets=self.max_buckets,
+                cache_dtype=self.cache_dtype, restacker=self)
+        return self._spec.generate(
+            params, draft_params, prompts, max_new, cache_len,
+            spec_k=spec_k, temperature=temperature, top_k=top_k,
+            eos_id=eos_id, key=key)

@@ -1,5 +1,5 @@
 """Continuous-batching serving scheduler: slot-allocated KV cache with
-mid-flight admission.
+mid-flight admission, batched ramp-up, sampling, and speculative slots.
 
 The generation engine (runtime/engine.py) fixed per-token dispatch
 overhead, but it still runs one batch to completion: under staggered
@@ -15,26 +15,49 @@ is at the layer level.  This scheduler closes that gap:
     decode steps over all slots (finished/free rows are frozen — their
     ``pos`` stops advancing and they emit fill tokens), so admission
     control costs O(1) dispatches per chunk instead of per token;
-  * **mid-flight admission**: at each chunk boundary, freed slots are
-    refilled from a host-side arrival queue.  An admitted request's
-    prompt is right-padded to a static bucket length and prefilled
-    batch-1 into a scratch cache, whose rows are then scattered into
-    the assigned slot — in-flight rows are never touched.
+  * **batched mid-flight admission**: at each chunk boundary, freed
+    slots are refilled from a host-side arrival queue.  Same-bucket
+    admissions are grouped into ONE batch-k prefill dispatch
+    (k ∈ ``ADMIT_BATCH``, capping the jit-cache key space over
+    (bucket, k) pairs) instead of one batch-1 dispatch per request —
+    bursty ramp-up pays one compile+dispatch per group;
+  * **per-slot sampling**: temperature / top-k decode draws from a
+    per-slot PRNG key that is split off the scheduler key at admission
+    and threaded through the chunk scan, so slot placement and chunk
+    boundaries never change a request's sample stream.  Configs a path
+    cannot honor (sampled speculative slots) raise instead of silently
+    decoding greedily;
+  * **speculative slots** (``draft_params`` + ``spec_k``): each slot
+    owns a draft KV cache alongside the target cache.  A chunk
+    iteration becomes one draft+verify ROUND — the draft proposes
+    ``spec_k`` tokens via the scanned decode surface, the target
+    scores all k+1 positions in one multi-token cached dispatch
+    (``model.verify_step``), and accepted runs advance ``pos`` by
+    1..k+1 while rejected suffixes roll back both caches (positional
+    rollback; junk beyond the write pointer stays causally masked).
+    Slots carry accept/reject counters; requests with
+    ``speculative=False`` share the batch with acceptance forced to
+    zero, which reduces exactly to plain greedy decode (mixing costs
+    draft compute for those rows, never correctness).
 
 Exactness: right padding keeps every real token at its true position
 (rope + causal mask are position-exact, pad columns are masked to
 exactly zero probability), and the per-row write pointer starts at the
 *unpadded* prompt length so the first generated token overwrites the
 first pad entry — junk beyond each row's write pointer is causally
-masked until overwritten.  Greedy decoding is therefore bit-identical
-to a single-request ``GenerationEngine.generate`` of the same prompt
-(tests/test_scheduler.py asserts this token-for-token).
+masked until overwritten.  Greedy decoding — plain AND speculative —
+is therefore bit-identical to a single-request
+``GenerationEngine.generate`` of the same prompt
+(tests/test_scheduler.py and tests/test_speculative.py assert this
+token-for-token).
 
 SSM families (mamba2/hybrid) integrate state over every input token,
 and ring-cache (local:global) archs fold the trailing window of the
 *padded* prompt into their circular buffers — both get exact-length
 slot prefills (``prompt_buckets=None`` is forced); plain attention
-families use buckets to bound prefill compiles.
+families use buckets to bound prefill compiles.  Neither SSM nor ring
+caches can roll a rejected suffix back, so speculative slots refuse
+those families at construction.
 """
 from __future__ import annotations
 
@@ -49,18 +72,25 @@ import numpy as np
 
 Pytree = Any
 
-__all__ = ["Request", "RequestResult", "SchedulerRun", "ServingScheduler"]
+__all__ = ["Request", "RequestResult", "SchedulerRun", "ServingScheduler",
+           "ADMIT_BATCH"]
+
+# Grouped-admission batch sizes, largest first.  Also the cap on the
+# jit-cache key space: one compiled admit fn per (prompt bucket, k).
+ADMIT_BATCH = (4, 2, 1)
 
 
 @dataclasses.dataclass(frozen=True)
 class Request:
     """One serving request; ``arrival_time`` is seconds after run start
-    (0 = already queued)."""
+    (0 = already queued).  ``speculative`` opts a request out of
+    draft/verify on a speculative scheduler (ignored otherwise)."""
 
     request_id: int
     prompt: np.ndarray            # (len,) int32
     max_new: int
     arrival_time: float = 0.0
+    speculative: bool = True
 
 
 @dataclasses.dataclass
@@ -73,6 +103,8 @@ class RequestResult:
     arrival_time: float
     admitted_at: float            # seconds after run start
     finished_at: float
+    accepted: int = 0             # draft tokens the target accepted
+    drafted: int = 0              # draft tokens proposed for this slot
 
     @property
     def latency(self) -> float:
@@ -88,10 +120,16 @@ class SchedulerRun:
     generated: int                # total real generated tokens
     chunks: int                   # chunk dispatches
     occupancy: List[Tuple[float, int]]   # (t, active slots) per chunk
+    accepted: int = 0             # total draft tokens accepted (spec)
+    drafted: int = 0              # total draft tokens proposed (spec)
 
     @property
     def tokens_per_sec(self) -> float:
         return self.generated / max(self.elapsed, 1e-9)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.drafted, 1)
 
     @property
     def mean_occupancy(self) -> float:
@@ -116,7 +154,8 @@ class ServingScheduler:
 
     One scheduler per (model, params, capacity); jitted chunk/admit
     functions are cached, so steady-state serving pays one dispatch per
-    ``chunk`` decode steps plus one per admission.
+    ``chunk`` decode steps (or draft/verify rounds) plus one per
+    admission group.
     """
 
     def __init__(self, model, params: Pytree, *, capacity: int = 8,
@@ -125,7 +164,10 @@ class ServingScheduler:
                  prompt_buckets: Optional[Sequence[int]] = (16, 32, 64, 128),
                  pad_id: Optional[int] = None, max_buckets: int = 4,
                  cache_dtype: Any = jnp.float32,
-                 admission: str = "continuous"):
+                 admission: str = "continuous",
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0,
+                 draft_params: Optional[Pytree] = None, spec_k: int = 4):
         if admission not in ("continuous", "drain"):
             raise ValueError("admission: 'continuous' or 'drain'")
         family = getattr(getattr(model, "cfg", None), "family", "dense")
@@ -136,13 +178,43 @@ class ServingScheduler:
             # SSM state integrates pad tokens: exact-length prefills only
             prompt_buckets = None
         cfg = getattr(model, "cfg", None)
-        if (cfg is not None and getattr(cfg, "sliding_window", 0)
-                and getattr(cfg, "local_global_ratio", 0)):
+        ring_capable = bool(
+            cfg is not None and getattr(cfg, "sliding_window", 0)
+            and getattr(cfg, "local_global_ratio", 0))
+        if ring_capable:
             # ring-capable archs: ring prefill folds the TRAILING window
             # into the circular buffer, so a right-padded prompt would
             # plant pad k/v at slots the decode position formula treats
             # as real past positions — exact-length prefills only
             prompt_buckets = None
+        # ---- sampling config: honor it or refuse, never silently greedy
+        if top_k and temperature == 0.0:
+            raise ValueError(
+                "top_k truncation is a sampling transform; it reaches the "
+                "greedy chunk path (temperature=0) which cannot honor it — "
+                "set temperature>0 or drop top_k")
+        self.speculative = draft_params is not None
+        if self.speculative:
+            if spec_k < 1:
+                raise ValueError("spec_k must be >= 1 with draft_params")
+            if temperature > 0.0:
+                raise ValueError(
+                    "sampling reached the speculative chunk path, which "
+                    "is greedy-only (its acceptance bar is bit-identity "
+                    "with target-only greedy decode) — use the engine's "
+                    "generate_speculative for sampled speculation or "
+                    "drop draft_params")
+            if family in ("ssm", "hybrid"):
+                raise ValueError(
+                    "speculative slots need positional rollback; the SSM "
+                    "state integrates every token irreversibly — serve "
+                    f"family '{family}' without draft_params")
+            if ring_capable:
+                raise ValueError(
+                    "speculative slots need positional rollback; ring "
+                    "(local:global) caches overwrite live history in "
+                    "their circular buffers — serve this arch without "
+                    "draft_params")
         self.model = model
         self.capacity = int(capacity)
         self.chunk = int(chunk)
@@ -157,7 +229,11 @@ class ServingScheduler:
         # serving benchmark's comparison isolates the admission policy.
         self.admission = admission
         self.cache_dtype = cache_dtype
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.spec_k = int(spec_k)
         self._cache_len = cache_len
+        self._sample_key = jax.random.PRNGKey(sample_seed)
         # restack list-form (compressed) params onto the scan path; the
         # engine's identity-keyed cache logic is reused via a private
         # engine instance (also keeps restacks shared if callers use
@@ -166,6 +242,11 @@ class ServingScheduler:
         self._restacker = GenerationEngine(model, max_buckets=max_buckets,
                                            cache_dtype=cache_dtype)
         self.params = self._restacker.prepare_params(params)
+        self.draft_params = None
+        if self.speculative:
+            # the draft is restacked independently — its MPIFA rank
+            # buckets may differ from the target's
+            self.draft_params = self._restacker.prepare_params(draft_params)
         from repro.models.linear import _PIFA_KERNEL
         if _PIFA_KERNEL:
             # per-bucket decode kernels: bucket ranks are known now, the
@@ -173,15 +254,17 @@ class ServingScheduler:
             # trace reads the registry
             from repro.kernels.pifa_matmul.autotune import tune_pifa_params
             tune_pifa_params(self.params, self.capacity)
+            if self.speculative:
+                tune_pifa_params(self.draft_params, self.capacity)
 
         # host-side state
         self._slots: List[_Slot] = [_Slot() for _ in range(self.capacity)]
         self._free: List[int] = list(range(self.capacity))[::-1]
         self._queue: Deque[Request] = collections.deque()
         self._chunk_fn = None
-        self._admit_fns: Dict[int, Any] = {}
+        self._admit_fns: Dict[Tuple[int, int], Any] = {}
         self._slot_axes = None
-        self._dev = None              # (cache, tok, done, n_gen, budget)
+        self._dev: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------- queue
     def submit(self, request: Request) -> None:
@@ -199,10 +282,15 @@ class ServingScheduler:
             b *= 2
         return b
 
+    def _spec_margin(self) -> int:
+        # speculation writes up to spec_k cache entries beyond the
+        # final accepted position before rolling back
+        return self.spec_k if self.speculative else 0
+
     def _required_cache_len(self) -> int:
         longest = max((self._bucket_for(len(r.prompt)) + r.max_new
                        for r in self._queue), default=32)
-        return longest + 1
+        return longest + self._spec_margin() + 1
 
     def _slot_axis_tree(self, cache_len: int):
         """Per-leaf batch axis of the cache pytree, discovered by
@@ -234,25 +322,53 @@ class ServingScheduler:
         self._ring = isinstance(cache, dict) and "kl" in cache
         self._slot_axes = self._slot_axis_tree(self._cache_len)
         b = self.capacity
-        self._dev = (cache,
-                     jnp.zeros((b, 1), jnp.int32),        # next input token
-                     jnp.ones((b,), jnp.bool_),           # done (free=done)
-                     jnp.zeros((b,), jnp.int32),          # n_gen
-                     jnp.zeros((b,), jnp.int32))          # budget
+        dev = {
+            "cache": cache,
+            "tok": jnp.zeros((b, 1), jnp.int32),      # next input token
+            "done": jnp.ones((b,), jnp.bool_),        # done (free=done)
+            "n_gen": jnp.zeros((b,), jnp.int32),
+            "budget": jnp.zeros((b,), jnp.int32),
+            "keys": jnp.zeros((b, 2), jnp.uint32),    # per-slot PRNG
+        }
+        if self.speculative:
+            dev["dcache"] = self.model.init_cache(
+                self.capacity, self._cache_len, dtype=self.cache_dtype)
+            dev["spec"] = jnp.zeros((b,), jnp.bool_)  # slot runs draft?
+            dev["acc"] = jnp.zeros((b,), jnp.int32)   # accepted drafts
+            dev["drafted"] = jnp.zeros((b,), jnp.int32)
+        self._dev = dev
 
     # --------------------------------------------------------- jitted fns
+    def _sample_tok(self, lg: jax.Array, step_keys: jax.Array) -> jax.Array:
+        """lg (b, V) -> (b, 1) int32 via per-row keys (b, 2)."""
+        if self.top_k > 0:
+            kth = jax.lax.top_k(lg, self.top_k)[0][..., -1:]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        nxt = jax.vmap(jax.random.categorical)(step_keys,
+                                               lg / self.temperature)
+        return nxt.astype(jnp.int32)[:, None]
+
     def _build_chunk_fn(self):
         model = self.model
         eos_id = self.eos_id
         fill = jnp.int32(eos_id if eos_id is not None else self.pad_id)
         chunk = self.chunk
+        temperature = self.temperature
 
-        def run(params, cache, tok, done, n_gen, budget):
+        def run(params, cache, tok, done, n_gen, budget, keys):
             def body(carry, _):
-                tok, cache, done, n_gen = carry
+                tok, cache, done, n_gen, keys = carry
                 logits, cache2 = model.decode_step(params, tok, cache)
-                nxt = jnp.argmax(logits[:, -1, :], axis=-1
-                                 ).astype(jnp.int32)[:, None]
+                lg = logits[:, -1, :]
+                if temperature > 0.0:
+                    # per-slot sample stream: split each row's key, use
+                    # one half now, carry the other — slot placement and
+                    # chunk boundaries never perturb a request's draws
+                    split2 = jax.vmap(jax.random.split)(keys)  # (b, 2, 2)
+                    nxt = self._sample_tok(lg, split2[:, 0])
+                    keys = split2[:, 1]
+                else:
+                    nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
                 nxt = jnp.where(done[:, None], fill, nxt)
                 n_gen2 = jnp.where(done, n_gen, n_gen + 1)
                 d2 = done
@@ -265,15 +381,106 @@ class ServingScheduler:
                 # bounds) and the row state is untouched until re-admission
                 cache2 = {**cache2,
                           "pos": jnp.where(done, cache["pos"], cache2["pos"])}
-                return (nxt, cache2, d2, n_gen2), nxt[:, 0]
+                return (nxt, cache2, d2, n_gen2, keys), nxt[:, 0]
 
-            (tok, cache, done, n_gen), toks = jax.lax.scan(
-                body, (tok, cache, done, n_gen), None, length=chunk)
-            return cache, tok, done, n_gen, toks.T   # toks (B, chunk)
+            (tok, cache, done, n_gen, keys), toks = jax.lax.scan(
+                body, (tok, cache, done, n_gen, keys), None, length=chunk)
+            return cache, tok, done, n_gen, keys, toks.T  # toks (B, chunk)
 
-        return jax.jit(run, donate_argnums=(1, 2, 3, 4))
+        return jax.jit(run, donate_argnums=(1, 2, 3, 4, 6))
 
-    def _build_admit_fn(self, bucket: int):
+    def _build_spec_chunk_fn(self):
+        """One scan iteration = one draft+verify ROUND: the draft
+        proposes ``spec_k`` tokens (plus one seating step so the last
+        proposal's k/v survives an all-accept), the target verifies all
+        k+1 positions in one dispatch, and each slot advances by
+        1..k+1 accepted tokens with both caches rolled back past the
+        rejected suffix.  Non-speculative slots force acceptance to
+        zero, which reduces to plain greedy decode (the correction
+        token IS the greedy next token)."""
+        model = self.model
+        eos_id = self.eos_id
+        fill = jnp.int32(eos_id if eos_id is not None else self.pad_id)
+        chunk = self.chunk
+        k = self.spec_k
+
+        def run(params, dparams, cache, dcache, tok, done, n_gen, budget,
+                spec, acc, drafted):
+            ar = jnp.arange(k + 1)[None, :]
+
+            def body(carry, _):
+                tok, cache, dcache, done, n_gen, acc, drafted = carry
+                pos0 = cache["pos"]
+
+                def dbody(c2, _):
+                    t, dc = c2
+                    lg, dc = model.decode_step(dparams, t, dc)
+                    nxt = jnp.argmax(lg[:, -1, :], axis=-1
+                                     ).astype(jnp.int32)[:, None]
+                    return (nxt, dc), nxt[:, 0]
+
+                (_, dcache2), props = jax.lax.scan(
+                    dbody, (tok, dcache), None, length=k + 1)
+                drafts = props[:k].T                         # (b, k)
+                vin = jnp.concatenate([tok, drafts], axis=1)
+                tlogits, cache2 = model.verify_step(params, vin, cache)
+                tgt = jnp.argmax(tlogits, axis=-1).astype(jnp.int32)
+                match = (drafts == tgt[:, :k]) & spec[:, None]
+                a = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1),
+                            axis=1)
+                emitted = tgt            # tgt[:, :a+1] = accepts + fixup
+                cap = jnp.maximum(budget - n_gen, 0)
+                emit_n = jnp.minimum(a + 1, cap)
+                if eos_id is not None:
+                    iseos = (emitted == eos_id) & (ar < emit_n[:, None])
+                    has_eos = jnp.any(iseos, axis=1)
+                    emit_n = jnp.where(has_eos,
+                                       jnp.argmax(iseos, axis=1) + 1,
+                                       emit_n)
+                emit_n = jnp.where(done, 0, emit_n)
+                n_gen2 = n_gen + emit_n
+                d2 = done | (n_gen2 >= budget)
+                if eos_id is not None:
+                    d2 = d2 | (~done & has_eos)
+                last = jnp.take_along_axis(
+                    emitted, jnp.maximum(emit_n - 1, 0)[:, None], axis=1)
+                tok2 = jnp.where(emit_n[:, None] > 0, last, tok)
+                # positional rollback for BOTH caches; done/free rows
+                # freeze at pos0 (emit_n == 0)
+                new_pos = pos0 + emit_n
+                cache2 = {**cache2, "pos": new_pos}
+                dcache2 = {**dcache2, "pos": new_pos}
+                acc2 = acc + jnp.where(done, 0, jnp.minimum(a, emit_n))
+                drafted2 = drafted + jnp.where(done | ~spec, 0, k)
+                em = jnp.where(ar < emit_n[:, None], emitted, fill)
+                return ((tok2, cache2, dcache2, d2, n_gen2, acc2,
+                         drafted2), (em, emit_n))
+
+            ((tok, cache, dcache, done, n_gen, acc, drafted),
+             (ems, ens)) = jax.lax.scan(
+                body, (tok, cache, dcache, done, n_gen, acc, drafted),
+                None, length=chunk)
+            # pack each slot's variable-advance rounds contiguously so
+            # the host reads "first (n_gen - seen) entries" exactly as
+            # in the plain chunk path
+            em = jnp.moveaxis(ems, 0, 1)             # (B, chunk, k+1)
+            en = ens.T                               # (B, chunk)
+            off = jnp.cumsum(en, axis=1) - en        # exclusive prefix
+            cap_len = chunk * (k + 1)
+            idx = off[:, :, None] + ar[None, :, :]
+            idx = jnp.where(ar[None, :, :] < en[:, :, None], idx, cap_len)
+            b = en.shape[0]
+            buf = jnp.full((b, cap_len), fill, jnp.int32)
+            rows = jnp.arange(b)[:, None]
+            buf = buf.at[rows, idx.reshape(b, -1)].set(
+                em.reshape(b, -1), mode="drop")
+            return cache, dcache, tok, done, n_gen, acc, drafted, buf
+
+        return jax.jit(run, donate_argnums=(2, 3, 4, 5, 6, 9, 10))
+
+    def _build_admit_fn(self, bucket: int, kb: int):
+        """Batch-``kb`` grouped admission: ONE prefill dispatch for
+        ``kb`` same-bucket prompts, rows scattered into their slots."""
         model = self.model
         eos_id = self.eos_id
         # scratch caches only need the prompt bucket's length: the
@@ -284,75 +491,182 @@ class ServingScheduler:
         cache_len = self._cache_len if self._ring else bucket
         cache_dtype = self.cache_dtype
         axes = self._slot_axes
+        temperature = self.temperature
+        speculative = self.speculative
 
-        def run(params, prompt, plen, max_new, slot,
-                cache, tok, done, n_gen, budget):
-            # batch-1 prefill into a scratch cache; the padded tail is
-            # causally masked, logits read at the true last token
-            small = model.init_cache(1, cache_len, dtype=cache_dtype)
-            logits, small = model.prefill(
-                params, prompt, small,
-                last_idx=jnp.reshape(plen, (1,)) - 1)
-            first = jnp.argmax(logits[:, -1, :], axis=-1
-                               ).astype(jnp.int32)[:, None]   # (1, 1)
+        def scatter_rows(big, sm, ax, slots):
+            for i in range(kb):
+                row = jax.lax.dynamic_slice_in_dim(sm, i, 1, ax)
+                starts = [jnp.int32(0)] * big.ndim
+                starts[ax] = slots[i]
+                big = jax.lax.dynamic_update_slice(
+                    big, row.astype(big.dtype), tuple(starts))
+            return big
+
+        def prefill_first(params, prompts, plen, admit_keys, keys, slots):
+            # batch-kb prefill into a scratch cache; padded tails are
+            # causally masked, logits read at each row's true last token
+            small = model.init_cache(kb, cache_len, dtype=cache_dtype)
+            logits, small = model.prefill(params, prompts, small,
+                                          last_idx=plen - 1)
+            lg = logits[:, -1, :]                              # (kb, V)
+            if temperature > 0.0:
+                # per-request sample stream starts here: one half of
+                # the admission key draws the first token, the other
+                # seeds the slot's chunk-scan stream
+                split2 = jax.vmap(jax.random.split)(admit_keys)
+                first = self._sample_tok(lg, split2[:, 0])[:, 0]
+                keys = keys.at[slots].set(split2[:, 1])
+            else:
+                first = jnp.argmax(lg, axis=-1).astype(jnp.int32)  # (kb,)
             # write pointer starts at the UNPADDED length: generated
             # tokens overwrite the pad tail entry by entry, and junk
             # beyond the pointer stays causally masked (exactness note
             # in the module docstring)
-            small = {**small,
-                     "pos": jnp.reshape(plen, (1,)).astype(jnp.int32)}
+            small = {**small, "pos": plen.astype(jnp.int32)}
+            return small, first, keys
 
-            def scatter(big, sm, ax):
-                starts = [jnp.int32(0)] * big.ndim
-                starts[ax] = slot
-                return jax.lax.dynamic_update_slice(
-                    big, sm.astype(big.dtype), tuple(starts))
-
-            cache = jax.tree.map(scatter, cache, small, axes)
-            first_done = jnp.asarray(max_new <= 1)
+        def set_slot_state(first, max_new, slots, tok, done, n_gen, budget):
+            first_done = max_new <= 1
             if eos_id is not None:
-                first_done = first_done | (first[0, 0] == eos_id)
-            tok = jax.lax.dynamic_update_slice_in_dim(tok, first, slot, 0)
-            done = done.at[slot].set(first_done)
-            n_gen = n_gen.at[slot].set(1)
-            budget = budget.at[slot].set(max_new)
-            return cache, tok, done, n_gen, budget, first[0, 0]
+                first_done = first_done | (first == eos_id)
+            tok = tok.at[slots].set(first[:, None])
+            done = done.at[slots].set(first_done)
+            n_gen = n_gen.at[slots].set(1)
+            budget = budget.at[slots].set(max_new)
+            return tok, done, n_gen, budget
 
-        return jax.jit(run, donate_argnums=(5, 6, 7, 8, 9))
+        if not speculative:
+            def run(params, prompts, plen, max_new, slots, admit_keys,
+                    cache, tok, done, n_gen, budget, keys):
+                small, first, keys = prefill_first(
+                    params, prompts, plen, admit_keys, keys, slots)
+                cache = jax.tree.map(
+                    lambda big, sm, ax: scatter_rows(big, sm, ax, slots),
+                    cache, small, axes)
+                tok, done, n_gen, budget = set_slot_state(
+                    first, max_new, slots, tok, done, n_gen, budget)
+                return cache, tok, done, n_gen, budget, keys, first
+
+            return jax.jit(run, donate_argnums=(6, 7, 8, 9, 10, 11))
+
+        def run(params, dparams, prompts, plen, max_new, slots, spec_new,
+                cache, dcache, tok, done, n_gen, budget, spec, acc,
+                drafted):
+            admit_keys = jnp.zeros((kb, 2), jnp.uint32)  # spec is greedy
+            small, first, _ = prefill_first(
+                params, prompts, plen, admit_keys,
+                jnp.zeros((0, 2), jnp.uint32), slots)
+            cache = jax.tree.map(
+                lambda big, sm, ax: scatter_rows(big, sm, ax, slots),
+                cache, small, axes)
+            # draft shares the prompt: its own prefill, its own cache
+            dsmall = model.init_cache(kb, cache_len, dtype=cache_dtype)
+            _, dsmall = model.prefill(dparams, prompts, dsmall,
+                                      last_idx=plen - 1)
+            dsmall = {**dsmall, "pos": plen.astype(jnp.int32)}
+            dcache = jax.tree.map(
+                lambda big, sm, ax: scatter_rows(big, sm, ax, slots),
+                dcache, dsmall, axes)
+            spec = spec.at[slots].set(spec_new)
+            acc = acc.at[slots].set(0)
+            drafted = drafted.at[slots].set(0)
+            tok, done, n_gen, budget = set_slot_state(
+                first, max_new, slots, tok, done, n_gen, budget)
+            return (cache, dcache, tok, done, n_gen, budget, spec, acc,
+                    drafted, first)
+
+        return jax.jit(run, donate_argnums=tuple(range(7, 16)))
 
     # ---------------------------------------------------------- admission
-    def _admit(self, req: Request, now: float) -> None:
-        plen = len(req.prompt)
-        bucket = self._bucket_for(plen)
-        if bucket + req.max_new + 1 > self._cache_len:
+    def _check_fits(self, req: Request, bucket: int) -> None:
+        if bucket + req.max_new + self._spec_margin() + 1 > self._cache_len:
             # out-of-bounds cache writes would be silently dropped by
             # the scatter; refuse instead
             raise ValueError(
                 f"request {req.request_id}: prompt bucket {bucket} + "
-                f"max_new {req.max_new} exceeds cache_len "
+                f"max_new {req.max_new} (+ spec margin "
+                f"{self._spec_margin()}) exceeds cache_len "
                 f"{self._cache_len}")
-        slot = self._free.pop()
-        padded = np.full((1, bucket), self.pad_id, np.int32)
-        padded[0, :plen] = np.asarray(req.prompt, np.int32)
-        fn = self._admit_fns.get(bucket)
-        if fn is None:
-            fn = self._admit_fns[bucket] = self._build_admit_fn(bucket)
-        cache, tok, done, n_gen, budget = self._dev
-        cache, tok, done, n_gen, budget, first = fn(
-            self.params, jnp.asarray(padded), jnp.int32(plen),
-            jnp.int32(req.max_new), jnp.int32(slot),
-            cache, tok, done, n_gen, budget)
-        self._dev = (cache, tok, done, n_gen, budget)
-        st = self._slots[slot]
-        st.request = req
-        # keep the first token as a device scalar: int() here would
-        # block the host on the prefill dispatch; finalize converts
-        st.tokens = [first]
-        st.count = 1
-        st.admitted_at = now
 
-    def _finalize(self, slot: int, now: float,
-                  results: List[RequestResult]) -> None:
+    def _pop_admissible(self) -> Request:
+        """Validate the queue head BEFORE popping it (and before the
+        caller pops a free slot): an oversized request then raises with
+        the queue and the slot allocator untouched."""
+        req = self._queue[0]
+        self._check_fits(req, self._bucket_for(len(req.prompt)))
+        return self._queue.popleft()
+
+    def _admit_many(self, admissions: List[Tuple[Request, int]],
+                    now: float) -> None:
+        """Group (request, slot) pairs by prompt bucket and admit each
+        group through batch-k prefill dispatches (k ∈ ADMIT_BATCH)."""
+        groups: Dict[int, List[Tuple[Request, int]]] = {}
+        for req, slot in admissions:
+            bucket = self._bucket_for(len(req.prompt))
+            groups.setdefault(bucket, []).append((req, slot))
+        for bucket, pairs in groups.items():
+            i = 0
+            while i < len(pairs):
+                kb = next(s for s in ADMIT_BATCH if s <= len(pairs) - i)
+                self._admit_batch(bucket, pairs[i:i + kb], now)
+                i += kb
+
+    def _admit_batch(self, bucket: int,
+                     pairs: List[Tuple[Request, int]], now: float) -> None:
+        kb = len(pairs)
+        padded = np.full((kb, bucket), self.pad_id, np.int32)
+        plens = np.zeros((kb,), np.int32)
+        max_news = np.zeros((kb,), np.int32)
+        slots = np.zeros((kb,), np.int32)
+        spec_new = np.zeros((kb,), bool)
+        for i, (req, slot) in enumerate(pairs):
+            plen = len(req.prompt)
+            padded[i, :plen] = np.asarray(req.prompt, np.int32)
+            plens[i] = plen
+            max_news[i] = req.max_new
+            slots[i] = slot
+            spec_new[i] = bool(req.speculative)
+        fn = self._admit_fns.get((bucket, kb))
+        if fn is None:
+            fn = self._admit_fns[(bucket, kb)] = self._build_admit_fn(
+                bucket, kb)
+        d = self._dev
+        if self.speculative:
+            (cache, dcache, tok, done, n_gen, budget, spec, acc, drafted,
+             first) = fn(
+                self.params, self.draft_params, jnp.asarray(padded),
+                jnp.asarray(plens), jnp.asarray(max_news),
+                jnp.asarray(slots), jnp.asarray(spec_new),
+                d["cache"], d["dcache"], d["tok"], d["done"], d["n_gen"],
+                d["budget"], d["spec"], d["acc"], d["drafted"])
+            d.update(cache=cache, dcache=dcache, tok=tok, done=done,
+                     n_gen=n_gen, budget=budget, spec=spec, acc=acc,
+                     drafted=drafted)
+        else:
+            if self.temperature > 0.0:
+                keys = jax.random.split(self._sample_key, kb + 1)
+                self._sample_key, admit_keys = keys[0], keys[1:]
+            else:
+                admit_keys = jnp.zeros((kb, 2), jnp.uint32)
+            cache, tok, done, n_gen, budget, keys2, first = fn(
+                self.params, jnp.asarray(padded), jnp.asarray(plens),
+                jnp.asarray(max_news), jnp.asarray(slots), admit_keys,
+                d["cache"], d["tok"], d["done"], d["n_gen"], d["budget"],
+                d["keys"])
+            d.update(cache=cache, tok=tok, done=done, n_gen=n_gen,
+                     budget=budget, keys=keys2)
+        for i, (req, slot) in enumerate(pairs):
+            st = self._slots[slot]
+            st.request = req
+            # keep the first token as a device scalar: int() here would
+            # block the host on the prefill dispatch; finalize converts
+            st.tokens = [first[i]]
+            st.count = 1
+            st.admitted_at = now
+
+    def _finalize(self, slot: int, now: float, results: List[RequestResult],
+                  acc_h=None, drafted_h=None) -> None:
         st = self._slots[slot]
         req = st.request
         results.append(RequestResult(
@@ -366,6 +680,8 @@ class ServingScheduler:
             arrival_time=req.arrival_time,
             admitted_at=st.admitted_at,
             finished_at=now,
+            accepted=int(acc_h[slot]) if acc_h is not None else 0,
+            drafted=int(drafted_h[slot]) if drafted_h is not None else 0,
         ))
         st.request = None
         st.tokens = []
@@ -379,8 +695,9 @@ class ServingScheduler:
 
         Arrivals are honoured against the wall clock: a request with
         ``arrival_time=t`` becomes admissible ``t`` seconds after the
-        drain starts.  Admission happens at chunk boundaries; the hot
-        loop is one jitted chunk dispatch per ``chunk`` decode steps.
+        drain starts.  Admission happens at chunk boundaries (grouped
+        into batch-k prefills); the hot loop is one jitted chunk
+        dispatch per ``chunk`` decode steps or draft/verify rounds.
         """
         for r in requests or ():
             self.submit(r)
@@ -388,7 +705,8 @@ class ServingScheduler:
             sorted(self._queue, key=lambda r: r.arrival_time))
         self._ensure_state()
         if self._chunk_fn is None:
-            self._chunk_fn = self._build_chunk_fn()
+            self._chunk_fn = (self._build_spec_chunk_fn() if self.speculative
+                              else self._build_chunk_fn())
 
         results: List[RequestResult] = []
         occupancy: List[Tuple[float, int]] = []
@@ -402,17 +720,24 @@ class ServingScheduler:
             # admission: continuous refills freed slots every chunk
             # boundary; drain is textbook static batching — it waits
             # for ALL slots to free, then for a full batch's worth of
-            # arrivals (or the queue tail), and admits them at once
+            # arrivals (or the queue tail), and admits them at once.
+            # Either way the admissible set is grouped into batch-k
+            # prefill dispatches (_admit_many).
+            pending: List[Tuple[Request, int]] = []
             if self.admission == "continuous":
                 while (self._free and self._queue
                        and self._queue[0].arrival_time <= now()):
-                    self._admit(self._queue.popleft(), now())
+                    pending.append((self._pop_admissible(),
+                                    self._free.pop()))
             elif len(self._free) == self.capacity and self._queue:
                 need = min(self.capacity, len(self._queue))
                 nth_arrival = list(self._queue)[need - 1].arrival_time
                 if nth_arrival <= now():
                     for _ in range(need):
-                        self._admit(self._queue.popleft(), now())
+                        pending.append((self._pop_admissible(),
+                                        self._free.pop()))
+            if pending:
+                self._admit_many(pending, now())
             active = self.capacity - len(self._free)
             if active == 0:
                 # idle: sleep up to the next admissible arrival
@@ -426,14 +751,33 @@ class ServingScheduler:
                     time.sleep(min(wait, 0.01))
                 continue
             occupancy.append((now(), active))
-            budget = self._dev[4]            # not donated: unchanged
-            cache, tok, done, n_gen, toks = self._chunk_fn(
-                self.params, *self._dev)
-            self._dev = (cache, tok, done, n_gen, budget)
+            d = self._dev
+            acc_h = drafted_h = None
+            if self.speculative:
+                (cache, dcache, tok, done, n_gen, acc, drafted,
+                 toks) = self._chunk_fn(
+                    self.params, self.draft_params, d["cache"], d["dcache"],
+                    d["tok"], d["done"], d["n_gen"], d["budget"],
+                    d["spec"], d["acc"], d["drafted"])
+                d.update(cache=cache, dcache=dcache, tok=tok, done=done,
+                         n_gen=n_gen, acc=acc, drafted=drafted)
+            else:
+                cache, tok, done, n_gen, keys, toks = self._chunk_fn(
+                    self.params, d["cache"], d["tok"], d["done"],
+                    d["n_gen"], d["budget"], d["keys"])
+                d.update(cache=cache, tok=tok, done=done, n_gen=n_gen,
+                         keys=keys)
             chunks += 1
-            done_h = np.asarray(done)
-            ngen_h = np.asarray(n_gen)
+            done_h = np.asarray(d["done"])
+            ngen_h = np.asarray(d["n_gen"])
             toks_h = np.asarray(toks)
+            if self.speculative and any(
+                    done_h[s] for s in range(self.capacity)
+                    if self._slots[s].request is not None):
+                # accept counters only matter when a slot finalizes this
+                # chunk; skip the transfers on no-finish chunks
+                acc_h = np.asarray(d["acc"])
+                drafted_h = np.asarray(d["drafted"])
             tnow = now()
             for slot in range(self.capacity):
                 st = self._slots[slot]
@@ -441,14 +785,19 @@ class ServingScheduler:
                     continue
                 # a slot's real tokens are the first (n_gen - seen)
                 # entries of its chunk row: once done it emits fill
+                # (speculative rounds pre-pack variable advances the
+                # same way)
                 new = int(ngen_h[slot]) - st.count
                 if new > 0:
                     st.tokens.extend(int(t) for t in toks_h[slot, :new])
                     st.count += new
                 if done_h[slot]:
-                    self._finalize(slot, tnow, results)
+                    self._finalize(slot, tnow, results, acc_h, drafted_h)
 
         elapsed = now()
         gen = sum(r.generated for r in results)
-        return SchedulerRun(results=results, elapsed=elapsed, generated=gen,
-                            chunks=chunks, occupancy=occupancy)
+        return SchedulerRun(
+            results=results, elapsed=elapsed, generated=gen, chunks=chunks,
+            occupancy=occupancy,
+            accepted=sum(r.accepted for r in results),
+            drafted=sum(r.drafted for r in results))

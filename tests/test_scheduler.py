@@ -174,6 +174,24 @@ def test_finish_exactly_at_chunk_boundary(tiny, engine):
     assert run.chunks == 4
 
 
+def test_oversized_request_leaves_state_intact(tiny):
+    """A request that cannot fit the cache raises BEFORE its queue
+    entry and any free slot are consumed: the scheduler stays usable
+    after dropping the offender."""
+    cfg, model, params = tiny
+    reqs = _requests(cfg, lens=[5, 6], budgets=[4, 4])
+    sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                             prompt_buckets=(8,), cache_len=16)
+    big = Request(request_id=9, prompt=np.zeros(5, np.int32), max_new=50)
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        sched.run([big] + list(reqs))
+    assert len(sched._free) == sched.capacity      # no slot leaked
+    assert len(sched._queue) == 3                  # nothing lost
+    sched._queue.popleft()                         # drop the offender
+    run = sched.run()
+    assert sorted(r.request_id for r in run.results) == [0, 1]
+
+
 def test_arrival_times_respected(tiny):
     """A request with a future arrival_time is not admitted before it."""
     cfg, model, params = tiny
@@ -273,6 +291,91 @@ def test_bucket_boundaries_granularity():
     # indivisible layer count falls back to granularity 1
     parts_f = bucket_boundaries(blocks[:5], max_buckets=2, granularity=3)
     assert parts_f is not None
+
+
+# --------------------------------------------------- per-slot sampling
+
+def test_scheduler_sampling_deterministic_per_seed(tiny):
+    """Temperature/top-k decoding draws from per-slot PRNG keys split
+    at admission: the same seed reproduces every request's stream, a
+    different seed changes it, tokens stay in-vocab."""
+    cfg, model, params = tiny
+
+    def run_with(seed):
+        sched = ServingScheduler(model, params, capacity=2, chunk=3,
+                                 prompt_buckets=(8, 16),
+                                 temperature=0.8, top_k=4,
+                                 sample_seed=seed)
+        reqs = _requests(cfg, lens=[5, 9, 7], budgets=[6, 4, 5])
+        return {r.request_id: r.tokens.tolist()
+                for r in sched.run(reqs).results}
+
+    r1, r2, r3 = run_with(7), run_with(7), run_with(8)
+    assert r1 == r2
+    assert r1 != r3
+    assert all(t < cfg.vocab_size for toks in r1.values() for t in toks)
+
+
+def test_scheduler_sampling_unaffected_by_slot_placement(tiny):
+    """A request's sample stream comes from its admission-split key,
+    NOT from which slot or chunk boundary it lands on: serving the same
+    request alone or behind a queue yields the same tokens."""
+    cfg, model, params = tiny
+    reqs = _requests(cfg, lens=[6, 6, 6], budgets=[5, 5, 5])
+
+    def serve(queue):
+        sched = ServingScheduler(model, params, capacity=1, chunk=2,
+                                 prompt_buckets=(8,), temperature=0.6,
+                                 sample_seed=3)
+        return {r.request_id: r.tokens.tolist()
+                for r in sched.run(queue).results}
+
+    # key split order is admission order, so request 0 admitted first
+    # sees the same key whether or not others queue behind it
+    alone = serve([reqs[0]])
+    queued = serve(list(reqs))
+    assert queued[0] == alone[0]
+
+
+def test_scheduler_greedy_rejects_top_k(tiny):
+    cfg, model, params = tiny
+    with pytest.raises(ValueError, match="top_k"):
+        ServingScheduler(model, params, top_k=8)
+
+
+# --------------------------------------------------- batched admission
+
+def test_batched_admission_bit_identity(tiny, engine):
+    """A simultaneous same-bucket burst admits through grouped batch-k
+    prefills (k in ADMIT_BATCH) — one dispatch per group, outputs still
+    bit-identical to the single-request engine."""
+    from repro.runtime.scheduler import ADMIT_BATCH
+    cfg, model, params = tiny
+    # 7 same-bucket arrivals into 8 free slots -> groups of 4 + 2 + 1
+    reqs = _requests(cfg, lens=[5, 6, 7, 5, 8, 6, 4],
+                     budgets=[4, 6, 3, 5, 4, 2, 6])
+    sched = ServingScheduler(model, params, capacity=8, chunk=2,
+                             prompt_buckets=(8,))
+    run = sched.run(reqs)
+    assert sorted(r.request_id for r in run.results) == list(range(7))
+    _assert_bit_identical(engine, params, run, reqs, eos_id=None)
+    # jit-cache key space stays capped at (bucket, k) pairs
+    assert set(sched._admit_fns) == {(8, 4), (8, 2), (8, 1)}
+    assert all(kb in ADMIT_BATCH for _, kb in sched._admit_fns)
+
+
+def test_batched_admission_mixed_buckets(tiny, engine):
+    """Admissions spanning buckets group per bucket; each group pays
+    its own batch-k prefill and every request still serves exactly."""
+    cfg, model, params = tiny
+    reqs = _requests(cfg, lens=[5, 14, 6, 12, 7, 3],
+                     budgets=[4, 3, 5, 6, 2, 4])
+    sched = ServingScheduler(model, params, capacity=6, chunk=2,
+                             eos_id=1, prompt_buckets=(8, 16))
+    run = sched.run(reqs)
+    assert sorted(r.request_id for r in run.results) == list(range(6))
+    _assert_bit_identical(engine, params, run, reqs, eos_id=1)
+    assert all(kb in (1, 2, 4) for _, kb in sched._admit_fns)
 
 
 # ------------------------------------------------- per-bucket block sizes
