@@ -15,6 +15,17 @@ noise), compresses MPIFA drafts at a sweep of densities, and measures:
   * greedy bit-identity against plain engine generation (hard fail if
     it ever diverges).
 
+Two further blocks lock down the ISSUE-4 surface:
+
+  * **families**: mamba2 (SSM), zamba2 (hybrid) and gemma3 (ring-cache)
+    smoke targets run greedy draft/verify through the per-step
+    state-checkpoint rollback path — bit-identity is a hard gate, and
+    the identical-weights draft must beat 1 token/verify-dispatch;
+  * **sampled scheduler slots**: temperature/top-k speculative
+    scheduler slots must reproduce the batch-1
+    ``engine.generate_speculative`` stream of each request's key
+    (``spec_request_key``) — also a hard gate.
+
 Writes machine-readable ``BENCH_spec.json``.
 
   PYTHONPATH=src python benchmarks/spec_bench.py
@@ -35,10 +46,105 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 
 from common import BENCH_CFG, calib_tokens, emit, trained_tiny  # noqa: E402
 
+from repro.configs.base import get_smoke_config  # noqa: E402
 from repro.core.mpifa import MpifaConfig, compress_transformer  # noqa: E402
+from repro.launch.serve import compress_generic  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
 from repro.runtime.engine import GenerationEngine  # noqa: E402
+from repro.runtime.scheduler import Request, ServingScheduler  # noqa: E402
 
 DRAFT_DENSITIES = (0.8, 0.6, 0.4)
+FAMILY_ARCHS = ("mamba2_2p7b", "zamba2_1p2b", "gemma3_12b")
+
+
+def bench_families(max_new: int, spec_k: int, seed: int) -> dict:
+    """Greedy draft/verify for the checkpoint-rollback families: SSM,
+    hybrid, ring.  Hard-fails on any bit-identity divergence; returns
+    per-family rows for identical and compressed drafts."""
+    rows = {}
+    rng = np.random.default_rng(seed)
+    for arch in FAMILY_ARCHS:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (2, 12)), jnp.int32)
+        k = min(spec_k, cfg.sliding_window - 1) if cfg.sliding_window \
+            else spec_k
+        eng = GenerationEngine(model)
+        ref = eng.generate(params, prompts, max_new)
+        arch_rows = []
+        for dlabel, dparams in (
+                ("identical", params),
+                ("pifa_0.5", compress_generic(model, params, 0.5))):
+            res = eng.generate_speculative(params, dparams, prompts,
+                                           max_new, spec_k=k)
+            exact = bool(jnp.all(res.tokens == ref.tokens))
+            if not exact:
+                raise SystemExit(
+                    f"{arch}/{dlabel}: speculative greedy output "
+                    "diverged from plain engine generation")
+            row = {
+                "draft": dlabel, "spec_k": k,
+                "acceptance_rate": round(res.acceptance_rate, 3),
+                "emitted_per_dispatch": round(res.emitted_per_dispatch,
+                                              3),
+                "verify_dispatches": res.rounds,
+                "bit_identical_greedy": exact,
+            }
+            arch_rows.append(row)
+            emit(f"spec/{arch}/{dlabel}/k{k}", 0.0,
+                 f"accept {row['acceptance_rate']} "
+                 f"emit/disp {row['emitted_per_dispatch']}")
+        if arch_rows[0]["emitted_per_dispatch"] <= 1.0:
+            raise SystemExit(
+                f"{arch}: identical-weights draft failed to beat 1 "
+                "token/verify-dispatch — checkpoint rollback is eating "
+                "accepted runs")
+        rows[arch] = arch_rows
+    return rows
+
+
+def bench_sampled_scheduler(model, params, draft, *, spec_k: int,
+                            seed: int) -> dict:
+    """Sampled speculative scheduler slots vs per-request engine
+    streams (the sampled-slot key-threading contract).  Hard-fails on
+    any stream divergence."""
+    temperature, top_k = 0.8, 4
+    rng = np.random.default_rng(seed + 1)
+    reqs = [Request(request_id=i,
+                    prompt=rng.integers(0, BENCH_CFG.vocab_size,
+                                        int(l)).astype(np.int32),
+                    max_new=int(m))
+            for i, (l, m) in enumerate(zip((12, 16, 9, 14),
+                                           (16, 10, 14, 12)))]
+    sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                             prompt_buckets=(16,),
+                             cache_len=16 + 16 + spec_k + 1,
+                             draft_params=draft, spec_k=spec_k,
+                             temperature=temperature, top_k=top_k,
+                             sample_seed=seed)
+    run = sched.run(reqs)
+    eng = GenerationEngine(model)
+    for r in sorted(run.results, key=lambda r: r.request_id):
+        req = reqs[r.request_id]
+        ref = eng.generate_speculative(
+            params, draft, jnp.asarray(req.prompt[None, :]), req.max_new,
+            spec_k=spec_k, temperature=temperature, top_k=top_k,
+            key=sched.spec_request_key(req.request_id))
+        if not np.array_equal(r.tokens, np.asarray(ref.tokens[0])):
+            raise SystemExit(
+                f"sampled scheduler slot {r.request_id} diverged from "
+                "the batch-1 engine stream for its request key")
+    row = {
+        "temperature": temperature, "top_k": top_k, "spec_k": spec_k,
+        "requests": len(reqs),
+        "acceptance_rate": round(run.acceptance_rate, 3),
+        "matches_engine_streams": True,
+    }
+    emit(f"spec/scheduler_sampled/k{spec_k}", 0.0,
+         f"accept {row['acceptance_rate']} streams match engine")
+    return row
 
 
 def main(argv=None) -> int:
@@ -129,6 +235,21 @@ def main(argv=None) -> int:
                      f"accept {row['acceptance_rate']} "
                      f"emit/disp {row['emitted_per_dispatch']}")
         report["targets"][tlabel] = rows
+
+    # ---- checkpoint-rollback families (SSM / hybrid / ring): greedy
+    # bit-identity is a hard gate, identical draft must beat 1 tok/disp
+    report["families"] = bench_families(args.max_new, max(args.spec_k),
+                                        args.seed)
+    for arch_rows in report["families"].values():
+        best_emitted = max(best_emitted,
+                           max(r["emitted_per_dispatch"]
+                               for r in arch_rows))
+
+    # ---- sampled speculative scheduler slots: stream-equality with
+    # the batch-1 engine per request key is a hard gate
+    report["sampled_scheduler"] = bench_sampled_scheduler(
+        model, params, drafts[0.6], spec_k=min(args.spec_k),
+        seed=args.seed)
 
     report["best_emitted_per_dispatch"] = best_emitted
     out = Path(args.out)

@@ -10,10 +10,14 @@ is kept (``generate`` below) for comparison — the driver reports both,
 the CPU-container analogue of Table 7.
 
 ``--draft-density`` turns on speculative decoding: a SECOND, more
-aggressively compressed MPIFA model drafts ``--spec-k`` tokens per
-round and the serving target verifies them in one dispatch
-(runtime/speculative.py).  Greedy speculative output is checked
-bit-identical against plain engine generation.
+aggressively compressed model drafts ``--spec-k`` tokens per round
+and the serving target verifies them in one dispatch
+(runtime/speculative.py).  Transformer-family drafts come from the
+calibrated MPIFA driver; every other family (SSM / hybrid / encdec /
+ring) uses the data-free PIFA walker (``compress_generic``) — their
+verify rolls back through per-step state checkpoints.  Greedy
+speculative output is checked bit-identical against plain engine
+generation.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tiny --density 0.55
   PYTHONPATH=src python -m repro.launch.serve --arch tiny \
@@ -91,6 +95,40 @@ def serve_continuous(model, params, *, vocab_size: int, n_requests: int = 8,
     print(f"[serve] {label} continuous/drain speedup: {speedup:.2f}x",
           flush=True)
     return speedup
+
+
+def compress_generic(model, params, density, *, per_block=None):
+    """Family-agnostic PIFA compression: every dense linear inside every
+    block is factorized data-free (SVD prune, no reconstruction).
+
+    The transformer-family MPIFA calibration driver
+    (``compress_transformer``) stays the paper-faithful path; this
+    walker is what gives the OTHER families (mamba2 / hybrid / encdec /
+    ring archs) cheap speculative DRAFTS and compressed serving
+    targets.  ``per_block`` (list of densities, cycled over blocks)
+    produces MPIFA_NS-style heterogeneous ranks.
+    """
+    from repro.core.mpifa import MpifaConfig, compress_linear_params
+
+    def walk(node, mc):
+        if isinstance(node, dict):
+            if "w" in node and getattr(node["w"], "ndim", 0) == 2:
+                return compress_linear_params(mc, node)
+            return {k: walk(v, mc) for k, v in node.items()}
+        return node
+
+    lst = model.unstack_blocks(params)
+    out = dict(lst)
+    for key in ("blocks", "mamba", "enc_blocks", "dec_blocks"):
+        if key not in lst or not isinstance(lst[key], list):
+            continue
+        blocks = []
+        for i, bp in enumerate(lst[key]):
+            rho = per_block[i % len(per_block)] if per_block else density
+            blocks.append(walk(bp, MpifaConfig(density=rho, prune="svd",
+                                               reconstruct="none")))
+        out[key] = blocks
+    return out
 
 
 def generate(model, params, prompts, max_new: int, cache_len: int,
@@ -227,17 +265,21 @@ def main(argv=None) -> int:
 
     draft = None
     if args.draft_density is not None:
-        if cfg.family not in ("dense", "vlm"):
-            print("[serve] --draft-density needs the transformer-family "
-                  "MPIFA driver; other archs compress drafts via "
-                  "core.mpifa.compress_linear_params", flush=True)
-            return 1
-        calib_d = calibration_batches(cfg.vocab_size, args.calib_samples, 64)
         t0 = time.time()
-        draft = compress_transformer(
-            model, params, calib_d, MpifaConfig(density=args.draft_density))
+        if cfg.family in ("dense", "vlm"):
+            calib_d = calibration_batches(cfg.vocab_size,
+                                          args.calib_samples, 64)
+            draft = compress_transformer(
+                model, params, calib_d,
+                MpifaConfig(density=args.draft_density))
+        else:
+            # SSM / hybrid / encdec / ring archs: family-agnostic
+            # data-free PIFA walker (speculation serves every family —
+            # SSM/ring verify rolls back via per-step checkpoints)
+            draft = compress_generic(model, params, args.draft_density)
         print(f"[serve] draft compressed in {time.time()-t0:.1f}s "
-              f"(density {args.draft_density})", flush=True)
+              f"(density {args.draft_density}, family {cfg.family})",
+              flush=True)
 
     def serve_speculative(target_p, label, ref_toks):
         res = engine.generate_speculative(

@@ -202,6 +202,18 @@ class EncDecModel:
         return self._decode_cached(params, tokens, cache, per_row=True,
                                    all_logits=True)
 
+    def ckpt_decode(self, cache):
+        """Positional cache: decode steps need no rollback snapshots."""
+        return {}
+
+    def restore_decode(self, cache, cks, pos0, advance):
+        """Rollback is a ``pos`` reset — junk beyond each row's write
+        pointer stays causally masked until overwritten."""
+        return {**cache, "pos": pos0 + advance}
+
+    def rollback_verify(self, cache, pos0, advance):
+        return {**cache, "pos": pos0 + advance}
+
     # ----------------------------------------------- compression harness
     def num_blocks(self) -> int:
         return self.cfg.num_layers

@@ -189,11 +189,30 @@ class HybridModel:
         return self._step_cached(params, token, cache)
 
     def verify_step(self, params, tokens, cache):
-        raise NotImplementedError(
-            "speculative verify needs positional rollback; the hybrid's "
-            "SSM backbone integrates every token irreversibly, so a "
-            "rejected suffix cannot be rolled out of the recurrence — "
-            "draft/verify serves attention-cache families only")
+        """Speculative multi-token verify: the SSM backbone integrates
+        every token irreversibly, so verify runs the k+1 cached decode
+        steps inside one dispatch (``L.scan_verify``) with per-step
+        snapshots of the small recurrence states; the shared attention
+        block's positional k/v need no snapshots (junk beyond the write
+        pointer stays causally masked after the ``pos`` reset)."""
+        return L.scan_verify(self, params, tokens, cache)
+
+    def ckpt_decode(self, cache):
+        """Snapshot only the irreversible leaves (conv taps + ssm
+        state); the shared attention k/v rolls back positionally."""
+        return {"conv": cache["conv"], "ssm": cache["ssm"]}
+
+    def restore_decode(self, cache, cks, pos0, advance):
+        cache = dict(cache)
+        cache["conv"] = L.select_ckpt(cks["conv"], cache["conv"],
+                                      advance, axis=1)
+        cache["ssm"] = L.select_ckpt(cks["ssm"], cache["ssm"],
+                                     advance, axis=1)
+        cache["pos"] = pos0 + advance
+        return cache
+
+    def rollback_verify(self, cache, pos0, advance):
+        return L.rollback_scan_verify(self, cache, pos0, advance)
 
     # ----------------------------------------------- compression harness
     def num_blocks(self) -> int:

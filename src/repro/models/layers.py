@@ -580,6 +580,117 @@ def moe_block(
 
 
 # --------------------------------------------------------------------------
+# Speculative verify: the cache contract shared by every family
+# --------------------------------------------------------------------------
+#
+# ``verify_step(params, tokens, cache)`` scores ``tokens`` (b, k+1) from
+# each row's own cache position in ONE dispatch and advances the cache
+# by k+1; ``rollback_verify(vcache, pos0, advance)`` then keeps only the
+# first ``advance`` (b,) tokens' effects.  How a family honours the
+# rollback half depends on what its cache remembers:
+#
+#   positional KV   junk beyond the write pointer is causally masked, so
+#                   resetting ``pos`` IS the rollback (transformer,
+#                   encdec) — no checkpoints needed.
+#   SSM state       the recurrence integrates every token irreversibly,
+#                   so verify runs the k+1 cached decode steps inside one
+#                   dispatch (``scan_verify``) and snapshots the SMALL
+#                   per-step states (conv taps + ssm state — k+1 extra
+#                   copies of O(d_inner*d_state) arrays, never the full
+#                   cache); rollback selects the snapshot at ``advance``.
+#   ring buffers    circular buffers overwrite live history, so each
+#                   verify/draft step first saves the single slot it is
+#                   about to overwrite (k+1 (hkv, hd) entries per local
+#                   layer); rollback writes the saved entries back over
+#                   the rejected suffix's slots.
+#
+# The draft side of a speculative round uses the same machinery through
+# ``ckpt_decode(cache)`` (pre-step snapshot, possibly {}) and
+# ``restore_decode(cache, stacked_ckpts, pos0, advance)``.
+
+def scan_verify(model, params, tokens, cache):
+    """Multi-token verify as a scan of cached decode steps.
+
+    Used by families whose decode is inherently sequential (SSM
+    recurrence) or whose cache writes destroy history (ring buffers):
+    one jitted dispatch runs ``tokens.shape[1]`` decode steps, collecting
+    per-step logits and the pre-step ``ckpt_decode`` snapshots.  Because
+    each step IS the plain decode computation, verify logits are
+    bit-identical to sequential ``decode_step`` logits by construction.
+
+    Returns (logits (b, s, vocab), vcache) where vcache is the advanced
+    cache plus a ``"ckpt"`` entry of stacked (s, ...) snapshots.
+    """
+    def step(c, t):
+        ck = model.ckpt_decode(c)
+        lg, c2 = model.decode_step(params, t, c)
+        return c2, (lg[:, -1, :], ck)
+
+    xs = jnp.moveaxis(tokens, 1, 0)[:, :, None]          # (s, b, 1)
+    cache2, (lgs, cks) = jax.lax.scan(step, cache, xs)
+    return jnp.moveaxis(lgs, 0, 1), {**cache2, "ckpt": cks}
+
+
+def rollback_scan_verify(model, vcache, pos0, advance):
+    """Rollback half of ``scan_verify``: drop the checkpoint stack and
+    delegate the per-leaf state selection to ``restore_decode``."""
+    cache = {k: v for k, v in vcache.items() if k != "ckpt"}
+    return model.restore_decode(cache, vcache["ckpt"], pos0, advance)
+
+
+def select_ckpt(stacked, current, advance, axis):
+    """Pick each row's post-``advance``-steps state from a snapshot
+    stack.  ``stacked`` (S, ...) holds the state BEFORE step j at index
+    j (so index ``advance`` is the state after ``advance`` steps);
+    ``advance == S`` keeps ``current``.  ``axis`` is the batch axis of
+    ``current``; ``advance`` is (b,) int32.
+    """
+    S = stacked.shape[0]
+    sb = jnp.moveaxis(stacked, axis + 1, 0)              # (b, S, ...)
+    cb = jnp.moveaxis(current, axis, 0)                  # (b, ...)
+
+    def pick(srow, crow, a):
+        return jnp.where(a >= S, crow, srow[jnp.minimum(a, S - 1)])
+
+    out = jax.vmap(pick)(sb, cb, advance)
+    return jnp.moveaxis(out, 0, axis)
+
+
+def ring_slot_snapshot(buf, pos, w):
+    """Gather the ring entry the NEXT decode write will overwrite.
+
+    buf: (L, b, w, hkv, hd) stacked ring buffers; pos (b,) write
+    cursor.  Returns (L, b, hkv, hd) — the per-layer contents of slot
+    ``pos % w`` for each row.
+    """
+    slot = jnp.mod(pos, w)
+    idx = slot[None, :, None, None, None]
+    return jnp.take_along_axis(buf, idx, axis=2)[:, :, 0]
+
+
+def restore_ring_slots(buf, saved, pos0, advance, w):
+    """Undo the rejected suffix of S sequential ring writes.
+
+    ``saved`` (S, L, b, hkv, hd) holds the pre-write contents of slot
+    ``(pos0 + j) % w`` for steps j = 0..S-1; writes j < ``advance`` (b,)
+    are kept, the rest restored.  Requires S <= w (each step wrote a
+    distinct slot) — callers enforce spec_k + 1 <= window.
+    """
+    S = saved.shape[0]
+    slots = jnp.mod(pos0[:, None] + jnp.arange(S)[None, :], w)   # (b, S)
+    keep = jnp.arange(S)[None, :] < advance[:, None]             # (b, S)
+    sv = jnp.moveaxis(saved, 0, 2)                               # (L,b,S,..)
+
+    def per_layer(bl, svl):
+        cur = jnp.take_along_axis(bl, slots[:, :, None, None], axis=1)
+        vals = jnp.where(keep[:, :, None, None], cur, svl.astype(bl.dtype))
+        rows = jnp.arange(bl.shape[0])[:, None]
+        return bl.at[rows, slots].set(vals)
+
+    return jax.vmap(per_layer)(buf, sv)
+
+
+# --------------------------------------------------------------------------
 # Embedding / unembedding
 # --------------------------------------------------------------------------
 

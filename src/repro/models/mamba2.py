@@ -334,11 +334,39 @@ class Mamba2Model:
         return params
 
     def verify_step(self, params, tokens, cache):
-        raise NotImplementedError(
-            "speculative verify needs positional rollback; the SSM state "
-            "integrates every token irreversibly, so a rejected suffix "
-            "cannot be rolled out of the recurrence — draft/verify "
-            "serves attention-cache families only")
+        """Speculative multi-token verify for the SSM family.
+
+        The recurrence integrates every token irreversibly, so the
+        rollback contract is honoured by CHECKPOINTING instead of
+        masking: ``L.scan_verify`` runs the k+1 cached decode steps
+        inside one dispatch, snapshotting the small per-step decode
+        states (conv taps + ssm state — k+1 copies of
+        O(d_inner * d_state) per layer, never a full cache copy);
+        ``rollback_verify`` selects each row's state at the last
+        accepted position.  Logits are bit-identical to sequential
+        ``decode_step`` logits by construction.
+        """
+        return L.scan_verify(self, params, tokens, cache)
+
+    def ckpt_decode(self, cache):
+        """Pre-step snapshot of the leaves a decode step overwrites
+        irreversibly: the conv window taps and the ssm state."""
+        return {"conv": cache["conv"], "ssm": cache["ssm"]}
+
+    def restore_decode(self, cache, cks, pos0, advance):
+        """Roll S cached decode steps back to the first ``advance``
+        (b,): select each row's snapshot (stack index j = state before
+        step j; ``advance == S`` keeps the current state)."""
+        cache = dict(cache)
+        cache["conv"] = L.select_ckpt(cks["conv"], cache["conv"],
+                                      advance, axis=1)
+        cache["ssm"] = L.select_ckpt(cks["ssm"], cache["ssm"],
+                                     advance, axis=1)
+        cache["pos"] = pos0 + advance
+        return cache
+
+    def rollback_verify(self, cache, pos0, advance):
+        return L.rollback_scan_verify(self, cache, pos0, advance)
 
     def decode_step(self, params, token, cache):
         h = L.embed(params["embed"], token)

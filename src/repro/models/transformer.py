@@ -495,22 +495,62 @@ class Transformer:
         """Speculative multi-token verify: score ``tokens`` (b, k+1)
         starting at each row's OWN cache position, in one dispatch.
 
-        Returns (logits (b, k+1, vocab), cache advanced by k+1): k/v
-        for all k+1 positions are scatter-written at per-row offsets
-        and logits are gathered at every position.  The caller rolls
-        back rejected suffixes by resetting ``pos`` — junk beyond each
-        row's write pointer stays causally masked until overwritten
-        (the scheduler's slot-prefill exactness argument).  Ring caches
-        refuse: their circular buffers overwrite live history, so a
-        rejected suffix cannot be rolled back.
+        Positional caches take the parallel path: k/v for all k+1
+        positions are scatter-written at per-row offsets and logits are
+        gathered at every position; the caller rolls back rejected
+        suffixes through ``rollback_verify`` (a ``pos`` reset — junk
+        beyond each row's write pointer stays causally masked until
+        overwritten, the scheduler's slot-prefill exactness argument).
+
+        Ring (local:global) caches overwrite live history in their
+        circular buffers, so they verify through ``L.scan_verify``
+        instead: the k+1 cached decode steps run inside this one
+        dispatch, each saving the single ring entry it is about to
+        overwrite (``ckpt_decode``); ``rollback_verify`` writes the
+        rejected suffix's saved entries back.  Requires k+1 <= window
+        (each step must hit a distinct slot).
         """
         if "kl" in cache:
-            raise ValueError(
-                "speculative verify needs positional rollback; ring "
-                "(local:global) caches overwrite live history in their "
-                "circular buffers — serve this arch without a draft")
+            w = self.cfg.sliding_window
+            if tokens.shape[1] > w:
+                raise ValueError(
+                    f"ring verify rollback needs k+1 <= window: "
+                    f"{tokens.shape[1]} tokens vs window {w} — each "
+                    "verify step must overwrite a distinct ring slot")
+            return L.scan_verify(self, params, tokens, cache)
         return self.forward_cached(params, tokens, cache, per_row=True,
                                    all_logits=True)
+
+    def ckpt_decode(self, cache):
+        """Pre-step snapshot for speculative rollback: ring caches save
+        the slot the next decode write will overwrite (one (hkv, hd)
+        entry per local layer); positional caches need nothing."""
+        if "kl" not in cache:
+            return {}
+        w = self.cfg.sliding_window
+        return {"kl": L.ring_slot_snapshot(cache["kl"], cache["pos"], w),
+                "vl": L.ring_slot_snapshot(cache["vl"], cache["pos"], w)}
+
+    def restore_decode(self, cache, cks, pos0, advance):
+        """Roll a sequence of S cached decode steps back to the first
+        ``advance`` (b,): restore the rejected suffix's saved ring
+        slots and reset ``pos``; positional k/v junk stays masked."""
+        cache = dict(cache)
+        if "kl" in cks:
+            w = self.cfg.sliding_window
+            cache["kl"] = L.restore_ring_slots(cache["kl"], cks["kl"],
+                                               pos0, advance, w)
+            cache["vl"] = L.restore_ring_slots(cache["vl"], cks["vl"],
+                                               pos0, advance, w)
+        cache["pos"] = pos0 + advance
+        return cache
+
+    def rollback_verify(self, cache, pos0, advance):
+        """Keep only the first ``advance`` (b,) verified tokens' cache
+        effects (see ``verify_step`` for the per-cache-type contract)."""
+        if "ckpt" in cache:
+            return L.rollback_scan_verify(self, cache, pos0, advance)
+        return {**cache, "pos": pos0 + advance}
 
     # ----------------------------------------------- compression harness
     def num_blocks(self) -> int:

@@ -123,14 +123,14 @@ class GenerationEngine:
                eos_id: Optional[int]):
         model = self.model
 
-        def run(params, prompts, cache, key):
+        def run(params, prompts, pf_in, cache, key):
             if temperature > 0.0:
                 all_keys = jax.random.split(key, max_new)   # (max_new, 2)
                 key0, step_keys = all_keys[0], all_keys[1:]
             else:
                 key0 = None
                 step_keys = jnp.zeros((max_new - 1, 2), jnp.uint32)
-            logits, cache = model.prefill(params, prompts, cache)
+            logits, cache = model.prefill(params, pf_in, cache)
             tok = sample_logits(logits[:, -1, :], key0, temperature, top_k)
             b = prompts.shape[0]
             done = (jnp.zeros((b,), jnp.bool_) if eos_id is None
@@ -192,9 +192,13 @@ class GenerationEngine:
         # distinction below matches jit's actual retrace conditions
         # (dense vs pifa params under one engine must not alias)
         leaves, treedef = jax.tree_util.tree_flatten(params)
+        pf_sig = None
+        if prefill_inputs is not None:
+            pfl, pft = jax.tree_util.tree_flatten(prefill_inputs)
+            pf_sig = (pft, tuple((l.shape, str(l.dtype)) for l in pfl))
         sig = (max_new, float(temperature), int(top_k), eos_id, b, s,
                cache_len, _PIFA_KERNEL, treedef,
-               tuple((l.shape, str(l.dtype)) for l in leaves))
+               tuple((l.shape, str(l.dtype)) for l in leaves), pf_sig)
         cold = sig not in self._fns
         if cold:
             self._fns[sig] = self._build(max_new, float(temperature),
@@ -206,7 +210,7 @@ class GenerationEngine:
         pf_in = prompts if prefill_inputs is None else prefill_inputs
 
         t0 = time.perf_counter()
-        tokens, n_real = fn(params, pf_in, cache, key)
+        tokens, n_real = fn(params, prompts, pf_in, cache, key)
         jax.block_until_ready(tokens)
         dt = time.perf_counter() - t0
         compile_time = 0.0
@@ -218,7 +222,7 @@ class GenerationEngine:
             cache = self.model.init_cache(b, cache_len,
                                           dtype=self.cache_dtype)
             t0 = time.perf_counter()
-            tokens, n_real = fn(params, pf_in, cache, key)
+            tokens, n_real = fn(params, prompts, pf_in, cache, key)
             jax.block_until_ready(tokens)
             dt = time.perf_counter() - t0
             compile_time = max(0.0, t_first - dt)
@@ -234,14 +238,17 @@ class GenerationEngine:
                              cache_len: Optional[int] = None, *,
                              spec_k: int = 4, temperature: float = 0.0,
                              top_k: int = 0, eos_id: Optional[int] = None,
-                             key: Optional[jax.Array] = None):
+                             key: Optional[jax.Array] = None,
+                             prefill_inputs: Optional[Pytree] = None):
         """Draft-then-verify generation: ``draft_params`` (a more
         aggressively compressed model of the same architecture)
         proposes ``spec_k`` tokens per round, ``params`` verifies all
         k+1 positions in one dispatch.  Greedy output is bit-identical
-        to :meth:`generate`; sampled output draws from the same
-        distribution.  See runtime/speculative.py for the accept /
-        rollback machinery and accounting.
+        to :meth:`generate` for every family (SSM/ring caches verify
+        through per-step state checkpoints); sampled output draws from
+        the same distribution with per-row keyed streams.  See
+        runtime/speculative.py for the accept / rollback machinery and
+        accounting; ``prefill_inputs`` as in :meth:`generate`.
         """
         if self._spec is None:
             from repro.runtime.speculative import SpeculativeEngine
@@ -251,4 +258,4 @@ class GenerationEngine:
         return self._spec.generate(
             params, draft_params, prompts, max_new, cache_len,
             spec_k=spec_k, temperature=temperature, top_k=top_k,
-            eos_id=eos_id, key=key)
+            eos_id=eos_id, key=key, prefill_inputs=prefill_inputs)

@@ -22,23 +22,37 @@ is at the layer level.  This scheduler closes that gap:
     (bucket, k) pairs) instead of one batch-1 dispatch per request —
     bursty ramp-up pays one compile+dispatch per group;
   * **per-slot sampling**: temperature / top-k decode draws from a
-    per-slot PRNG key that is split off the scheduler key at admission
-    and threaded through the chunk scan, so slot placement and chunk
-    boundaries never change a request's sample stream.  Configs a path
-    cannot honor (sampled speculative slots) raise instead of silently
-    decoding greedily;
+    per-slot PRNG key derived as ``fold_in(scheduler key, request_id)``
+    at admission and threaded through the chunk scan, so slot
+    placement, chunk boundaries AND admission order never change a
+    request's sample stream.  Configs a path cannot honor (top-k
+    truncation on the greedy path) raise instead of silently decoding
+    greedily;
   * **speculative slots** (``draft_params`` + ``spec_k``): each slot
-    owns a draft KV cache alongside the target cache.  A chunk
-    iteration becomes one draft+verify ROUND — the draft proposes
-    ``spec_k`` tokens via the scanned decode surface, the target
-    scores all k+1 positions in one multi-token cached dispatch
+    owns a draft cache alongside the target cache.  A chunk iteration
+    becomes one draft+verify ROUND — the draft proposes ``spec_k``
+    tokens via the scanned decode surface, the target scores all k+1
+    positions in one multi-token cached dispatch
     (``model.verify_step``), and accepted runs advance ``pos`` by
-    1..k+1 while rejected suffixes roll back both caches (positional
-    rollback; junk beyond the write pointer stays causally masked).
-    Slots carry accept/reject counters; requests with
+    1..k+1 while rejected suffixes roll back both caches through the
+    per-cache-type contract in ``models/layers.py`` — a ``pos`` reset
+    for positional KV (junk stays causally masked), per-step state
+    checkpoints for SSM recurrences, saved-slot restores for ring
+    buffers.  Slots carry accept/reject counters; requests with
     ``speculative=False`` share the batch with acceptance forced to
-    zero, which reduces exactly to plain greedy decode (mixing costs
-    draft compute for those rows, never correctness).
+    zero, which reduces exactly to plain decode (mixing costs draft
+    compute for those rows, never correctness — their accept/drafted
+    counters report n/a instead of polluting aggregate stats);
+  * **sampled speculative slots**: temperature/top-k speculative
+    decode does full per-row rejection sampling with residual fixup.
+    Each request's stream derives from
+    ``fold_in(scheduler key, request_id)`` exactly as a batch-1
+    ``engine.generate_speculative`` call with that key
+    (``spec_request_key``): admission draws the first token from the
+    same split, and every round's draft/accept/correction draws flow
+    through the shared per-row helpers in ``runtime/speculative.py``
+    keyed by a per-slot round counter — so slot placement, chunk
+    boundaries and batch composition never perturb a request's stream.
 
 Exactness: right padding keeps every real token at its true position
 (rope + causal mask are position-exact, pad columns are masked to
@@ -47,17 +61,18 @@ exactly zero probability), and the per-row write pointer starts at the
 first pad entry — junk beyond each row's write pointer is causally
 masked until overwritten.  Greedy decoding — plain AND speculative —
 is therefore bit-identical to a single-request
-``GenerationEngine.generate`` of the same prompt
-(tests/test_scheduler.py and tests/test_speculative.py assert this
-token-for-token).
+``GenerationEngine.generate`` of the same prompt, for every family
+(tests/test_scheduler.py, tests/test_speculative.py and
+tests/test_conformance.py assert this token-for-token).
 
 SSM families (mamba2/hybrid) integrate state over every input token,
 and ring-cache (local:global) archs fold the trailing window of the
 *padded* prompt into their circular buffers — both get exact-length
 slot prefills (``prompt_buckets=None`` is forced); plain attention
-families use buckets to bound prefill compiles.  Neither SSM nor ring
-caches can roll a rejected suffix back, so speculative slots refuse
-those families at construction.
+families use buckets to bound prefill compiles.  Speculative slots
+serve every family: SSM and ring caches verify through the per-step
+checkpoint machinery (ring needs ``spec_k + 1 <= window`` so each
+verify step overwrites a distinct slot — checked loudly).
 """
 from __future__ import annotations
 
@@ -103,8 +118,12 @@ class RequestResult:
     arrival_time: float
     admitted_at: float            # seconds after run start
     finished_at: float
-    accepted: int = 0             # draft tokens the target accepted
-    drafted: int = 0              # draft tokens proposed for this slot
+    # accept/draft accounting only exists for requests that actually
+    # ran draft/verify: plain slots (speculative=False, or any slot of
+    # a non-speculative scheduler) report None ("n/a") so they never
+    # pollute aggregate acceptance stats.
+    accepted: Optional[int] = None   # draft tokens the target accepted
+    drafted: Optional[int] = None    # draft tokens proposed for this slot
 
     @property
     def latency(self) -> float:
@@ -120,8 +139,8 @@ class SchedulerRun:
     generated: int                # total real generated tokens
     chunks: int                   # chunk dispatches
     occupancy: List[Tuple[float, int]]   # (t, active slots) per chunk
-    accepted: int = 0             # total draft tokens accepted (spec)
-    drafted: int = 0              # total draft tokens proposed (spec)
+    accepted: int = 0             # draft tokens accepted (spec slots only)
+    drafted: int = 0              # draft tokens proposed (spec slots only)
 
     @property
     def tokens_per_sec(self) -> float:
@@ -194,27 +213,8 @@ class ServingScheduler:
                 "greedy chunk path (temperature=0) which cannot honor it — "
                 "set temperature>0 or drop top_k")
         self.speculative = draft_params is not None
-        if self.speculative:
-            if spec_k < 1:
-                raise ValueError("spec_k must be >= 1 with draft_params")
-            if temperature > 0.0:
-                raise ValueError(
-                    "sampling reached the speculative chunk path, which "
-                    "is greedy-only (its acceptance bar is bit-identity "
-                    "with target-only greedy decode) — use the engine's "
-                    "generate_speculative for sampled speculation or "
-                    "drop draft_params")
-            if family in ("ssm", "hybrid"):
-                raise ValueError(
-                    "speculative slots need positional rollback; the SSM "
-                    "state integrates every token irreversibly — serve "
-                    f"family '{family}' without draft_params")
-            if ring_capable:
-                raise ValueError(
-                    "speculative slots need positional rollback; ring "
-                    "(local:global) caches overwrite live history in "
-                    "their circular buffers — serve this arch without "
-                    "draft_params")
+        if self.speculative and spec_k < 1:
+            raise ValueError("spec_k must be >= 1 with draft_params")
         self.model = model
         self.capacity = int(capacity)
         self.chunk = int(chunk)
@@ -270,6 +270,15 @@ class ServingScheduler:
     def submit(self, request: Request) -> None:
         self._queue.append(request)
 
+    def spec_request_key(self, request_id: int) -> jax.Array:
+        """The engine-equivalent PRNG key of a sampled speculative
+        request: ``engine.generate_speculative(prompt[None], max_new,
+        key=this, ...)`` with the scheduler's temperature/top_k/spec_k
+        reproduces the slot's token stream exactly.  Keys are
+        ``fold_in(scheduler key, request_id)`` — placement- and
+        admission-order-invariant by construction."""
+        return jax.random.fold_in(self._sample_key, request_id)
+
     # ------------------------------------------------------- device state
     def _bucket_for(self, n: int) -> int:
         if self.prompt_buckets is None:
@@ -320,6 +329,13 @@ class ServingScheduler:
         # ring caches change *structure* with max_len: scratch prefill
         # caches must then match the big cache's length exactly
         self._ring = isinstance(cache, dict) and "kl" in cache
+        if self.speculative and self._ring:
+            w = self.model.cfg.sliding_window
+            if self.spec_k + 1 > w:
+                raise ValueError(
+                    f"ring verify rollback needs spec_k + 1 <= window: "
+                    f"spec_k {self.spec_k} vs window {w} — each verify "
+                    "step must overwrite a distinct ring slot")
         self._slot_axes = self._slot_axis_tree(self._cache_len)
         b = self.capacity
         dev = {
@@ -336,6 +352,7 @@ class ServingScheduler:
             dev["spec"] = jnp.zeros((b,), jnp.bool_)  # slot runs draft?
             dev["acc"] = jnp.zeros((b,), jnp.int32)   # accepted drafts
             dev["drafted"] = jnp.zeros((b,), jnp.int32)
+            dev["rounds"] = jnp.zeros((b,), jnp.int32)  # per-slot rounds
         self._dev = dev
 
     # --------------------------------------------------------- jitted fns
@@ -392,43 +409,83 @@ class ServingScheduler:
     def _build_spec_chunk_fn(self):
         """One scan iteration = one draft+verify ROUND: the draft
         proposes ``spec_k`` tokens (plus one seating step so the last
-        proposal's k/v survives an all-accept), the target verifies all
-        k+1 positions in one dispatch, and each slot advances by
-        1..k+1 accepted tokens with both caches rolled back past the
-        rejected suffix.  Non-speculative slots force acceptance to
-        zero, which reduces to plain greedy decode (the correction
-        token IS the greedy next token)."""
+        proposal's cache entry survives an all-accept), the target
+        verifies all k+1 positions in one dispatch, and each slot
+        advances by 1..k+1 accepted tokens with both caches rolled
+        back past the rejected suffix (``rollback_verify`` /
+        ``restore_decode`` — pos reset, checkpoint selection, or
+        saved-slot restore per cache type).  Greedy acceptance forces
+        non-speculative slots to zero accepts, which reduces to plain
+        greedy decode (the correction token IS the greedy next token);
+        sampled rounds run per-row rejection sampling through the
+        shared helpers in ``runtime/speculative.py``, keyed by the
+        per-slot stream key and round counter so each request's stream
+        matches a batch-1 ``engine.generate_speculative`` call."""
         model = self.model
         eos_id = self.eos_id
         fill = jnp.int32(eos_id if eos_id is not None else self.pad_id)
         chunk = self.chunk
         k = self.spec_k
+        temperature = self.temperature
+        top_k = self.top_k
+        from repro.runtime.speculative import (accept_fixup_rows,
+                                               sample_rows,
+                                               spec_round_keys,
+                                               truncated_probs)
 
         def run(params, dparams, cache, dcache, tok, done, n_gen, budget,
-                spec, acc, drafted):
+                spec, acc, drafted, keys, rounds):
             ar = jnp.arange(k + 1)[None, :]
 
             def body(carry, _):
-                tok, cache, dcache, done, n_gen, acc, drafted = carry
+                (tok, cache, dcache, done, n_gen, acc, drafted,
+                 rounds) = carry
                 pos0 = cache["pos"]
+                if temperature > 0.0:
+                    dkeys, ukeys, ckeys = spec_round_keys(keys, rounds, k)
+                else:
+                    dkeys = jnp.zeros((k + 1, tok.shape[0], 2),
+                                      jnp.uint32)
 
-                def dbody(c2, _):
+                def dbody(c2, kt):
                     t, dc = c2
+                    ck = model.ckpt_decode(dc)
                     lg, dc = model.decode_step(dparams, t, dc)
-                    nxt = jnp.argmax(lg[:, -1, :], axis=-1
-                                     ).astype(jnp.int32)[:, None]
-                    return (nxt, dc), nxt[:, 0]
+                    lgl = lg[:, -1, :]
+                    if temperature > 0.0:
+                        nxt = sample_rows(lgl, kt, temperature,
+                                          top_k)[:, None]
+                    else:
+                        nxt = jnp.argmax(lgl, axis=-1
+                                         ).astype(jnp.int32)[:, None]
+                    return (nxt, dc), (nxt[:, 0], lgl, ck)
 
-                (_, dcache2), props = jax.lax.scan(
-                    dbody, (tok, dcache), None, length=k + 1)
+                (_, dcache2), (props, dlgs, dcks) = jax.lax.scan(
+                    dbody, (tok, dcache), dkeys)
                 drafts = props[:k].T                         # (b, k)
                 vin = jnp.concatenate([tok, drafts], axis=1)
-                tlogits, cache2 = model.verify_step(params, vin, cache)
-                tgt = jnp.argmax(tlogits, axis=-1).astype(jnp.int32)
-                match = (drafts == tgt[:, :k]) & spec[:, None]
-                a = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1),
-                            axis=1)
-                emitted = tgt            # tgt[:, :a+1] = accepts + fixup
+                tlogits, vcache = model.verify_step(params, vin, cache)
+                if temperature == 0.0:
+                    tgt = jnp.argmax(tlogits, axis=-1).astype(jnp.int32)
+                    match = (drafts == tgt[:, :k]) & spec[:, None]
+                    a = jnp.sum(jnp.cumprod(match.astype(jnp.int32),
+                                            axis=1), axis=1)
+                    emitted = tgt        # tgt[:, :a+1] = accepts + fixup
+                else:
+                    p_t = truncated_probs(tlogits, temperature, top_k)
+                    p_d = truncated_probs(jnp.moveaxis(dlgs[:k], 0, 1),
+                                          temperature, top_k)
+                    # plain rows (use_residual=False) never accept and
+                    # draw every correction from plain p_t — ordinary
+                    # target sampling at 1 token/round
+                    match, corr = accept_fixup_rows(
+                        drafts, p_t, p_d, ukeys, ckeys,
+                        use_residual=spec)
+                    a = jnp.sum(jnp.cumprod(match.astype(jnp.int32),
+                                            axis=1), axis=1)
+                    drafts_pad = jnp.pad(drafts, ((0, 0), (0, 1)))
+                    emitted = jnp.where(ar < a[:, None], drafts_pad,
+                                        corr)
                 cap = jnp.maximum(budget - n_gen, 0)
                 emit_n = jnp.minimum(a + 1, cap)
                 if eos_id is not None:
@@ -445,20 +502,23 @@ class ServingScheduler:
                 last = jnp.take_along_axis(
                     emitted, jnp.maximum(emit_n - 1, 0)[:, None], axis=1)
                 tok2 = jnp.where(emit_n[:, None] > 0, last, tok)
-                # positional rollback for BOTH caches; done/free rows
-                # freeze at pos0 (emit_n == 0)
-                new_pos = pos0 + emit_n
-                cache2 = {**cache2, "pos": new_pos}
-                dcache2 = {**dcache2, "pos": new_pos}
-                acc2 = acc + jnp.where(done, 0, jnp.minimum(a, emit_n))
+                # rollback for BOTH caches; done/free rows (emit_n == 0)
+                # restore their full pre-round state
+                cache2 = model.rollback_verify(vcache, pos0, emit_n)
+                dcache2 = model.restore_decode(dcache2, dcks, pos0,
+                                               emit_n)
+                acc2 = acc + jnp.where(done | ~spec, 0,
+                                       jnp.minimum(a, emit_n))
                 drafted2 = drafted + jnp.where(done | ~spec, 0, k)
+                rounds2 = rounds + jnp.where(done, 0, 1)
                 em = jnp.where(ar < emit_n[:, None], emitted, fill)
                 return ((tok2, cache2, dcache2, d2, n_gen2, acc2,
-                         drafted2), (em, emit_n))
+                         drafted2, rounds2), (em, emit_n))
 
-            ((tok, cache, dcache, done, n_gen, acc, drafted),
+            ((tok, cache, dcache, done, n_gen, acc, drafted, rounds),
              (ems, ens)) = jax.lax.scan(
-                body, (tok, cache, dcache, done, n_gen, acc, drafted),
+                body, (tok, cache, dcache, done, n_gen, acc, drafted,
+                       rounds),
                 None, length=chunk)
             # pack each slot's variable-advance rounds contiguously so
             # the host reads "first (n_gen - seen) entries" exactly as
@@ -474,9 +534,10 @@ class ServingScheduler:
             rows = jnp.arange(b)[:, None]
             buf = buf.at[rows, idx.reshape(b, -1)].set(
                 em.reshape(b, -1), mode="drop")
-            return cache, dcache, tok, done, n_gen, acc, drafted, buf
+            return (cache, dcache, tok, done, n_gen, acc, drafted,
+                    rounds, buf)
 
-        return jax.jit(run, donate_argnums=(2, 3, 4, 5, 6, 9, 10))
+        return jax.jit(run, donate_argnums=(2, 3, 4, 5, 6, 9, 10, 12))
 
     def _build_admit_fn(self, bucket: int, kb: int):
         """Batch-``kb`` grouped admission: ONE prefill dispatch for
@@ -503,13 +564,21 @@ class ServingScheduler:
                     big, row.astype(big.dtype), tuple(starts))
             return big
 
-        def prefill_first(params, prompts, plen, admit_keys, keys, slots):
-            # batch-kb prefill into a scratch cache; padded tails are
-            # causally masked, logits read at each row's true last token
+        def scratch_prefill(params, prompts, plen):
+            """Batch-kb prefill into a scratch cache: padded tails are
+            causally masked, logits read at each row's true last token,
+            and the write pointer starts at the UNPADDED length so
+            generated tokens overwrite the pad tail entry by entry
+            (junk beyond the pointer stays causally masked — exactness
+            note in the module docstring)."""
             small = model.init_cache(kb, cache_len, dtype=cache_dtype)
             logits, small = model.prefill(params, prompts, small,
                                           last_idx=plen - 1)
-            lg = logits[:, -1, :]                              # (kb, V)
+            return ({**small, "pos": plen.astype(jnp.int32)},
+                    logits[:, -1, :])                          # (kb, V)
+
+        def prefill_first(params, prompts, plen, admit_keys, keys, slots):
+            small, lg = scratch_prefill(params, prompts, plen)
             if temperature > 0.0:
                 # per-request sample stream starts here: one half of
                 # the admission key draws the first token, the other
@@ -519,11 +588,6 @@ class ServingScheduler:
                 keys = keys.at[slots].set(split2[:, 1])
             else:
                 first = jnp.argmax(lg, axis=-1).astype(jnp.int32)  # (kb,)
-            # write pointer starts at the UNPADDED length: generated
-            # tokens overwrite the pad tail entry by entry, and junk
-            # beyond the pointer stays causally masked (exactness note
-            # in the module docstring)
-            small = {**small, "pos": plen.astype(jnp.int32)}
             return small, first, keys
 
         def set_slot_state(first, max_new, slots, tok, done, n_gen, budget):
@@ -551,32 +615,37 @@ class ServingScheduler:
             return jax.jit(run, donate_argnums=(6, 7, 8, 9, 10, 11))
 
         def run(params, dparams, prompts, plen, max_new, slots, spec_new,
-                cache, dcache, tok, done, n_gen, budget, spec, acc,
-                drafted):
-            admit_keys = jnp.zeros((kb, 2), jnp.uint32)  # spec is greedy
-            small, first, _ = prefill_first(
-                params, prompts, plen, admit_keys,
-                jnp.zeros((0, 2), jnp.uint32), slots)
+                admit_keys, slot_keys, cache, dcache, tok, done, n_gen,
+                budget, spec, acc, drafted, keys, rounds):
+            small, lg = scratch_prefill(params, prompts, plen)
+            if temperature > 0.0:
+                # first token from the per-request key's prefill half —
+                # the same draw a batch-1 engine.generate_speculative
+                # call makes (see spec_request_key)
+                from repro.runtime.speculative import sample_rows
+                first = sample_rows(lg, admit_keys, temperature,
+                                    self.top_k)
+            else:
+                first = jnp.argmax(lg, axis=-1).astype(jnp.int32)
             cache = jax.tree.map(
                 lambda big, sm, ax: scatter_rows(big, sm, ax, slots),
                 cache, small, axes)
             # draft shares the prompt: its own prefill, its own cache
-            dsmall = model.init_cache(kb, cache_len, dtype=cache_dtype)
-            _, dsmall = model.prefill(dparams, prompts, dsmall,
-                                      last_idx=plen - 1)
-            dsmall = {**dsmall, "pos": plen.astype(jnp.int32)}
+            dsmall, _ = scratch_prefill(dparams, prompts, plen)
             dcache = jax.tree.map(
                 lambda big, sm, ax: scatter_rows(big, sm, ax, slots),
                 dcache, dsmall, axes)
             spec = spec.at[slots].set(spec_new)
             acc = acc.at[slots].set(0)
             drafted = drafted.at[slots].set(0)
+            keys = keys.at[slots].set(slot_keys)
+            rounds = rounds.at[slots].set(0)
             tok, done, n_gen, budget = set_slot_state(
                 first, max_new, slots, tok, done, n_gen, budget)
             return (cache, dcache, tok, done, n_gen, budget, spec, acc,
-                    drafted, first)
+                    drafted, keys, rounds, first)
 
-        return jax.jit(run, donate_argnums=tuple(range(7, 16)))
+        return jax.jit(run, donate_argnums=tuple(range(9, 20)))
 
     # ---------------------------------------------------------- admission
     def _check_fits(self, req: Request, bucket: int) -> None:
@@ -633,20 +702,42 @@ class ServingScheduler:
                 bucket, kb)
         d = self._dev
         if self.speculative:
+            if self.temperature > 0.0:
+                # per-request stream keys: fold_in(scheduler key,
+                # request_id) split exactly as a batch-1
+                # engine.generate_speculative(key=...) call — prefill
+                # half draws the first token, round half seeds the
+                # slot's per-round stream (row index 0)
+                a_keys, s_keys = [], []
+                for req, _ in pairs:
+                    kq = self.spec_request_key(req.request_id)
+                    kp, kr = jax.random.split(kq)
+                    a_keys.append(jax.random.fold_in(kp, 0))
+                    s_keys.append(jax.random.fold_in(kr, 0))
+                admit_keys = jnp.stack(a_keys)
+                slot_keys = jnp.stack(s_keys)
+            else:
+                admit_keys = jnp.zeros((kb, 2), jnp.uint32)
+                slot_keys = jnp.zeros((kb, 2), jnp.uint32)
             (cache, dcache, tok, done, n_gen, budget, spec, acc, drafted,
-             first) = fn(
+             keys2, rounds, first) = fn(
                 self.params, self.draft_params, jnp.asarray(padded),
                 jnp.asarray(plens), jnp.asarray(max_news),
-                jnp.asarray(slots), jnp.asarray(spec_new),
-                d["cache"], d["dcache"], d["tok"], d["done"], d["n_gen"],
-                d["budget"], d["spec"], d["acc"], d["drafted"])
+                jnp.asarray(slots), jnp.asarray(spec_new), admit_keys,
+                slot_keys, d["cache"], d["dcache"], d["tok"], d["done"],
+                d["n_gen"], d["budget"], d["spec"], d["acc"],
+                d["drafted"], d["keys"], d["rounds"])
             d.update(cache=cache, dcache=dcache, tok=tok, done=done,
                      n_gen=n_gen, budget=budget, spec=spec, acc=acc,
-                     drafted=drafted)
+                     drafted=drafted, keys=keys2, rounds=rounds)
         else:
             if self.temperature > 0.0:
-                keys = jax.random.split(self._sample_key, kb + 1)
-                self._sample_key, admit_keys = keys[0], keys[1:]
+                # same per-request derivation as speculative slots:
+                # fold_in(scheduler key, request_id) — a request's
+                # stream never depends on admission order or placement
+                admit_keys = jnp.stack(
+                    [jax.random.fold_in(self._sample_key, req.request_id)
+                     for req, _ in pairs])
             else:
                 admit_keys = jnp.zeros((kb, 2), jnp.uint32)
             cache, tok, done, n_gen, budget, keys2, first = fn(
@@ -669,6 +760,10 @@ class ServingScheduler:
                   acc_h=None, drafted_h=None) -> None:
         st = self._slots[slot]
         req = st.request
+        # accept/draft counters only exist for slots that really ran
+        # draft/verify; plain slots report n/a (None), never 0-of-0
+        spec_on = (self.speculative and bool(req.speculative)
+                   and acc_h is not None)
         results.append(RequestResult(
             request_id=req.request_id,
             tokens=np.concatenate([np.asarray(req.prompt, np.int32),
@@ -680,8 +775,8 @@ class ServingScheduler:
             arrival_time=req.arrival_time,
             admitted_at=st.admitted_at,
             finished_at=now,
-            accepted=int(acc_h[slot]) if acc_h is not None else 0,
-            drafted=int(drafted_h[slot]) if drafted_h is not None else 0,
+            accepted=int(acc_h[slot]) if spec_on else None,
+            drafted=int(drafted_h[slot]) if spec_on else None,
         ))
         st.request = None
         st.tokens = []
@@ -754,13 +849,15 @@ class ServingScheduler:
             d = self._dev
             acc_h = drafted_h = None
             if self.speculative:
-                (cache, dcache, tok, done, n_gen, acc, drafted,
+                (cache, dcache, tok, done, n_gen, acc, drafted, rounds,
                  toks) = self._chunk_fn(
                     self.params, self.draft_params, d["cache"], d["dcache"],
                     d["tok"], d["done"], d["n_gen"], d["budget"],
-                    d["spec"], d["acc"], d["drafted"])
+                    d["spec"], d["acc"], d["drafted"], d["keys"],
+                    d["rounds"])
                 d.update(cache=cache, dcache=dcache, tok=tok, done=done,
-                         n_gen=n_gen, acc=acc, drafted=drafted)
+                         n_gen=n_gen, acc=acc, drafted=drafted,
+                         rounds=rounds)
             else:
                 cache, tok, done, n_gen, keys, toks = self._chunk_fn(
                     self.params, d["cache"], d["tok"], d["done"],
@@ -799,5 +896,7 @@ class ServingScheduler:
         return SchedulerRun(
             results=results, elapsed=elapsed, generated=gen, chunks=chunks,
             occupancy=occupancy,
-            accepted=sum(r.accepted for r in results),
-            drafted=sum(r.drafted for r in results))
+            accepted=sum(r.accepted for r in results
+                         if r.accepted is not None),
+            drafted=sum(r.drafted for r in results
+                        if r.drafted is not None))

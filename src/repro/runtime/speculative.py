@@ -19,12 +19,22 @@ Acceptance follows standard rejection sampling:
               The emitted distribution equals target-only sampling
               (Leviathan et al. 2023), though not draw-for-draw.
 
-Rollback is positional: both caches scatter-wrote k+1 entries at
-per-row offsets; resetting ``pos`` to the accepted prefix leaves the
-rejected suffix as junk beyond the write pointer, causally masked
-until overwritten (the scheduler's slot-prefill exactness argument).
-Ring caches and SSM state cannot roll back — `verify_step` refuses
-loudly for those families.
+Rollback follows the per-cache-type contract in ``models/layers.py``
+(see the "Speculative verify" section there): positional KV caches
+reset ``pos`` and let the causal mask hide the rejected suffix; SSM
+recurrences and ring circular buffers verify via a scan of cached
+decode steps with per-step state checkpoints (k+1 small states / saved
+ring slots), and ``rollback_verify`` / ``restore_decode`` select or
+restore the accepted prefix.  The same hooks roll the DRAFT cache back
+(``ckpt_decode`` snapshots collected in the draft scan).
+
+Sampled streams are PER-ROW keyed: row i of a generate call draws from
+``fold_in(key_r, i)`` folded with its round counter, and the per-round
+draft/accept/correction draws flow through the shared helpers below
+(`sample_rows`, `spec_round_keys`, `accept_fixup_rows`).  The serving
+scheduler threads the identical derivation through its slots, so a
+sampled speculative scheduler slot reproduces the token stream of a
+batch-1 ``engine.generate_speculative`` call with the same key.
 
 The per-round device program is: one scanned draft pass (k+1 draft
 decode steps — the extra step seats the last proposal's k/v for the
@@ -41,11 +51,10 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.runtime.engine import sample_logits
-
 Pytree = Any
 
-__all__ = ["SpeculativeResult", "SpeculativeEngine", "truncated_probs"]
+__all__ = ["SpeculativeResult", "SpeculativeEngine", "truncated_probs",
+           "sample_rows", "spec_round_keys", "accept_fixup_rows"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,13 +95,85 @@ def truncated_probs(logits: jax.Array, temperature: float,
     return jax.nn.softmax(logits / temperature, axis=-1)
 
 
+def sample_rows(logits: jax.Array, keys: jax.Array, temperature: float,
+                top_k: int) -> jax.Array:
+    """Per-row-keyed sampling: (b, V) logits + (b, 2) keys -> (b,) int32.
+
+    Same transform as ``engine.sample_logits`` but each row draws from
+    its OWN key, so a scheduler slot and a batch-1 engine row with the
+    same key produce the same draw.
+    """
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.vmap(lambda kk, lg: jax.random.categorical(
+        kk, lg / temperature))(keys, logits).astype(jnp.int32)
+
+
+def spec_round_keys(row_keys: jax.Array, round_idx: jax.Array, k: int
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-row draft/accept/correction keys for one draft+verify round.
+
+    row_keys (b, 2) per-row stream keys; round_idx (b,) per-row round
+    counters (the engine broadcasts its global round, the scheduler
+    carries a per-slot counter — for a row served alone they agree).
+    Returns (dkeys (k+1, b, 2) scan-ready, ukeys (b, 2), ckeys (b, 2)).
+    """
+    rk = jax.vmap(jax.random.fold_in)(row_keys, round_idx)
+    trio = jax.vmap(lambda kk: jax.random.split(kk, 3))(rk)      # (b, 3, 2)
+    dk = jax.vmap(lambda kk: jax.random.split(kk, k + 1))(trio[:, 0])
+    return jnp.moveaxis(dk, 0, 1), trio[:, 1], trio[:, 2]
+
+
+def accept_fixup_rows(drafts: jax.Array, p_t: jax.Array, p_d: jax.Array,
+                      ukeys: jax.Array, ckeys: jax.Array,
+                      use_residual: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Per-row rejection sampling with residual fixup.
+
+    drafts (b, k) proposed tokens; p_t (b, k+1, V) target probs; p_d
+    (b, k, V) draft probs; ukeys/ckeys (b, 2) per-row keys.  Accept
+    d_i w.p. min(1, p_t(d_i)/p_d(d_i)); the correction token at i<k is
+    drawn from the normalized residual max(0, p_t - p_d) (degenerate
+    residuals fall back to p_t — acceptance there is near-1 anyway),
+    at the bonus position i==k from plain p_t.
+
+    ``use_residual`` (b,) bool: rows set False never accept and draw
+    every correction from the PLAIN target distribution — plain
+    (non-speculative) slots mixed into a sampled speculative batch,
+    whose emitted tokens must be ordinary target samples.
+
+    Returns (match (b, k) bool, corr (b, k+1) int32).  Shared by the
+    speculative engine and the scheduler so per-seed streams agree.
+    """
+    k = drafts.shape[1]
+    pt_d = jnp.take_along_axis(p_t[:, :k, :], drafts[..., None],
+                               axis=-1)[..., 0]
+    pd_d = jnp.take_along_axis(p_d, drafts[..., None], axis=-1)[..., 0]
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, (k,)))(ukeys)
+    match = u * jnp.maximum(pd_d, 1e-30) < pt_d
+    resid = jnp.maximum(p_t[:, :k, :] - p_d, 0.0)
+    denom = jnp.sum(resid, axis=-1, keepdims=True)
+    resid = jnp.where(denom > 1e-30, resid / jnp.maximum(denom, 1e-30),
+                      p_t[:, :k, :])
+    if use_residual is not None:
+        match = match & use_residual[:, None]
+        resid = jnp.where(use_residual[:, None, None], resid,
+                          p_t[:, :k, :])
+    corr_dist = jnp.concatenate([resid, p_t[:, k:, :]], axis=1)
+    corr = jax.vmap(lambda kk, pr: jax.random.categorical(
+        kk, jnp.log(jnp.maximum(pr, 1e-30)), axis=-1)
+    )(ckeys, corr_dist).astype(jnp.int32)
+    return match, corr
+
+
 class SpeculativeEngine:
-    """Draft-then-verify generation over any attention-cache zoo model.
+    """Draft-then-verify generation over any model-zoo cache surface.
 
     Shares the GenerationEngine restack surface: draft and target are
     the SAME architecture with independently compressed params (each
     restacked separately — rank buckets may differ), each with its own
-    KV cache.  Jitted prefill/round functions are cached per
+    cache.  Jitted prefill/round functions are cached per
     (shape, sampling, k, both-param-signatures) key.
     """
 
@@ -121,12 +202,16 @@ class SpeculativeEngine:
         model, draft_model = self.model, self.draft_model
         fill = jnp.int32(eos_id if eos_id is not None else 0)
 
-        def prefill(tparams, dparams, prompts, tcache, dcache, key):
-            tlogits, tcache = model.prefill(tparams, prompts, tcache)
-            _, dcache = draft_model.prefill(dparams, prompts, dcache)
-            key0 = key if temperature > 0.0 else None
-            tok = sample_logits(tlogits[:, -1, :], key0, temperature, top_k)
-            b = prompts.shape[0]
+        def prefill(tparams, dparams, pf_in, tcache, dcache, b, key_p):
+            tlogits, tcache = model.prefill(tparams, pf_in, tcache)
+            _, dcache = draft_model.prefill(dparams, pf_in, dcache)
+            lg = tlogits[:, -1, :]
+            if temperature > 0.0:
+                row_kp = jax.vmap(lambda i: jax.random.fold_in(key_p, i)
+                                  )(jnp.arange(b))
+                tok = sample_rows(lg, row_kp, temperature, top_k)[:, None]
+            else:
+                tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
             done = (jnp.zeros((b,), jnp.bool_) if eos_id is None
                     else (tok[:, 0] == eos_id))
             out = jnp.full((b, max_new), fill, jnp.int32)
@@ -135,28 +220,38 @@ class SpeculativeEngine:
             return tcache, dcache, tok, done, n_emitted, out
 
         def spec_round(tparams, dparams, tcache, dcache, cur, done,
-                       n_emitted, out, key):
+                       n_emitted, out, key_r, rnd):
             b = cur.shape[0]
             pos0 = tcache["pos"]
             ar = jnp.arange(k + 1)[None, :]
 
-            # ---- draft: k proposals + one extra step that seats the
-            # last proposal's k/v (needed when all k are accepted)
+            # ---- per-row round keys: row i draws from fold_in(key_r, i)
+            # folded with the round counter — scheduler slots replicate
+            # this derivation per request (see module docstring)
             if temperature > 0.0:
-                key, kd, ku, kr = jax.random.split(key, 4)
-                dkeys = jax.random.split(kd, k + 1)
+                row_keys = jax.vmap(lambda i: jax.random.fold_in(key_r, i)
+                                    )(jnp.arange(b))
+                dkeys, ukeys, ckeys = spec_round_keys(
+                    row_keys, jnp.full((b,), rnd, jnp.int32), k)
             else:
-                dkeys = jnp.zeros((k + 1, 2), jnp.uint32)
+                dkeys = jnp.zeros((k + 1, b, 2), jnp.uint32)
 
+            # ---- draft: k proposals + one extra step that seats the
+            # last proposal's cache entry (needed when all k are
+            # accepted); pre-step ckpt_decode snapshots make the draft
+            # cache rollbackable for SSM/ring families
             def dbody(carry, kt):
                 tok, c = carry
+                ck = draft_model.ckpt_decode(c)
                 lg, c = draft_model.decode_step(dparams, tok, c)
-                nxt = sample_logits(lg[:, -1, :],
-                                    kt if temperature > 0.0 else None,
-                                    temperature, top_k)
-                return (nxt, c), (nxt[:, 0], lg[:, -1, :])
+                lgl = lg[:, -1, :]
+                if temperature > 0.0:
+                    nxt = sample_rows(lgl, kt, temperature, top_k)[:, None]
+                else:
+                    nxt = jnp.argmax(lgl, axis=-1).astype(jnp.int32)[:, None]
+                return (nxt, c), (nxt[:, 0], lgl, ck)
 
-            (_, dcache), (props, dlogits) = jax.lax.scan(
+            (_, dcache), (props, dlogits, dcks) = jax.lax.scan(
                 dbody, (cur, dcache), dkeys)
             drafts = props[:k].T                       # (b, k): d_1..d_k
 
@@ -177,26 +272,8 @@ class SpeculativeEngine:
                 p_t = truncated_probs(tlogits, temperature, top_k)
                 p_d = truncated_probs(jnp.moveaxis(dlogits[:k], 0, 1),
                                       temperature, top_k)     # (b, k, V)
-                pt_d = jnp.take_along_axis(
-                    p_t[:, :k, :], drafts[..., None], axis=-1)[..., 0]
-                pd_d = jnp.take_along_axis(
-                    p_d, drafts[..., None], axis=-1)[..., 0]
-                u = jax.random.uniform(ku, (b, k))
-                match = u * jnp.maximum(pd_d, 1e-30) < pt_d
-                # correction token per position: residual distribution
-                # max(0, p_t - p_d) at i<k, plain target at the bonus
-                # position i==k; degenerate residuals (p_d covers p_t)
-                # fall back to p_t — acceptance there is near-1 anyway
-                resid = jnp.maximum(p_t[:, :k, :] - p_d, 0.0)
-                denom = jnp.sum(resid, axis=-1, keepdims=True)
-                resid = jnp.where(denom > 1e-30,
-                                  resid / jnp.maximum(denom, 1e-30),
-                                  p_t[:, :k, :])
-                corr_dist = jnp.concatenate([resid, p_t[:, k:, :]], axis=1)
-                rkeys = jax.random.split(kr, b)
-                corr = jax.vmap(lambda kk, pr: jax.random.categorical(
-                    kk, jnp.log(jnp.maximum(pr, 1e-30)), axis=-1)
-                )(rkeys, corr_dist).astype(jnp.int32)          # (b, k+1)
+                match, corr = accept_fixup_rows(drafts, p_t, p_d,
+                                                ukeys, ckeys)
                 drafts_pad = jnp.pad(drafts, ((0, 0), (0, 1)))
                 acc_prefix = jnp.cumprod(match.astype(jnp.int32), axis=1)
                 a = jnp.sum(acc_prefix, axis=1)    # accepted drafts (b,)
@@ -221,11 +298,12 @@ class SpeculativeEngine:
             if eos_id is not None:
                 new_done = new_done | (~done & has_eos)
 
-            # ---- rollback: both caches keep only the accepted prefix;
-            # junk beyond pos stays causally masked until overwritten
-            new_pos = pos0 + emit_n
-            tcache = {**tcache, "pos": new_pos}
-            dcache = {**dcache, "pos": new_pos}
+            # ---- rollback: both caches keep only the accepted prefix
+            # (per-cache-type contract — pos reset for positional KV,
+            # checkpoint selection for SSM, saved-slot restore for ring)
+            tcache = model.rollback_verify(tcache, pos0, emit_n)
+            dcache = draft_model.restore_decode(dcache, dcks, pos0,
+                                                emit_n)
 
             # ---- pack emitted tokens into the output buffer (per-row
             # offsets; rejected-suffix lanes indexed out of range are
@@ -238,7 +316,7 @@ class SpeculativeEngine:
             return (tcache, dcache, cur, new_done, n_emitted, out,
                     accepted, alive, jnp.sum(emit_n))
 
-        return jax.jit(prefill), jax.jit(spec_round)
+        return (jax.jit(prefill, static_argnums=(5,)), jax.jit(spec_round))
 
     # ---------------------------------------------------------- generate
     def generate(self, target_params: Pytree, draft_params: Pytree,
@@ -246,9 +324,14 @@ class SpeculativeEngine:
                  cache_len: Optional[int] = None, *, spec_k: int = 4,
                  temperature: float = 0.0, top_k: int = 0,
                  eos_id: Optional[int] = None,
-                 key: Optional[jax.Array] = None) -> SpeculativeResult:
+                 key: Optional[jax.Array] = None,
+                 prefill_inputs: Optional[Pytree] = None
+                 ) -> SpeculativeResult:
         """Generate ``max_new`` tokens after ``prompts`` (b, s) int32,
-        drafting ``spec_k`` tokens per round with ``draft_params``."""
+        drafting ``spec_k`` tokens per round with ``draft_params``.
+        ``prefill_inputs`` substitutes for ``prompts`` in both prefill
+        calls for families with richer prefill batches (enc-dec
+        frames)."""
         assert max_new >= 1 and spec_k >= 1
         if not hasattr(self.model, "verify_step"):
             raise ValueError("speculative decoding needs a verify_step "
@@ -260,6 +343,15 @@ class SpeculativeEngine:
             # speculation writes up to spec_k entries beyond the final
             # accepted position before rolling back
             cache_len = s + max_new + spec_k + 1
+        probe = jax.eval_shape(lambda: self.model.init_cache(
+            b, cache_len, dtype=self.cache_dtype))
+        if isinstance(probe, dict) and "kl" in probe:
+            w = self.model.cfg.sliding_window
+            if spec_k + 1 > w:
+                raise ValueError(
+                    f"ring verify rollback needs spec_k + 1 <= window: "
+                    f"spec_k {spec_k} vs window {w} — each verify step "
+                    "must overwrite a distinct ring slot")
         from repro.models.linear import _PIFA_KERNEL
         if _PIFA_KERNEL:
             from repro.kernels.pifa_matmul.autotune import tune_pifa_params
@@ -271,8 +363,10 @@ class SpeculativeEngine:
             return (treedef,
                     tuple((l.shape, str(l.dtype)) for l in leaves))
 
+        pf_in = prompts if prefill_inputs is None else prefill_inputs
         sig = (max_new, int(spec_k), float(temperature), int(top_k), eos_id,
-               b, s, cache_len, _PIFA_KERNEL, psig(tparams), psig(dparams))
+               b, s, cache_len, _PIFA_KERNEL, psig(tparams), psig(dparams),
+               None if prefill_inputs is None else psig(prefill_inputs))
         cold = sig not in self._fns
         if cold:
             self._fns[sig] = self._build(max_new, int(spec_k),
@@ -289,7 +383,7 @@ class SpeculativeEngine:
                                                  dtype=self.cache_dtype)
             key_p, key_r = jax.random.split(key)
             tcache, dcache, cur, done, n_emitted, out = prefill_fn(
-                tparams, dparams, prompts, tcache, dcache, key_p)
+                tparams, dparams, pf_in, tcache, dcache, b, key_p)
             rounds = alive_rounds = accepted = emitted = 0
             # each round emits >=1 token per alive row, so max_new
             # rounds always suffice; the loop usually exits far earlier
@@ -298,8 +392,8 @@ class SpeculativeEngine:
                     break
                 (tcache, dcache, cur, done, n_emitted, out, acc, alive,
                  emit) = round_fn(tparams, dparams, tcache, dcache, cur,
-                                  done, n_emitted, out,
-                                  jax.random.fold_in(key_r, r))
+                                  done, n_emitted, out, key_r,
+                                  jnp.int32(r))
                 rounds += 1
                 alive_rounds += int(alive)
                 accepted += int(acc)

@@ -6,3 +6,75 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Shared tiny-model fixtures (session-scoped).
+#
+# test_engine / test_scheduler / test_speculative / test_conformance all
+# exercise the same tiny transformer and its MPIFA-compressed variants;
+# building them (especially the NS compression sweep) dominated tier-1
+# wall-clock when each module owned a copy.  One session-scoped build
+# serves every suite.
+# ---------------------------------------------------------------------------
+
+PROMPT_LEN = 12
+
+
+@pytest.fixture(scope="session")
+def tiny():
+    """(cfg, model, params, calib, prompts): random-init tiny LM with
+    calibration batches and (4, 12) greedy-probe prompts."""
+    from repro.configs.base import get_config
+    from repro.models.model import build_model
+    cfg = get_config("tiny")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 32), 0,
+                                cfg.vocab_size) for i in range(3)]
+    prompts = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                          (4, PROMPT_LEN)), jnp.int32)
+    return cfg, model, params, calib, prompts
+
+
+@pytest.fixture(scope="session")
+def engine(tiny):
+    from repro.runtime.engine import GenerationEngine
+    return GenerationEngine(tiny[1])
+
+
+@pytest.fixture(scope="session")
+def tiny_pifa(tiny):
+    """Uniform-density MPIFA compression of the tiny LM."""
+    from repro.core.mpifa import MpifaConfig, compress_transformer
+    cfg, model, params, calib, _ = tiny
+    return compress_transformer(model, params, calib,
+                                MpifaConfig(density=0.55))
+
+
+@pytest.fixture(scope="session")
+def tiny_ns(tiny):
+    """MPIFA_NS: per-layer densities -> heterogeneous PIFA ranks."""
+    from repro.core.mpifa import MpifaConfig, compress_transformer
+    cfg, model, params, calib, _ = tiny
+    md = {}
+    for bi in range(cfg.num_layers):
+        rho = 0.4 if bi % 2 == 0 else 0.7
+        for info in model.linears_in_block():
+            md[f"block{bi}/" + "/".join(info.path)] = rho
+    return compress_transformer(model, params, calib,
+                                MpifaConfig(density=0.55, module_density=md))
+
+
+@pytest.fixture(scope="session")
+def tiny_draft(tiny):
+    """A more aggressively compressed draft of the same weights."""
+    from repro.core.mpifa import MpifaConfig, compress_transformer
+    cfg, model, params, calib, _ = tiny
+    return compress_transformer(model, params, calib,
+                                MpifaConfig(density=0.45))

@@ -11,49 +11,18 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import get_config, get_smoke_config
+from repro.configs.base import get_smoke_config
 from repro.core.mpifa import (MpifaConfig, compress_linear_params,
-                              compress_transformer, pad_blocks_bucketed)
+                              pad_blocks_bucketed)
 from repro.launch.serve import generate
 from repro.models.model import build_model, restack_for_serving
 from repro.runtime.engine import GenerationEngine
 
+# shared session-scoped fixtures (tiny, tiny_pifa, tiny_ns) live in
+# tests/conftest.py; PROMPT mirrors the fixture's prompt length
 MAX_NEW = 8
 PROMPT = 12
 CACHE = PROMPT + MAX_NEW + 1
-
-
-@pytest.fixture(scope="module")
-def tiny():
-    cfg = get_config("tiny")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 32), 0,
-                                cfg.vocab_size) for i in range(3)]
-    prompts = jnp.asarray(
-        np.random.default_rng(0).integers(0, cfg.vocab_size, (4, PROMPT)),
-        jnp.int32)
-    return cfg, model, params, calib, prompts
-
-
-@pytest.fixture(scope="module")
-def tiny_pifa(tiny):
-    cfg, model, params, calib, prompts = tiny
-    return compress_transformer(model, params, calib,
-                                MpifaConfig(density=0.55))
-
-
-@pytest.fixture(scope="module")
-def tiny_ns(tiny):
-    """MPIFA_NS: per-layer densities -> heterogeneous PIFA ranks."""
-    cfg, model, params, calib, prompts = tiny
-    md = {}
-    for bi in range(cfg.num_layers):
-        rho = 0.4 if bi % 2 == 0 else 0.7
-        for info in model.linears_in_block():
-            md[f"block{bi}/" + "/".join(info.path)] = rho
-    return compress_transformer(model, params, calib,
-                                MpifaConfig(density=0.55, module_density=md))
 
 
 def test_engine_matches_legacy_dense(tiny):

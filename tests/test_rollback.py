@@ -1,0 +1,127 @@
+"""Property tests for the verify-then-rollback cache contract.
+
+For random accept/reject patterns (any ``advance`` in 0..k+1),
+verify-then-rollback must leave EVERY cache type element-identical to
+sequentially decoding only the accepted prefix:
+
+  positional KV   entries below the write pointer match (junk beyond
+                  it is causally masked and excluded); the parallel
+                  verify path projects k/v in one batched matmul, so
+                  "identical" here is fp-tolerance, not bitwise,
+  ring buffers    the full circular buffer matches BITWISE (scan-of-
+                  decode verify + rejected writes restored from the
+                  saved slots),
+  SSM state       conv taps + ssm state match BITWISE (checkpoint
+                  selection over scan-of-decode states).
+
+The same property is checked for the DRAFT side (``ckpt_decode`` /
+``restore_decode`` around plain decode steps).  Runs under hypothesis
+when available, with a deterministic parametrized fallback for clean
+containers.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.models.model import build_model
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # clean container: parametrized fallback below
+    HAVE_HYPOTHESIS = False
+
+ARCHS = ("tiny", "gemma3_12b", "mamba2_2p7b", "zamba2_1p2b")
+PLEN = 7
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch):
+    cfg = get_config("tiny") if arch == "tiny" else get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return (cfg, model, params, jax.jit(model.prefill),
+            jax.jit(model.decode_step), jax.jit(model.verify_step))
+
+
+def _assert_cache_equal(rolled, ref, label):
+    """Element-identity per cache type; positional k/v compared up to
+    the (shared) write pointer, to fp tolerance (the parallel verify
+    projects all k+1 tokens in one matmul); everything the checkpoint
+    machinery owns (conv/ssm/ring buffers) must match BITWISE."""
+    assert set(rolled) == set(ref), label
+    assert bool(jnp.all(rolled["pos"] == ref["pos"])), label
+    p = int(np.asarray(ref["pos"])[0])
+    for key in rolled:
+        if key == "pos":
+            continue
+        a, b = rolled[key], ref[key]
+        if key in ("k", "v", "xk", "xv"):  # positional: junk beyond
+            a, b = a[:, :, :p], b[:, :, :p]   # pos is causally masked
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=str((label, key)))
+        else:
+            assert bool(jnp.all(a == b)), (label, key)
+
+
+def _check_rollback(arch, seed, k, advance):
+    advance = min(advance, k + 1)
+    cfg, model, params, prefill, decode, verify = _setup(arch)
+    rng = np.random.default_rng(seed)
+    cache_len = PLEN + k + 9       # > gemma smoke window 8: ring engages
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, PLEN)),
+                          jnp.int32)
+    _, c0 = prefill(params, prompts,
+                    model.init_cache(1, cache_len, dtype=jnp.float32))
+    if arch == "gemma3_12b":
+        assert "kl" in c0
+    vin = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, k + 1)),
+                      jnp.int32)
+    adv = jnp.asarray([advance], jnp.int32)
+
+    # reference: sequentially decode ONLY the accepted prefix
+    ref = c0
+    for j in range(advance):
+        _, ref = decode(params, vin[:, j:j + 1], ref)
+
+    # verify-side: verify_step then rollback_verify
+    _, vc = verify(params, vin, c0)
+    rolled = model.rollback_verify(vc, c0["pos"], adv)
+    _assert_cache_equal(rolled, ref, (arch, "verify", seed, k, advance))
+
+    # draft-side: k+1 decode steps with pre-step ckpts, then restore
+    c, cks = c0, []
+    for j in range(k + 1):
+        cks.append(model.ckpt_decode(c))
+        _, c = decode(params, vin[:, j:j + 1], c)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *cks)
+    restored = model.restore_decode(dict(c), stacked, c0["pos"], adv)
+    _assert_cache_equal(restored, ref, (arch, "draft", seed, k, advance))
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("arch", ARCHS)
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000), k=st.integers(1, 4),
+           advance=st.integers(0, 5))
+    def test_rollback_matches_sequential_prefix_property(arch, seed, k,
+                                                         advance):
+        _check_rollback(arch, seed, k, advance)
+
+
+# Deterministic fallback sweep over the same domain (runs regardless,
+# so a clean container still covers every arch x advance edge: full
+# reject, mid-run reject, all-accept).
+_CASES = [(0, 2, 0), (1, 2, 3), (2, 3, 1), (3, 4, 5), (4, 1, 2),
+          (5, 3, 4)]
+
+
+@pytest.mark.parametrize("seed,k,advance", _CASES)
+@pytest.mark.parametrize("arch", ARCHS)
+def test_rollback_matches_sequential_prefix(arch, seed, k, advance):
+    _check_rollback(arch, seed, k, advance)

@@ -15,26 +15,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import get_config, get_smoke_config
+from repro.configs.base import get_smoke_config
 from repro.core.mpifa import (MpifaConfig, bucket_boundaries,
-                              compress_linear_params, compress_transformer)
+                              compress_linear_params)
 from repro.models.model import build_model
 from repro.runtime.engine import GenerationEngine
 from repro.runtime.scheduler import Request, ServingScheduler
 
 
-@pytest.fixture(scope="module")
-def tiny():
-    cfg = get_config("tiny")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params
-
-
-@pytest.fixture(scope="module")
-def engine(tiny):
-    cfg, model, params = tiny
-    return GenerationEngine(model)
+# shared session-scoped fixtures (tiny, engine, tiny_ns) live in
+# tests/conftest.py
 
 
 def _requests(cfg, lens, budgets, seed=0, arrivals=None):
@@ -64,7 +54,7 @@ def _assert_bit_identical(engine, params, run, requests, eos_id):
 def test_slot_allocator_invariants(tiny):
     """No double-assign (per-slot residency intervals never overlap),
     every request served exactly once, all slots free after the drain."""
-    cfg, model, params = tiny
+    cfg, model, params = tiny[:3]
     reqs = _requests(cfg, lens=[5, 9, 7, 12, 4, 10], budgets=[4, 2, 6, 3, 5, 2])
     sched = ServingScheduler(model, params, capacity=2, chunk=2,
                              prompt_buckets=(8, 16))
@@ -86,7 +76,7 @@ def test_slot_allocator_invariants(tiny):
 
 def test_free_on_eos_and_reuse(tiny, engine):
     """A request stopping early on eos frees its slot for the queue."""
-    cfg, model, params = tiny
+    cfg, model, params = tiny[:3]
     probe = _requests(cfg, lens=[8], budgets=[16])[0]
     ref = np.asarray(engine.generate(
         params, jnp.asarray(probe.prompt[None, :]), 16).tokens[0])
@@ -108,7 +98,7 @@ def test_free_on_eos_and_reuse(tiny, engine):
 def test_bit_identity_staggered_admission(tiny, engine):
     """Mixed prompt lengths/budgets through 2 slots: every request's
     tokens match the single-request engine bit-for-bit (greedy)."""
-    cfg, model, params = tiny
+    cfg, model, params = tiny[:3]
     reqs = _requests(cfg, lens=[5, 12, 9, 16, 3], budgets=[6, 3, 8, 2, 7])
     sched = ServingScheduler(model, params, capacity=2, chunk=3,
                              eos_id=1, prompt_buckets=(8, 16))
@@ -117,30 +107,21 @@ def test_bit_identity_staggered_admission(tiny, engine):
     _assert_bit_identical(engine, params, run, reqs, eos_id=1)
 
 
-def test_bit_identity_compressed_ns(tiny):
+def test_bit_identity_compressed_ns(tiny, tiny_ns):
     """MPIFA_NS (heterogeneous ranks -> bucketed restack) serves through
     the scheduler bit-identically to the engine."""
-    cfg, model, params = tiny
-    calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 32), 0,
-                                cfg.vocab_size) for i in range(3)]
-    md = {}
-    for bi in range(cfg.num_layers):
-        rho = 0.4 if bi % 2 == 0 else 0.7
-        for info in model.linears_in_block():
-            md[f"block{bi}/" + "/".join(info.path)] = rho
-    cp = compress_transformer(model, params, calib,
-                              MpifaConfig(density=0.55, module_density=md))
+    cfg, model, params = tiny[:3]
     reqs = _requests(cfg, lens=[6, 11, 4], budgets=[5, 3, 6])
-    sched = ServingScheduler(model, cp, capacity=2, chunk=2,
+    sched = ServingScheduler(model, tiny_ns, capacity=2, chunk=2,
                              eos_id=1, prompt_buckets=(8, 16))
     run = sched.run(reqs)
     eng = GenerationEngine(model)
-    _assert_bit_identical(eng, cp, run, reqs, eos_id=1)
+    _assert_bit_identical(eng, tiny_ns, run, reqs, eos_id=1)
 
 
 def test_drain_mode_same_tokens(tiny, engine):
     """Run-to-completion admission changes scheduling, never tokens."""
-    cfg, model, params = tiny
+    cfg, model, params = tiny[:3]
     reqs = _requests(cfg, lens=[5, 9, 13, 7], budgets=[4, 6, 2, 5])
     runs = {}
     for mode in ("continuous", "drain"):
@@ -157,7 +138,7 @@ def test_drain_mode_same_tokens(tiny, engine):
 def test_finish_exactly_at_chunk_boundary(tiny, engine):
     """Budgets that are exact chunk multiples finish at a boundary; the
     slot frees and refills without dropping or duplicating tokens."""
-    cfg, model, params = tiny
+    cfg, model, params = tiny[:3]
     chunk = 4
     reqs = _requests(cfg, lens=[6, 8, 10, 5], budgets=[4, 8, 4, 8])
     sched = ServingScheduler(model, params, capacity=2, chunk=chunk,
@@ -178,7 +159,7 @@ def test_oversized_request_leaves_state_intact(tiny):
     """A request that cannot fit the cache raises BEFORE its queue
     entry and any free slot are consumed: the scheduler stays usable
     after dropping the offender."""
-    cfg, model, params = tiny
+    cfg, model, params = tiny[:3]
     reqs = _requests(cfg, lens=[5, 6], budgets=[4, 4])
     sched = ServingScheduler(model, params, capacity=2, chunk=2,
                              prompt_buckets=(8,), cache_len=16)
@@ -194,7 +175,7 @@ def test_oversized_request_leaves_state_intact(tiny):
 
 def test_arrival_times_respected(tiny):
     """A request with a future arrival_time is not admitted before it."""
-    cfg, model, params = tiny
+    cfg, model, params = tiny[:3]
     reqs = _requests(cfg, lens=[6, 6], budgets=[4, 4],
                      arrivals=[0.0, 0.15])
     sched = ServingScheduler(model, params, capacity=2, chunk=2,
@@ -299,7 +280,7 @@ def test_scheduler_sampling_deterministic_per_seed(tiny):
     """Temperature/top-k decoding draws from per-slot PRNG keys split
     at admission: the same seed reproduces every request's stream, a
     different seed changes it, tokens stay in-vocab."""
-    cfg, model, params = tiny
+    cfg, model, params = tiny[:3]
 
     def run_with(seed):
         sched = ServingScheduler(model, params, capacity=2, chunk=3,
@@ -320,7 +301,7 @@ def test_scheduler_sampling_unaffected_by_slot_placement(tiny):
     """A request's sample stream comes from its admission-split key,
     NOT from which slot or chunk boundary it lands on: serving the same
     request alone or behind a queue yields the same tokens."""
-    cfg, model, params = tiny
+    cfg, model, params = tiny[:3]
     reqs = _requests(cfg, lens=[6, 6, 6], budgets=[5, 5, 5])
 
     def serve(queue):
@@ -330,15 +311,15 @@ def test_scheduler_sampling_unaffected_by_slot_placement(tiny):
         return {r.request_id: r.tokens.tolist()
                 for r in sched.run(queue).results}
 
-    # key split order is admission order, so request 0 admitted first
-    # sees the same key whether or not others queue behind it
+    # per-request keys are fold_in(scheduler key, request_id), so
+    # request 0 sees the same key whether or not others queue behind it
     alone = serve([reqs[0]])
     queued = serve(list(reqs))
     assert queued[0] == alone[0]
 
 
 def test_scheduler_greedy_rejects_top_k(tiny):
-    cfg, model, params = tiny
+    cfg, model, params = tiny[:3]
     with pytest.raises(ValueError, match="top_k"):
         ServingScheduler(model, params, top_k=8)
 
@@ -350,7 +331,7 @@ def test_batched_admission_bit_identity(tiny, engine):
     prefills (k in ADMIT_BATCH) — one dispatch per group, outputs still
     bit-identical to the single-request engine."""
     from repro.runtime.scheduler import ADMIT_BATCH
-    cfg, model, params = tiny
+    cfg, model, params = tiny[:3]
     # 7 same-bucket arrivals into 8 free slots -> groups of 4 + 2 + 1
     reqs = _requests(cfg, lens=[5, 6, 7, 5, 8, 6, 4],
                      budgets=[4, 6, 3, 5, 4, 2, 6])
@@ -367,7 +348,7 @@ def test_batched_admission_bit_identity(tiny, engine):
 def test_batched_admission_mixed_buckets(tiny, engine):
     """Admissions spanning buckets group per bucket; each group pays
     its own batch-k prefill and every request still serves exactly."""
-    cfg, model, params = tiny
+    cfg, model, params = tiny[:3]
     reqs = _requests(cfg, lens=[5, 14, 6, 12, 7, 3],
                      budgets=[4, 3, 5, 6, 2, 4])
     sched = ServingScheduler(model, params, capacity=6, chunk=2,
@@ -405,21 +386,12 @@ def test_autotune_registry_and_numerics():
         clear_block_size_registry()
 
 
-def test_tune_pifa_params_registers_buckets(tiny):
+def test_tune_pifa_params_registers_buckets(tiny, tiny_ns):
     """Restacked NS params expose one tuned entry per bucket rank."""
     from repro.kernels.pifa_matmul.autotune import (
         clear_block_size_registry, registry_snapshot, tune_pifa_params)
-    cfg, model, params = tiny
-    calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 32), 0,
-                                cfg.vocab_size) for i in range(3)]
-    md = {}
-    for bi in range(cfg.num_layers):
-        rho = 0.4 if bi % 2 == 0 else 0.7
-        for info in model.linears_in_block():
-            md[f"block{bi}/" + "/".join(info.path)] = rho
-    cp = compress_transformer(model, params, calib,
-                              MpifaConfig(density=0.55, module_density=md))
-    restacked = model.restack_blocks(cp, pad=True, max_buckets=4)
+    cfg, model, params = tiny[:3]
+    restacked = model.restack_blocks(tiny_ns, pad=True, max_buckets=4)
     clear_block_size_registry()
     try:
         chosen = tune_pifa_params(restacked, batch=4)

@@ -1,79 +1,35 @@
 """Speculative decoding: draft-then-verify through the engine and the
 continuous-batching scheduler.
 
-The acceptance bar mirrors ISSUE 3: greedy speculative output must be
+The acceptance bar mirrors ISSUE 3/4: greedy speculative output must be
 BIT-IDENTICAL to plain engine generation — for dense, PIFA and
-rank-bucketed MPIFA_NS targets, at both extremes of acceptance
-(identical draft accepts everything, an independent random draft
-rejects essentially everything), with eos landing inside an accepted
-run, and for scheduler slots mixing speculative and plain requests.
+rank-bucketed MPIFA_NS targets, for the SSM/hybrid/ring families (whose
+verify rolls back through per-step state checkpoints), at both extremes
+of acceptance, with eos landing inside an accepted run, and for
+scheduler slots mixing speculative and plain requests.  Sampled
+speculative scheduler slots must reproduce the token stream of a
+batch-1 ``engine.generate_speculative`` call with the slot's request
+key (``ServingScheduler.spec_request_key``).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import get_config, get_smoke_config
-from repro.core.mpifa import MpifaConfig, compress_transformer
+from repro.configs.base import get_smoke_config
 from repro.models.model import build_model
 from repro.runtime.engine import GenerationEngine
 from repro.runtime.scheduler import Request, ServingScheduler
 
 MAX_NEW = 12
-PROMPT = 10
-
-
-@pytest.fixture(scope="module")
-def tiny():
-    cfg = get_config("tiny")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 32), 0,
-                                cfg.vocab_size) for i in range(3)]
-    prompts = jnp.asarray(
-        np.random.default_rng(0).integers(0, cfg.vocab_size, (3, PROMPT)),
-        jnp.int32)
-    return cfg, model, params, calib, prompts
-
-
-@pytest.fixture(scope="module")
-def engine(tiny):
-    return GenerationEngine(tiny[1])
-
-
-@pytest.fixture(scope="module")
-def tiny_pifa(tiny):
-    cfg, model, params, calib, _ = tiny
-    return compress_transformer(model, params, calib,
-                                MpifaConfig(density=0.7))
-
-
-@pytest.fixture(scope="module")
-def tiny_draft(tiny):
-    """A more aggressively compressed draft of the same weights."""
-    cfg, model, params, calib, _ = tiny
-    return compress_transformer(model, params, calib,
-                                MpifaConfig(density=0.45))
-
-
-@pytest.fixture(scope="module")
-def tiny_ns(tiny):
-    """MPIFA_NS: per-layer densities -> heterogeneous PIFA ranks."""
-    cfg, model, params, calib, _ = tiny
-    md = {}
-    for bi in range(cfg.num_layers):
-        rho = 0.4 if bi % 2 == 0 else 0.7
-        for info in model.linears_in_block():
-            md[f"block{bi}/" + "/".join(info.path)] = rho
-    return compress_transformer(model, params, calib,
-                                MpifaConfig(density=0.55, module_density=md))
+PROMPT = 12  # mirrors the conftest prompt fixture
 
 
 # ------------------------------------------------------------ verify mode
 
 def test_verify_step_matches_sequential_decode(tiny):
-    """The new multi-token cached forward: verify logits at every
-    position match one-token-at-a-time decode_step logits."""
+    """The multi-token cached forward: verify logits at every position
+    match one-token-at-a-time decode_step logits."""
     cfg, model, params, calib, prompts = tiny
     k = 3
     cache = model.init_cache(prompts.shape[0], PROMPT + k + 2,
@@ -133,19 +89,61 @@ def test_verify_step_encdec_matches_sequential_decode():
                                    rtol=1e-5, atol=1e-5)
 
 
-def test_verify_refuses_ssm_and_ring():
-    m = build_model(get_smoke_config("mamba2_2p7b"))
-    p = m.init(jax.random.PRNGKey(0))
-    cache = m.init_cache(1, 16, dtype=jnp.float32)
-    with pytest.raises(NotImplementedError, match="rollback"):
-        m.verify_step(p, jnp.zeros((1, 3), jnp.int32), cache)
+@pytest.mark.parametrize("arch", ["mamba2_2p7b", "zamba2_1p2b",
+                                  "gemma3_12b"])
+def test_verify_step_ssm_and_ring_matches_sequential_decode(arch):
+    """SSM recurrences and ring caches now verify through the scan-of-
+    decode-steps path: logits are BIT-identical to sequential
+    decode_step logits (same computation inside one dispatch), and the
+    advanced cache carries the per-step checkpoint stack."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 9)), jnp.int32)
+    k = 3
+    cache_len = 9 + k + 4  # > gemma smoke window 8: ring engages
+    cache = model.init_cache(2, cache_len, dtype=jnp.float32)
+    if arch == "gemma3_12b":
+        assert "kl" in cache
+    logits, cache_seq = model.prefill(params, prompts, cache)
+    nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    toks, seq_logits = [nxt], []
+    for _ in range(k):
+        lg, cache_seq = model.decode_step(params, toks[-1], cache_seq)
+        seq_logits.append(lg[:, -1, :])
+        toks.append(jnp.argmax(lg[:, -1, :], axis=-1
+                               ).astype(jnp.int32)[:, None])
+    cache2 = model.init_cache(2, cache_len, dtype=jnp.float32)
+    _, cache_v = model.prefill(params, prompts, cache2)
+    vlogits, cache_v = model.verify_step(
+        params, jnp.concatenate(toks, axis=1), cache_v)
+    assert "ckpt" in cache_v                     # checkpoint stack rides
+    assert bool(jnp.all(cache_v["pos"] == cache_seq["pos"] + 1))
+    for i in range(k):
+        # scan-of-decode verify: BIT-identical, not just close
+        assert bool(jnp.all(vlogits[:, i, :] == seq_logits[i])), (arch, i)
+
+
+def test_ring_verify_rejects_oversized_k():
+    """spec_k + 1 > window would overwrite the same ring slot twice in
+    one verify — refused loudly at every entry point."""
     g = build_model(get_smoke_config("gemma3_12b"))
     gp = g.init(jax.random.PRNGKey(0))
-    # cache_len > sliding_window engages the ring layout
-    rc = g.init_cache(1, g.cfg.sliding_window + 8, dtype=jnp.float32)
+    w = g.cfg.sliding_window
+    rc = g.init_cache(1, w + 8, dtype=jnp.float32)
     assert "kl" in rc
-    with pytest.raises(ValueError, match="ring"):
-        g.verify_step(gp, jnp.zeros((1, 3), jnp.int32), rc)
+    with pytest.raises(ValueError, match="distinct ring slot"):
+        g.verify_step(gp, jnp.zeros((1, w + 1), jnp.int32), rc)
+    eng = GenerationEngine(g)
+    with pytest.raises(ValueError, match="distinct ring slot"):
+        eng.generate_speculative(gp, gp, jnp.zeros((1, 6), jnp.int32),
+                                 8, cache_len=w + 8, spec_k=w)
+    with pytest.raises(ValueError, match="distinct ring slot"):
+        ServingScheduler(g, gp, capacity=1, draft_params=gp, spec_k=w,
+                         cache_len=w + 8).run(
+            [Request(request_id=0, prompt=np.zeros(4, np.int32),
+                     max_new=2)])
 
 
 # ----------------------------------------------------- engine bit-identity
@@ -164,6 +162,29 @@ def test_greedy_bit_identity(tiny, engine, tiny_pifa, tiny_ns, tiny_draft,
     assert bool(jnp.all(res.tokens == ref.tokens)), target
     assert res.emitted_per_dispatch >= 1.0
     assert res.rounds >= 1
+
+
+@pytest.mark.parametrize("arch", ["mamba2_2p7b", "zamba2_1p2b",
+                                  "gemma3_12b"])
+def test_greedy_bit_identity_ssm_and_ring(arch):
+    """The previously refused families: greedy speculative decoding is
+    bit-identical to plain scanned decode for SSM (mamba2), hybrid
+    (zamba2) and ring-cache (gemma3) targets, with an identical draft
+    (all-accept) AND an independent random draft (all-reject)."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 8)), jnp.int32)
+    eng = GenerationEngine(model)
+    ref = eng.generate(params, prompts, 7)
+    res = eng.generate_speculative(params, params, prompts, 7, spec_k=3)
+    assert bool(jnp.all(res.tokens == ref.tokens)), arch
+    assert res.acceptance_rate > 0.7          # identical draft accepts
+    assert res.emitted_per_dispatch > 1.0
+    dparams = model.init(jax.random.PRNGKey(99))
+    res2 = eng.generate_speculative(params, dparams, prompts, 7, spec_k=3)
+    assert bool(jnp.all(res2.tokens == ref.tokens)), arch
 
 
 def test_all_accept_identical_draft(tiny, engine):
@@ -193,7 +214,7 @@ def test_all_reject_random_draft(tiny, engine):
     assert res.rounds <= MAX_NEW
 
 
-def test_rank_bucket_mismatch(tiny, engine, tiny_ns, tiny_draft):
+def test_rank_bucket_mismatch(tiny, tiny_ns, tiny_draft):
     """Target restacks into multiple rank buckets, the draft into a
     different (uniform) stack — each traces its own forward, outputs
     stay bit-identical."""
@@ -286,7 +307,8 @@ def _assert_bit_identical(engine, params, run, requests, eos_id):
 def test_scheduler_mixed_spec_and_plain_slots(tiny, engine, tiny_draft):
     """Speculative and plain requests share the slot batch: every
     output bit-identical to the engine, accept/reject bookkeeping only
-    accrues on speculative slots."""
+    accrues on speculative slots — plain slots report n/a (None), so
+    they never pollute the aggregate acceptance rate."""
     cfg, model, params, calib, _ = tiny
     reqs = _requests(cfg, lens=[5, 9, 7, 12, 4], budgets=[6, 3, 8, 5, 7],
                      spec=[True, False, True, True, False])
@@ -297,10 +319,13 @@ def test_scheduler_mixed_spec_and_plain_slots(tiny, engine, tiny_draft):
     assert sorted(r.request_id for r in run.results) == list(range(5))
     _assert_bit_identical(engine, params, run, reqs, eos_id=1)
     by_id = {r.request_id: r for r in run.results}
-    for rid in (1, 4):                       # plain slots never draft
-        assert by_id[rid].drafted == 0 and by_id[rid].accepted == 0
+    for rid in (1, 4):                       # plain slots: n/a, not 0/0
+        assert by_id[rid].drafted is None and by_id[rid].accepted is None
+    for rid in (0, 2, 3):
+        assert by_id[rid].drafted is not None
     assert sum(by_id[rid].drafted for rid in (0, 2, 3)) > 0
-    assert run.drafted == sum(r.drafted for r in run.results)
+    assert run.drafted == sum(r.drafted for r in run.results
+                              if r.drafted is not None)
     assert run.accepted <= run.drafted
 
 
@@ -334,18 +359,79 @@ def test_scheduler_spec_variable_advance_chunk_boundaries(tiny, engine):
     assert run.acceptance_rate > 0.7
 
 
+@pytest.mark.parametrize("arch", ["mamba2_2p7b", "zamba2_1p2b",
+                                  "gemma3_12b"])
+def test_scheduler_spec_ssm_and_ring_slots(arch):
+    """Speculative slots for the previously refused families: SSM and
+    hybrid roll back through per-step state checkpoints, ring caches
+    through saved-slot restores — every request bit-identical to the
+    single-request engine."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _requests(cfg, lens=[6, 9, 5], budgets=[5, 3, 6], seed=2)
+    kw = dict(capacity=2, chunk=2, eos_id=1, draft_params=params,
+              spec_k=3)
+    if arch == "gemma3_12b":
+        kw["cache_len"] = 9 + 6 + 3 + 2   # > window 8: ring engages
+    sched = ServingScheduler(model, params, **kw)
+    assert sched.prompt_buckets is None   # exact-length prefills forced
+    run = sched.run(reqs)
+    eng = GenerationEngine(model)
+    _assert_bit_identical(eng, params, run, reqs, eos_id=1)
+    assert run.drafted > 0
+
+
+def test_scheduler_sampled_spec_matches_engine_streams(tiny, engine,
+                                                       tiny_draft):
+    """THE sampled-slot contract: a sampled speculative scheduler slot
+    reproduces the token stream of a batch-1
+    ``engine.generate_speculative`` call keyed by
+    ``spec_request_key(request_id)`` — slot placement, chunk
+    boundaries and batch composition are invisible."""
+    cfg, model, params, calib, _ = tiny
+    reqs = _requests(cfg, lens=[5, 9, 7], budgets=[6, 4, 8], seed=3)
+    sched = ServingScheduler(model, params, capacity=2, chunk=2, eos_id=1,
+                             prompt_buckets=(8, 16),
+                             draft_params=tiny_draft, spec_k=3,
+                             temperature=0.8, top_k=4, sample_seed=11)
+    run = sched.run(reqs)
+    for r in sorted(run.results, key=lambda r: r.request_id):
+        req = reqs[r.request_id]
+        ref = engine.generate_speculative(
+            params, tiny_draft, jnp.asarray(req.prompt[None, :]),
+            req.max_new, spec_k=3, temperature=0.8, top_k=4, eos_id=1,
+            key=sched.spec_request_key(req.request_id))
+        n = r.prompt_len + r.generated
+        assert np.array_equal(r.tokens[:n], np.asarray(ref.tokens[0])[:n]), (
+            f"request {r.request_id} diverged from engine stream")
+
+
+def test_scheduler_sampled_spec_deterministic_and_seed_sensitive(
+        tiny, tiny_draft):
+    """Same sample_seed reproduces every sampled-spec stream; a
+    different seed changes them; plain slots mix in and stay in-vocab."""
+    cfg, model, params, calib, _ = tiny
+
+    def run_with(seed):
+        sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                                 prompt_buckets=(8, 16),
+                                 draft_params=tiny_draft, spec_k=2,
+                                 temperature=0.9, sample_seed=seed)
+        reqs = _requests(cfg, lens=[5, 9, 7], budgets=[6, 4, 5],
+                         spec=[True, False, True])
+        return {r.request_id: r.tokens.tolist()
+                for r in sched.run(reqs).results}
+
+    r1, r2, r3 = run_with(7), run_with(7), run_with(8)
+    assert r1 == r2
+    assert r1 != r3
+    assert all(t < cfg.vocab_size for toks in r1.values() for t in toks)
+
+
 def test_scheduler_spec_config_errors(tiny, tiny_draft):
     cfg, model, params, calib, _ = tiny
-    with pytest.raises(ValueError, match="greedy-only"):
-        ServingScheduler(model, params, draft_params=tiny_draft,
-                         temperature=0.5)
     with pytest.raises(ValueError, match="top_k"):
         ServingScheduler(model, params, top_k=5)
-    m2 = build_model(get_smoke_config("mamba2_2p7b"))
-    p2 = m2.init(jax.random.PRNGKey(0))
-    with pytest.raises(ValueError, match="rollback"):
-        ServingScheduler(m2, p2, draft_params=p2)
-    g = build_model(get_smoke_config("gemma3_12b"))
-    gp = g.init(jax.random.PRNGKey(0))
-    with pytest.raises(ValueError, match="ring"):
-        ServingScheduler(g, gp, draft_params=gp)
+    with pytest.raises(ValueError, match="spec_k"):
+        ServingScheduler(model, params, draft_params=tiny_draft, spec_k=0)
