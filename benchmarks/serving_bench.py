@@ -1,4 +1,5 @@
-"""Serving benchmark: continuous batching vs run-to-completion.
+"""Serving benchmark: continuous batching vs run-to-completion, plus
+the paged-KV capacity sweep.
 
 Poisson arrivals with mixed prompt/output lengths through the
 slot-allocated scheduler (runtime/scheduler.py), against the *same*
@@ -8,11 +9,23 @@ batches do).  Both modes share jitted chunk/prefill functions shapes,
 so the comparison isolates the admission policy: freed rows idling
 behind the slowest request of their batch.
 
+The **capacity-at-equal-HBM sweep** pits the paged block-table cache
+(``cache="paged"``, runtime/paging.py) against contiguous slots under
+a simultaneous burst of mixed prompt/budget requests, holding the KV
+pool to the SAME token count the contiguous cache allocates.  Because
+contiguous slots each cost a full worst-case ``cache_len`` row while
+paged slots reserve only their own prompt+budget pages, the paged
+scheduler sustains more concurrent requests in the same memory.  The
+sweep HARD-GATES: peak paged concurrency must be >= 1.3x contiguous
+(and every request's tokens must match the contiguous run exactly) or
+the benchmark exits non-zero — CI runs it.
+
 Reports aggregate tokens/s, p50/p99 per-request latency and mean slot
 occupancy, and writes machine-readable ``BENCH_serving.json`` so the
 perf trajectory is tracked across PRs.
 
   PYTHONPATH=src python benchmarks/serving_bench.py [--compressed]
+  PYTHONPATH=src python benchmarks/serving_bench.py --paged-gate-only
 """
 from __future__ import annotations
 
@@ -94,6 +107,74 @@ def run_modes(model, params, requests, *, capacity: int, chunk: int,
     return rows
 
 
+def paged_capacity_sweep(model, params, *, contig_capacity: int = 6,
+                         page_size: int = 16, burst: int = 32,
+                         chunk: int = 4, seed: int = 0) -> dict:
+    """Concurrent-request capacity at EQUAL cache HBM, mixed lengths.
+
+    Contiguous: ``contig_capacity`` slots of ``cache_len`` rows.
+    Paged: one slot per burst request, but the page pool holds exactly
+    the contiguous cache's token count (num_pages * page_size + one
+    sentinel page == contig_capacity * cache_len) — concurrency is
+    limited by page reservations alone.  Capacity metric: peak slot
+    occupancy over the drain.  Hard correctness check: every request's
+    tokens match the contiguous run bit-for-bit.
+    """
+    from repro.runtime.paging import pages_for
+    cache_len = max(PROMPT_MIX) + max(BUDGET_MIX) + 1
+    cache_len += (-cache_len) % page_size            # page-aligned
+    n_logical = pages_for(cache_len, page_size)
+    # equal HBM including the sentinel page
+    num_pages = contig_capacity * n_logical - 1
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(burst):                            # simultaneous burst
+        plen = int(rng.choice(PROMPT_MIX))
+        budget = int(rng.choice(BUDGET_MIX, p=BUDGET_P))
+        reqs.append(Request(
+            request_id=i,
+            prompt=rng.integers(0, BENCH_CFG.vocab_size,
+                                plen).astype(np.int32),
+            max_new=budget))
+
+    def peak(run):
+        return max(occ for _, occ in run.occupancy)
+
+    contig = ServingScheduler(model, params, capacity=contig_capacity,
+                              chunk=chunk, cache_len=cache_len)
+    run_c = contig.run([Request(r.request_id, r.prompt, r.max_new)
+                        for r in reqs])
+    paged = ServingScheduler(model, params, capacity=burst, chunk=chunk,
+                             cache_len=cache_len, cache="paged",
+                             page_size=page_size, num_pages=num_pages)
+    run_p = paged.run([Request(r.request_id, r.prompt, r.max_new)
+                       for r in reqs])
+    assert paged._alloc.free_pages == num_pages, "pages leaked"
+
+    toks_c = {r.request_id: r.tokens for r in run_c.results}
+    mismatches = sum(
+        0 if np.array_equal(r.tokens, toks_c[r.request_id]) else 1
+        for r in run_p.results)
+    ratio = peak(run_p) / max(peak(run_c), 1)
+    row = {
+        "cache_len": cache_len,
+        "page_size": page_size,
+        "pool_tokens": (num_pages + 1) * page_size,
+        "contiguous_tokens": contig_capacity * cache_len,
+        "burst_requests": burst,
+        "peak_concurrency_contiguous": peak(run_c),
+        "peak_concurrency_paged": peak(run_p),
+        "capacity_ratio": round(ratio, 2),
+        "paged_deferrals": dict(run_p.deferrals),
+        "token_mismatches": mismatches,
+    }
+    emit("serving/paged/capacity_at_equal_hbm", 0.0,
+         f"{row['peak_concurrency_paged']} vs "
+         f"{row['peak_concurrency_contiguous']} concurrent "
+         f"({ratio:.2f}x, {row['pool_tokens']} pool tokens)")
+    return row
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
@@ -106,11 +187,41 @@ def main(argv=None) -> int:
                     help="optional eos token (default: budget-driven)")
     ap.add_argument("--compressed", action="store_true",
                     help="also benchmark MPIFA-PIFA compressed params")
+    ap.add_argument("--paged-gate-only", action="store_true",
+                    help="run only the paged capacity sweep + hard gate "
+                         "(the CI paged smoke)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--capacity-gate", type=float, default=1.3,
+                    help="minimum paged/contiguous concurrency ratio at "
+                         "equal cache HBM")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
 
     model = build_model(BENCH_CFG)
     params = model.init(jax.random.PRNGKey(0))
+
+    def run_paged_gate(report):
+        row = paged_capacity_sweep(model, params, page_size=args.page_size,
+                                   seed=args.seed)
+        report["paged_capacity"] = row
+        ok = (row["capacity_ratio"] >= args.capacity_gate
+              and row["token_mismatches"] == 0)
+        if not ok:
+            print(f"[serving_bench] PAGED GATE FAILED: ratio "
+                  f"{row['capacity_ratio']} < {args.capacity_gate} or "
+                  f"{row['token_mismatches']} token mismatches",
+                  flush=True)
+        return ok
+
+    if args.paged_gate_only:
+        report = {"config": {"model": BENCH_CFG.name,
+                             "page_size": args.page_size,
+                             "backend": jax.default_backend(),
+                             "timestamp": time.strftime(
+                                 "%Y-%m-%dT%H:%M:%S")}}
+        ok = run_paged_gate(report)
+        print(json.dumps(report["paged_capacity"], indent=2), flush=True)
+        return 0 if ok else 1
     requests = make_requests(args.requests, args.rate, BENCH_CFG.vocab_size,
                              args.seed, max(BUDGET_MIX))
     # warm set covers EVERY prompt bucket so no admit fn compiles
@@ -164,10 +275,12 @@ def main(argv=None) -> int:
         report[label] = rows
         emit(f"serving/{label}/speedup", 0.0, f"{speedup:.2f}x")
 
+    gate_ok = run_paged_gate(report)
+
     out = Path(args.out)
     out.write_text(json.dumps(report, indent=2) + "\n")
     print(f"[serving_bench] wrote {out}", flush=True)
-    return 0
+    return 0 if gate_ok else 1
 
 
 if __name__ == "__main__":

@@ -45,12 +45,15 @@ def serve_continuous(model, params, *, vocab_size: int, n_requests: int = 8,
                      capacity: int = 4, chunk: int = 4, max_new: int = 16,
                      prompt_len: int = 16, eos_id=None, seed: int = 0,
                      label: str = "dense", draft_params=None,
-                     spec_k: int = 4) -> float:
+                     spec_k: int = 4, cache: str = "contiguous",
+                     page_size: int = 16) -> float:
     """Continuous-batching vs run-to-completion on one request mix.
 
     Mixed generation budgets under simultaneous arrival: the drain
     baseline holds every slot until the whole batch finishes, the
     continuous scheduler refills freed slots at chunk boundaries.
+    ``cache="paged"`` serves both modes through the block-table page
+    pool (runtime/paging.py) — output must not change.
     Returns the speedup (continuous / drain aggregate tokens/s).
     """
     rng = np.random.default_rng(seed)
@@ -80,15 +83,19 @@ def serve_continuous(model, params, *, vocab_size: int, n_requests: int = 8,
                                  cache_len=(prompt_len + max_new + 1
                                             + (spec_k if draft_params
                                                is not None else 0)),
-                                 draft_params=draft_params, spec_k=spec_k)
+                                 draft_params=draft_params, spec_k=spec_k,
+                                 cache=cache, page_size=page_size)
         sched.run(list(warm_set))           # warm: compile chunk/admits
         runs[mode] = sched.run(list(bench_set))  # same mix for both modes
         r = runs[mode]
         spec_note = (f", accept {r.acceptance_rate:.2f}"
                      if draft_params is not None else "")
+        defer_note = (f", deferrals {dict(r.deferrals)}"
+                      if r.deferrals else "")
         print(f"[serve] {label} {mode:10s}: {r.tokens_per_sec:7.1f} "
               f"tokens/s  ({r.generated} tokens, {r.chunks} chunks, "
-              f"occupancy {r.mean_occupancy:.2f}/{capacity}{spec_note})",
+              f"occupancy {r.mean_occupancy:.2f}/{capacity}{spec_note}"
+              f"{defer_note})",
               flush=True)
     speedup = (runs["continuous"].tokens_per_sec
                / max(runs["drain"].tokens_per_sec, 1e-9))
@@ -203,6 +210,11 @@ def main(argv=None) -> int:
                     help="decode steps per scheduler dispatch")
     ap.add_argument("--requests", type=int, default=8,
                     help="requests for the --continuous comparison")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve the --continuous comparison through the "
+                         "paged block-table KV cache (runtime/paging.py)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page with --paged")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--draft-density", type=float, default=None,
@@ -304,11 +316,14 @@ def main(argv=None) -> int:
     toks_d = serve(params, "dense")
     if draft is not None:
         serve_speculative(params, "dense", toks_d)
+    cache_mode = "paged" if args.paged else "contiguous"
     if args.continuous:
         serve_continuous(model, params, vocab_size=cfg.vocab_size,
                          n_requests=args.requests, capacity=args.capacity,
                          chunk=args.chunk, max_new=args.max_new,
-                         prompt_len=args.prompt_len, seed=args.seed)
+                         prompt_len=args.prompt_len, seed=args.seed,
+                         label="dense" if not args.paged else "dense/paged",
+                         cache=cache_mode, page_size=args.page_size)
         if draft is not None:
             serve_continuous(model, params, vocab_size=cfg.vocab_size,
                              n_requests=args.requests,
@@ -316,7 +331,8 @@ def main(argv=None) -> int:
                              max_new=args.max_new,
                              prompt_len=args.prompt_len, seed=args.seed,
                              label="dense+spec", draft_params=draft,
-                             spec_k=args.spec_k)
+                             spec_k=args.spec_k, cache=cache_mode,
+                             page_size=args.page_size)
 
     if args.compression != "none":
         if cfg.family not in ("dense", "vlm"):
@@ -341,7 +357,8 @@ def main(argv=None) -> int:
                              capacity=args.capacity, chunk=args.chunk,
                              max_new=args.max_new,
                              prompt_len=args.prompt_len, seed=args.seed,
-                             label=args.compression)
+                             label=args.compression, cache=cache_mode,
+                             page_size=args.page_size)
         if args.temperature == 0.0:
             agree = float(jnp.mean((toks_c == toks_d).astype(jnp.float32)))
             print(f"[serve] {args.compression} token agreement with dense "

@@ -254,14 +254,23 @@ class EncDecModel:
         sq = tokens.shape[1]
         h = L.embed(params["embed"], tokens)
         positions = pos[:, None] + jnp.arange(sq)[None, :]
-        pe = _sinusoid(cache["k"].shape[2], cfg.d_model, h.dtype)
+        # paged caches store k as a page pool: the logical context
+        # length is pages * page_size, not the pool's axis-2 extent
+        clen = (cache["bt"].shape[1] * cache["k"].shape[2]
+                if "bt" in cache else cache["k"].shape[2])
+        pe = _sinusoid(clen, cfg.d_model, h.dtype)
         h = h + jnp.take(pe, jnp.clip(positions, 0, pe.shape[0] - 1), axis=0)
 
         def body(carry, xs):
             bp, kc, vc, xk, xv = xs
+            layer_cache = {"k": kc, "v": vc, "pos": pos}
+            if "bt" in cache:
+                # paged self-attention KV (runtime/paging.py); the
+                # cross-KV stays per-slot — it is static encoder memory
+                layer_cache["bt"] = cache["bt"]
             out, nc = self._dec_block(
                 bp, carry, cross_kv=(xk.astype(carry.dtype), xv.astype(carry.dtype)),
-                cache={"k": kc, "v": vc, "pos": pos}, positions=positions,
+                cache=layer_cache, positions=positions,
                 per_row=per_row)
             return out, (nc["k"], nc["v"])
 

@@ -149,14 +149,21 @@ class HybridModel:
             out, st = _mamba_prefill_block(bp, carry, cfg)
             return out, st
 
+        paged = "bt" in cache
+
         def stage_body(carry, xs):
             h_in = carry
             stage_p, conv_c, ssm_c, kc, vc = xs
             h_out, (nconv, nssm) = jax.lax.scan(mamba_step, h_in,
                                                 (stage_p, conv_c, ssm_c))
             positions = pos[:, None] + jnp.arange(sq)[None, :]
+            stage_cache = {"k": kc, "v": vc, "pos": pos}
+            if paged:
+                # shared-attention KV pages; conv/ssm state is constant
+                # size per slot and stays contiguous by design
+                stage_cache["bt"] = cache["bt"]
             h_out, nc = self._shared_apply(
-                params, h_out, cache={"k": kc, "v": vc, "pos": pos},
+                params, h_out, cache=stage_cache,
                 positions=positions)
             return h_out, (nconv, nssm, nc["k"], nc["v"])
 
@@ -175,6 +182,8 @@ class HybridModel:
             new_ssm = jnp.concatenate([new_ssm, ts], axis=0)
         new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
                      "ssm": new_ssm, "k": ks, "v": vs, "pos": pos + sq}
+        if paged:
+            new_cache["bt"] = cache["bt"]
         h = L.apply_norm(params["final_norm"], L.take_last(h, last_idx),
                          cfg.norm_eps)
         return L.unembed(params["embed"], h), new_cache

@@ -302,6 +302,18 @@ def attention_block(
     per_row: multi-token cached writes scatter at each row's OWN ``pos``
     (speculative verify scores k+1 tokens from diverged per-row
     offsets) instead of the uniform ``pos[0]`` prefill slab write.
+
+    PAGED cache (``"bt"`` present): ``k``/``v`` are page POOLS
+    ``(num_pages, page_size, hkv, d)`` shared by all rows and ``bt``
+    (b, n_logical) maps each row's logical page j to a physical page
+    (0 = unmapped sentinel).  Writes scatter at
+    ``(bt[pos // P], pos % P)``; reads gather ``pool[bt]`` back into a
+    position-ordered logical view and run the UNCHANGED attention
+    computation, so paged output is bit-identical to contiguous mode —
+    same values, different addressing (runtime/paging.py).  Only the
+    decode / per-row verify paths page; prefill runs against a
+    contiguous scratch cache whose prompt pages are scattered into the
+    pool by the scheduler's admission, so a paged prefill here refuses.
     """
     b, sq, _ = x.shape
     if tap is not None:
@@ -334,7 +346,36 @@ def attention_block(
             q = apply_rope(q, positions, rope_theta)
             k = apply_rope(k, positions, rope_theta)
         if cache is not None:
-            if sq == 1 or per_row:
+            if "bt" in cache:
+                # paged block-table cache: scatter this step's k/v into
+                # the shared page pool at (bt[pos // P], pos % P), then
+                # gather the row's pages back into a position-ordered
+                # logical view so the attention math below is the SAME
+                # computation as contiguous mode (bit-identity argument
+                # in runtime/paging.py).  Unmapped logical pages read
+                # the sentinel page — junk that kv_len/causal masking
+                # excludes exactly; frozen-row junk writes land there.
+                if not (sq == 1 or per_row):
+                    raise ValueError(
+                        "paged KV cache has no prefill path: prefill "
+                        "into a contiguous scratch cache and scatter "
+                        "prompt pages (runtime/paging.py)")
+                bt = cache["bt"]
+                P = cache["k"].shape[1]
+                idx = cache["pos"][:, None] + jnp.arange(sq)[None, :]
+                pg = jnp.take_along_axis(
+                    bt, jnp.clip(idx // P, 0, bt.shape[1] - 1), axis=1)
+                kp = cache["k"].at[pg, idx % P].set(
+                    k.astype(cache["k"].dtype))
+                vp = cache["v"].at[pg, idx % P].set(
+                    v.astype(cache["v"].dtype))
+                kc = jnp.take(kp, bt, axis=0).reshape(
+                    (b, bt.shape[1] * P) + kp.shape[2:])
+                vc = jnp.take(vp, bt, axis=0).reshape(
+                    (b, bt.shape[1] * P) + vp.shape[2:])
+                new_cache = {**cache, "k": kp, "v": vp,
+                             "pos": cache["pos"] + sq}
+            elif sq == 1 or per_row:
                 # decode / speculative verify: per-row scatter at each
                 # sequence's own pos — continuous-batching slots decode
                 # at *different* positions (runtime/scheduler.py) and
@@ -347,6 +388,7 @@ def attention_block(
                     k.astype(cache["k"].dtype))
                 vc = cache["v"].at[rows, idx].set(
                     v.astype(cache["v"].dtype))
+                new_cache = {"k": kc, "v": vc, "pos": cache["pos"] + sq}
             else:
                 # prefill: uniform pos across batch (slot prefills run
                 # batch-1 from pos 0; training-free paths never mix)
@@ -356,7 +398,7 @@ def attention_block(
                 vc = jax.lax.dynamic_update_slice_in_dim(
                     cache["v"], v.astype(cache["v"].dtype),
                     cache["pos"][0], axis=1)
-            new_cache = {"k": kc, "v": vc, "pos": cache["pos"] + sq}
+                new_cache = {"k": kc, "v": vc, "pos": cache["pos"] + sq}
             if (ATTN_WINDOW_SLICE and window_slice and sq == 1
                     and kc.shape[1] > window_slice):
                 # sliding-window decode: touch only the trailing `window`

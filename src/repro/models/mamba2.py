@@ -293,7 +293,10 @@ class Mamba2Model:
             return out, (conv_state, h_fin)
 
         h, (convs, ssms) = jax.lax.scan(body, h, params["blocks"])
-        new_cache = {"conv": convs.astype(cache["conv"].dtype),
+        # pass through any extra cache entries (e.g. a scheduler-side
+        # block table): this family's state is constant size per slot,
+        # so the paged KV cache is a no-op for it by design
+        new_cache = {**cache, "conv": convs.astype(cache["conv"].dtype),
                      "ssm": ssms,
                      "pos": cache["pos"] + tokens.shape[1]}
         h = L.apply_norm(params["final_norm"], L.take_last(h, last_idx),
@@ -380,7 +383,7 @@ class Mamba2Model:
 
         h, (convs, ssms) = jax.lax.scan(
             body, h, (params["blocks"], cache["conv"], cache["ssm"]))
-        new_cache = {"conv": convs.astype(cache["conv"].dtype), "ssm": ssms,
-                     "pos": cache["pos"] + 1}
+        new_cache = {**cache, "conv": convs.astype(cache["conv"].dtype),
+                     "ssm": ssms, "pos": cache["pos"] + 1}
         h = L.apply_norm(params["final_norm"], h, self.cfg.norm_eps)
         return L.unembed(params["embed"], h), new_cache

@@ -236,11 +236,18 @@ class Transformer:
         ``pos`` and ``all_logits`` returns logits at every position —
         together they are the speculative multi-token verify mode
         (``verify_step``).
+
+        A paged cache (``"bt"`` block table alongside k/v page pools —
+        runtime/paging.py) takes the same layer scans: the block table
+        rides through every per-layer cache dict and the scatter/gather
+        addressing lives inside ``attention_block``, so paged decode
+        and verify are bit-identical to contiguous mode.
         """
         cfg = self.cfg
         h = self.embed_tokens(params, tokens, patches)
         pos = cache["pos"]
         ratio = cfg.local_global_ratio
+        paged = "bt" in cache
         if "kl" in cache:  # ring caches (local:global archs)
             return self._forward_cached_ring(params, h, cache,
                                              last_idx=last_idx)
@@ -249,9 +256,12 @@ class Transformer:
                                                 last_idx=last_idx,
                                                 per_row=per_row,
                                                 all_logits=all_logits)
+        # the staged sliding-window fast path slices contiguous rows;
+        # paged caches use the generic scan (the window mask alone is
+        # exact — slicing is only a bandwidth optimisation)
         staged = (L.ATTN_WINDOW_SLICE and cfg.sliding_window and ratio
                   and cfg.num_layers % (ratio + 1) == 0
-                  and tokens.shape[1] == 1
+                  and tokens.shape[1] == 1 and not paged
                   and cache["k"].shape[2] > cfg.sliding_window)
 
         if not staged:
@@ -260,6 +270,8 @@ class Transformer:
             def body(carry, xs):
                 bp, w, kc, vc = xs
                 layer_cache = {"k": kc, "v": vc, "pos": pos}
+                if paged:
+                    layer_cache["bt"] = cache["bt"]
                 out, nc = self.block_apply(bp, carry, window=w,
                                            cache=layer_cache,
                                            per_row=per_row)
@@ -268,6 +280,8 @@ class Transformer:
             h, (ks, vs) = jax.lax.scan(
                 body, h, (params["blocks"], windows, cache["k"], cache["v"]))
             new_cache = {"k": ks, "v": vs, "pos": pos + h.shape[1]}
+            if paged:
+                new_cache["bt"] = cache["bt"]
             sel = h if all_logits else self._take_last(h, last_idx)
             logits = self.final_logits(params, sel)
             return logits, new_cache
@@ -325,11 +339,14 @@ class Transformer:
         buckets itself.
         """
         pos = cache["pos"]
+        paged = "bt" in cache
         windows = self._windows()
 
         def body(carry, xs):
             bp, w, kc, vc = xs
             layer_cache = {"k": kc, "v": vc, "pos": pos}
+            if paged:
+                layer_cache["bt"] = cache["bt"]
             out, nc = self.block_apply(bp, carry, window=w,
                                        cache=layer_cache, per_row=per_row)
             return out, (nc["k"], nc["v"])
@@ -348,6 +365,8 @@ class Transformer:
         new_cache = {"k": jnp.concatenate(ks_parts, axis=0),
                      "v": jnp.concatenate(vs_parts, axis=0),
                      "pos": pos + h.shape[1]}
+        if paged:
+            new_cache["bt"] = cache["bt"]
         sel = h if all_logits else self._take_last(h, last_idx)
         return self.final_logits(params, sel), new_cache
 

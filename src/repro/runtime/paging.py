@@ -1,0 +1,314 @@
+"""Paged (block-table) KV cache: pool layout, host allocator, helpers.
+
+The continuous-batching scheduler originally gave every slot a
+contiguous ``cache_len``-long cache row, so HBM capacity was set by the
+LONGEST request any slot might see — a mixed-length request mix wastes
+most of it.  Paged mode replaces the per-slot rows with one fixed pool
+of ``page_size``-token blocks shared by all slots:
+
+  * the ``k``/``v`` cache leaves become **pools**
+    ``(layers, num_pages + 1, page_size, kv_heads, head_dim)``; page 0
+    is a reserved sentinel (never allocated — unmapped block-table
+    entries point at it, so frozen-slot junk writes land there and
+    gathers of unmapped pages read garbage that the causal/``kv_len``
+    mask excludes exactly);
+  * each slot owns a **block table** row ``bt[slot, j] = physical page
+    holding logical positions [j*P, (j+1)*P)``; decode writes scatter at
+    ``(bt[pos // P], pos % P)`` and reads gather ``pool[bt]`` back into
+    a position-ordered logical view, then run the UNCHANGED attention
+    computation — same values, different addressing, which is why paged
+    output is bit-identical to contiguous mode;
+  * a host-side :class:`PageAllocator` hands pages out at admission
+    (prompt pages) and at chunk boundaries (on-demand append for the
+    next chunk's writes), and takes them back on finalize.  Exhaustion
+    REFUSES (raises :class:`PoolExhausted`) — it never evicts or
+    silently overwrites a live page.
+
+Reservation accounting makes mid-flight exhaustion impossible by
+construction: admission reserves each request's worst-case page count
+(prompt bucket + generation budget + speculative margin) without
+allocating it, and only admits while ``free - outstanding_reservations``
+covers the newcomer.  Chunk-boundary extension never exceeds a slot's
+reservation, so an admitted request can always finish.  Capacity still
+beats contiguous slots because the reservation is the REQUEST's worst
+case, not the global ``cache_len``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+__all__ = ["PoolExhausted", "PageAllocator", "PAGED_KEYS", "pages_for",
+           "paged_cache_spec", "make_paged_cache", "paginate_cache",
+           "logical_view"]
+
+# cache leaves that hold positional KV entries and therefore page;
+# every other leaf (pos, conv/ssm state, encdec cross-KV, ring kl/vl)
+# keeps its per-slot layout
+PAGED_KEYS = ("k", "v")
+
+
+class PoolExhausted(RuntimeError):
+    """The page pool cannot satisfy an allocation.  Raised instead of
+    evicting or silently overwriting a live page."""
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` cache entries."""
+    return -(-int(tokens) // int(page_size))
+
+
+class PageAllocator:
+    """Host-side block-table allocator over ``num_pages`` usable pages.
+
+    Physical page ids run 1..num_pages (page 0 is the sentinel and is
+    never handed out).  ``table`` is the (capacity, n_logical) int32
+    block table mirrored to the device before each chunk dispatch;
+    unmapped entries are 0.
+
+    Invariants (property-tested in tests/test_paged.py):
+      * a live page belongs to exactly one slot;
+      * the sentinel is never allocated;
+      * after every slot frees, ``free_pages == num_pages`` (no leaks);
+      * allocation beyond the pool raises :class:`PoolExhausted` —
+        nothing is evicted.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, capacity: int,
+                 n_logical: int):
+        if num_pages < 1:
+            raise ValueError("num_pages must be >= 1")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.capacity = int(capacity)
+        self.n_logical = int(n_logical)
+        # LIFO free list keeps recently-freed (still-warm) pages hot
+        self._free: List[int] = list(range(self.num_pages, 0, -1))
+        self._pages: List[List[int]] = [[] for _ in range(self.capacity)]
+        self._reserved: List[int] = [0] * self.capacity
+        self.table = np.zeros((self.capacity, self.n_logical), np.int32)
+
+    # ------------------------------------------------------------- state
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def slot_pages(self, slot: int) -> Tuple[int, ...]:
+        return tuple(self._pages[slot])
+
+    def outstanding(self) -> int:
+        """Reserved-but-not-yet-allocated pages across live slots."""
+        return sum(max(0, r - len(p))
+                   for r, p in zip(self._reserved, self._pages))
+
+    def pages_for(self, tokens: int) -> int:
+        return pages_for(tokens, self.page_size)
+
+    # -------------------------------------------------------- operations
+    def can_admit(self, reserve_tokens: int) -> bool:
+        """True when a request reserving ``reserve_tokens`` worst-case
+        cache entries can be admitted WITHOUT ever exhausting the pool
+        mid-flight (its future extends stay within the reservation)."""
+        return (self.pages_for(reserve_tokens)
+                <= len(self._free) - self.outstanding())
+
+    def admit(self, slot: int, tokens_now: int,
+              reserve_tokens: Optional[int] = None) -> List[int]:
+        """Allocate pages covering ``tokens_now`` entries for an empty
+        slot, reserving ``reserve_tokens`` (>= tokens_now) worst case."""
+        if self._pages[slot]:
+            raise ValueError(f"slot {slot} still holds pages — free first")
+        need = self.pages_for(tokens_now)
+        reserve = max(need, self.pages_for(reserve_tokens)
+                      if reserve_tokens is not None else need)
+        if reserve > len(self._free) - self.outstanding():
+            raise PoolExhausted(
+                f"page pool exhausted: slot {slot} needs {reserve} pages "
+                f"(reservation) but only {len(self._free)} free minus "
+                f"{self.outstanding()} outstanding reservations")
+        self._reserved[slot] = reserve
+        return self._grow(slot, need)
+
+    def extend(self, slot: int, tokens: int) -> List[int]:
+        """Grow the slot's mapping to cover ``tokens`` entries (no-op if
+        already covered).  Raises :class:`PoolExhausted` on shortfall —
+        never steals a live page."""
+        need = self.pages_for(tokens)
+        if need > self.n_logical:
+            raise ValueError(
+                f"slot {slot}: {tokens} tokens need {need} pages but the "
+                f"block table has {self.n_logical} logical slots")
+        have = len(self._pages[slot])
+        if need <= have:
+            return []
+        return self._grow(slot, need - have)
+
+    def _grow(self, slot: int, n: int) -> List[int]:
+        # all-or-nothing: a partial grow would leave the slot holding
+        # pages its caller does not know about
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"page pool exhausted growing slot {slot} by {n}: only "
+                f"{len(self._free)} of {self.num_pages} pages free — "
+                "refusing to evict")
+        got: List[int] = []
+        for _ in range(n):
+            pg = self._free.pop()
+            self._pages[slot].append(pg)
+            self.table[slot, len(self._pages[slot]) - 1] = pg
+            got.append(pg)
+        return got
+
+    def free(self, slot: int) -> int:
+        """Return every page the slot holds to the pool; clears its
+        block-table row (back to the sentinel) and reservation."""
+        pages = self._pages[slot]
+        n = len(pages)
+        self._free.extend(pages)
+        self._pages[slot] = []
+        self._reserved[slot] = 0
+        self.table[slot, :] = 0
+        return n
+
+    # ------------------------------------------------------- diagnostics
+    def check_invariants(self) -> None:
+        """Raise AssertionError on aliasing / sentinel / leak bugs."""
+        live = [pg for pages in self._pages for pg in pages]
+        assert 0 not in live, "sentinel page allocated"
+        assert 0 not in self._free, "sentinel page on the free list"
+        assert len(set(live)) == len(live), "page aliased to two slots"
+        assert not (set(live) & set(self._free)), "live page on free list"
+        assert len(live) + len(self._free) == self.num_pages, "page leak"
+        for slot, pages in enumerate(self._pages):
+            got = list(self.table[slot, :len(pages)])
+            assert got == pages, f"slot {slot} table/page-list mismatch"
+            assert not self.table[slot, len(pages):].any(), (
+                f"slot {slot} table maps pages beyond its allocation")
+
+
+# ---------------------------------------------------------------------------
+# Paged device-cache construction
+# ---------------------------------------------------------------------------
+
+def paged_cache_spec(model, capacity: int, cache_len: int,
+                     dtype=jnp.float32) -> Tuple[Dict[str, Any], Tuple[str, ...]]:
+    """Abstract contiguous cache structure + the keys that page.
+
+    Ring caches (``kl``/``vl`` circular buffers) cannot page: their
+    writes already overwrite live history in place and the slot formula
+    assumes a windowed contiguous buffer — callers must refuse loudly.
+    """
+    spec = jax.eval_shape(lambda: model.init_cache(capacity, cache_len,
+                                                   dtype=dtype))
+    if "kl" in spec:
+        raise ValueError(
+            "ring-cache (local:global) archs keep windowed per-slot "
+            "buffers; the paged block-table cache does not apply — use "
+            'cache="contiguous"')
+    return spec, tuple(k for k in PAGED_KEYS if k in spec)
+
+
+def make_paged_cache(model, capacity: int, cache_len: int, *,
+                     num_pages: int, page_size: int, dtype=jnp.float32
+                     ) -> Tuple[Dict[str, jax.Array], Tuple[str, ...], int]:
+    """Build the paged device cache for ``model``.
+
+    Returns (cache, paged_keys, n_logical).  ``k``/``v`` leaves become
+    pools ``(layers, num_pages + 1, page_size, heads, head_dim)`` (+1:
+    sentinel page 0); every other leaf keeps its contiguous per-slot
+    shape; a zeroed block table ``bt`` (capacity, n_logical) is added.
+    Families without positional KV (pure SSM) return an unchanged
+    contiguous cache and an empty ``paged_keys`` — paging is a no-op
+    for constant-size state by design.
+    """
+    spec, paged_keys = paged_cache_spec(model, capacity, cache_len,
+                                        dtype=dtype)
+    if not paged_keys:
+        return (model.init_cache(capacity, cache_len, dtype=dtype),
+                paged_keys, 0)
+    n_logical = pages_for(cache_len, page_size)
+    cache: Dict[str, jax.Array] = {}
+    for key, leaf in spec.items():
+        if key in paged_keys:
+            # (L, B, max_len, h, d) -> (L, pages, page_size, h, d)
+            pool_shape = ((leaf.shape[0], num_pages + 1, page_size)
+                          + leaf.shape[3:])
+            cache[key] = jnp.zeros(pool_shape, leaf.dtype)
+        else:
+            cache[key] = jnp.zeros(leaf.shape, leaf.dtype)
+    cache["bt"] = jnp.zeros((capacity, n_logical), jnp.int32)
+    return cache, paged_keys, n_logical
+
+
+# ---------------------------------------------------------------------------
+# Contiguous <-> paged conversion (tests, cache migration)
+# ---------------------------------------------------------------------------
+
+def paginate_cache(cache: Dict[str, jax.Array], page_size: int,
+                   num_pages: Optional[int] = None) -> Dict[str, jax.Array]:
+    """Contiguous cache -> equivalent paged cache (sequential tables).
+
+    Row ``r`` of a (L, B, max_len, h, d) leaf lands on physical pages
+    ``r*n_logical + 1 .. (r+1)*n_logical`` in logical order, so
+    ``logical_view(paginate_cache(c)) == c`` up to page-pad columns.
+    Mainly a test/migration helper — the scheduler builds pools
+    directly and scatters prompt pages at admission.
+    """
+    keys = tuple(k for k in PAGED_KEYS if k in cache)
+    if not keys:
+        return dict(cache)
+    b, max_len = cache[keys[0]].shape[1], cache[keys[0]].shape[2]
+    n_logical = pages_for(max_len, page_size)
+    if num_pages is None:
+        num_pages = b * n_logical
+    if num_pages < b * n_logical:
+        raise PoolExhausted(
+            f"{b} rows of {n_logical} pages exceed num_pages={num_pages}")
+    out = dict(cache)
+    bt = 1 + (np.arange(b)[:, None] * n_logical
+              + np.arange(n_logical)[None, :]).astype(np.int32)
+    for key in keys:
+        leaf = cache[key]
+        pad = n_logical * page_size - max_len
+        leafp = jnp.pad(leaf, ((0, 0), (0, 0), (0, pad)) + ((0, 0),)
+                        * (leaf.ndim - 3))
+        pages = leafp.reshape(
+            (leaf.shape[0], b * n_logical, page_size) + leaf.shape[3:])
+        sentinel = jnp.zeros_like(pages[:, :1])
+        pool = jnp.concatenate([sentinel, pages], axis=1)
+        if num_pages > b * n_logical:
+            extra = jnp.zeros(
+                (pool.shape[0], num_pages - b * n_logical) + pool.shape[2:],
+                pool.dtype)
+            pool = jnp.concatenate([pool, extra], axis=1)
+        out[key] = pool
+    out["bt"] = jnp.asarray(bt)
+    return out
+
+
+def logical_view(cache: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Gather a paged cache back into contiguous per-slot layout
+    (length ``n_logical * page_size``; entries past each row's write
+    pointer are junk exactly as in contiguous mode)."""
+    if "bt" not in cache:
+        return dict(cache)
+    bt = cache["bt"]
+    out = {}
+    for key, leaf in cache.items():
+        if key == "bt":
+            continue
+        if key in PAGED_KEYS:
+            g = jnp.take(leaf, bt, axis=1)   # (L, B, n_logical, P, h, d)
+            out[key] = g.reshape((leaf.shape[0], bt.shape[0],
+                                  bt.shape[1] * leaf.shape[2])
+                                 + leaf.shape[3:])
+        else:
+            out[key] = leaf
+    return out

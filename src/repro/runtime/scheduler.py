@@ -73,6 +73,27 @@ families use buckets to bound prefill compiles.  Speculative slots
 serve every family: SSM and ring caches verify through the per-step
 checkpoint machinery (ring needs ``spec_k + 1 <= window`` so each
 verify step overwrites a distinct slot — checked loudly).
+
+**Paged KV cache** (``cache="paged"``): instead of one contiguous
+``cache_len`` row per slot, the k/v leaves become a fixed pool of
+``page_size``-token blocks shared by all slots, with a per-slot block
+table (``runtime/paging.py``).  Admission scatters the prompt's pages
+into the pool, chunk boundaries append pages on demand for the next
+chunk's writes, and finalize returns every page — so mixed-length
+requests share HBM and concurrency at equal cache memory rises (the
+serving benchmark's capacity sweep).  Reservation accounting admits a
+request only when its WORST-CASE page count fits alongside live
+reservations, so pool exhaustion refuses admission (``no_pages``
+deferral, or :class:`~repro.runtime.paging.PoolExhausted` when nothing
+in flight can free pages) and never silently overwrites a live page.
+Output is bit-identical to contiguous mode — the attention math runs
+on a position-ordered gather of the slot's pages, same values at a
+different addressing.  Constant-size-state families (mamba2) have
+nothing to page and run unchanged; ring-cache archs keep their
+windowed slots and refuse ``cache="paged"`` loudly.  Deferred
+admissions report WHY (``no_slot`` vs ``no_pages``) in
+``SchedulerRun.deferrals``; a request whose prompt bucket can never
+fit raises a ``bucket mismatch`` error instead of retrying forever.
 """
 from __future__ import annotations
 
@@ -85,10 +106,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.paging import (PageAllocator, PoolExhausted,
+                                  make_paged_cache, pages_for)
+
 Pytree = Any
 
 __all__ = ["Request", "RequestResult", "SchedulerRun", "ServingScheduler",
-           "ADMIT_BATCH"]
+           "ADMIT_BATCH", "PoolExhausted"]
 
 # Grouped-admission batch sizes, largest first.  Also the cap on the
 # jit-cache key space: one compiled admit fn per (prompt bucket, k).
@@ -141,6 +165,12 @@ class SchedulerRun:
     occupancy: List[Tuple[float, int]]   # (t, active slots) per chunk
     accepted: int = 0             # draft tokens accepted (spec slots only)
     drafted: int = 0              # draft tokens proposed (spec slots only)
+    # WHY arrived requests were not admitted at a chunk boundary,
+    # counted per (boundary, blocked queue head): "no_slot" (all slots
+    # busy) or "no_pages" (paged pool cannot cover the request's
+    # worst-case reservation).  A request that can NEVER fit raises a
+    # "bucket mismatch" ValueError instead of deferring forever.
+    deferrals: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def tokens_per_sec(self) -> float:
@@ -186,9 +216,15 @@ class ServingScheduler:
                  admission: str = "continuous",
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0,
-                 draft_params: Optional[Pytree] = None, spec_k: int = 4):
+                 draft_params: Optional[Pytree] = None, spec_k: int = 4,
+                 cache: str = "contiguous", page_size: int = 16,
+                 num_pages: Optional[int] = None):
         if admission not in ("continuous", "drain"):
             raise ValueError("admission: 'continuous' or 'drain'")
+        if cache not in ("contiguous", "paged"):
+            raise ValueError("cache: 'contiguous' or 'paged'")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
         family = getattr(getattr(model, "cfg", None), "family", "dense")
         if family == "encdec":
             raise ValueError("scheduler serves token-prompt families; "
@@ -206,6 +242,13 @@ class ServingScheduler:
             # plant pad k/v at slots the decode position formula treats
             # as real past positions — exact-length prefills only
             prompt_buckets = None
+            if cache == "paged":
+                raise ValueError(
+                    "ring-cache (local:global) archs keep windowed "
+                    'per-slot buffers and refuse cache="paged": their '
+                    "circular writes already overwrite history in "
+                    "place, so a block table has nothing to save — "
+                    "use the contiguous cache")
         # ---- sampling config: honor it or refuse, never silently greedy
         if top_k and temperature == 0.0:
             raise ValueError(
@@ -228,6 +271,9 @@ class ServingScheduler:
         # slots are free.  Same compute machinery either way, so the
         # serving benchmark's comparison isolates the admission policy.
         self.admission = admission
+        self.cache_mode = cache
+        self.page_size = int(page_size)
+        self.num_pages = num_pages          # resolved at _ensure_state
         self.cache_dtype = cache_dtype
         self.temperature = float(temperature)
         self.top_k = int(top_k)
@@ -265,6 +311,13 @@ class ServingScheduler:
         self._admit_fns: Dict[Tuple[int, int], Any] = {}
         self._slot_axes = None
         self._dev: Optional[Dict[str, Any]] = None
+        # paged-mode state (populated by _ensure_state when the family
+        # has positional KV leaves to page)
+        self._paged_kv = False
+        self._paged_keys: Tuple[str, ...] = ()
+        self._n_logical = 0
+        self._alloc: Optional[PageAllocator] = None
+        self._dalloc: Optional[PageAllocator] = None
 
     # ------------------------------------------------------------- queue
     def submit(self, request: Request) -> None:
@@ -324,8 +377,37 @@ class ServingScheduler:
             return
         if self._cache_len is None:
             self._cache_len = self._required_cache_len()
-        cache = self.model.init_cache(self.capacity, self._cache_len,
-                                      dtype=self.cache_dtype)
+        if self.cache_mode == "paged":
+            # round up to a whole number of pages: the paged logical
+            # view is then exactly cache_len long, so attention reduces
+            # over the same shapes as a contiguous cache of the same
+            # length — bit-identity, not just fp-closeness
+            self._cache_len = (pages_for(self._cache_len, self.page_size)
+                               * self.page_size)
+            n_logical = pages_for(self._cache_len, self.page_size)
+            if self.num_pages is None:
+                # default pool: same token count as the contiguous
+                # cache would hold (capacity full-length rows)
+                self.num_pages = self.capacity * n_logical
+            cache, paged_keys, n_logical = make_paged_cache(
+                self.model, self.capacity, self._cache_len,
+                num_pages=int(self.num_pages), page_size=self.page_size,
+                dtype=self.cache_dtype)
+            self._paged_keys = paged_keys
+            self._paged_kv = bool(paged_keys)
+            if self._paged_kv:
+                self._n_logical = n_logical
+                self._alloc = PageAllocator(int(self.num_pages),
+                                            self.page_size, self.capacity,
+                                            n_logical)
+                if self.speculative:
+                    # the draft cache pages through its own pool/table
+                    self._dalloc = PageAllocator(int(self.num_pages),
+                                                 self.page_size,
+                                                 self.capacity, n_logical)
+        else:
+            cache = self.model.init_cache(self.capacity, self._cache_len,
+                                          dtype=self.cache_dtype)
         # ring caches change *structure* with max_len: scratch prefill
         # caches must then match the big cache's length exactly
         self._ring = isinstance(cache, dict) and "kl" in cache
@@ -347,8 +429,14 @@ class ServingScheduler:
             "keys": jnp.zeros((b, 2), jnp.uint32),    # per-slot PRNG
         }
         if self.speculative:
-            dev["dcache"] = self.model.init_cache(
-                self.capacity, self._cache_len, dtype=self.cache_dtype)
+            if self._paged_kv:
+                dev["dcache"], _, _ = make_paged_cache(
+                    self.model, self.capacity, self._cache_len,
+                    num_pages=int(self.num_pages),
+                    page_size=self.page_size, dtype=self.cache_dtype)
+            else:
+                dev["dcache"] = self.model.init_cache(
+                    self.capacity, self._cache_len, dtype=self.cache_dtype)
             dev["spec"] = jnp.zeros((b,), jnp.bool_)  # slot runs draft?
             dev["acc"] = jnp.zeros((b,), jnp.int32)   # accepted drafts
             dev["drafted"] = jnp.zeros((b,), jnp.int32)
@@ -541,7 +629,12 @@ class ServingScheduler:
 
     def _build_admit_fn(self, bucket: int, kb: int):
         """Batch-``kb`` grouped admission: ONE prefill dispatch for
-        ``kb`` same-bucket prompts, rows scattered into their slots."""
+        ``kb`` same-bucket prompts, rows scattered into their slots.
+
+        Paged mode scatters each row's prefilled k/v into its allocated
+        physical pages (one ``pool.at[:, pages]`` scatter per leaf)
+        instead of a contiguous slot row; every other leaf (pos, SSM
+        state) keeps the per-slot row scatter."""
         model = self.model
         eos_id = self.eos_id
         # scratch caches only need the prompt bucket's length: the
@@ -554,6 +647,10 @@ class ServingScheduler:
         axes = self._slot_axes
         temperature = self.temperature
         speculative = self.speculative
+        paged = self._paged_kv
+        paged_keys = self._paged_keys
+        P = self.page_size
+        npg = pages_for(bucket, P) if paged else 0
 
         def scatter_rows(big, sm, ax, slots):
             for i in range(kb):
@@ -563,6 +660,25 @@ class ServingScheduler:
                 big = jax.lax.dynamic_update_slice(
                     big, row.astype(big.dtype), tuple(starts))
             return big
+
+        def scatter_kv_pages(pool, sm, pages):
+            # sm (L, kb, bucket, h, d) -> page-pad, split into pages,
+            # land each row's npg prompt pages at its physical ids
+            pad = npg * P - bucket
+            if pad:
+                sm = jnp.pad(sm, ((0, 0), (0, 0), (0, pad))
+                             + ((0, 0),) * (sm.ndim - 3))
+            sm = sm.reshape(sm.shape[:2] + (npg, P) + sm.shape[3:])
+            return pool.at[:, pages].set(sm.astype(pool.dtype))
+
+        def scatter_cache(big, small, slots, pages):
+            out = dict(big)            # keeps "bt" (host-mirrored)
+            for key, sm in small.items():
+                if paged and key in paged_keys:
+                    out[key] = scatter_kv_pages(out[key], sm, pages)
+                else:
+                    out[key] = scatter_rows(out[key], sm, axes[key], slots)
+            return out
 
         def scratch_prefill(params, prompts, plen):
             """Batch-kb prefill into a scratch cache: padded tails are
@@ -602,21 +718,19 @@ class ServingScheduler:
 
         if not speculative:
             def run(params, prompts, plen, max_new, slots, admit_keys,
-                    cache, tok, done, n_gen, budget, keys):
+                    pages, cache, tok, done, n_gen, budget, keys):
                 small, first, keys = prefill_first(
                     params, prompts, plen, admit_keys, keys, slots)
-                cache = jax.tree.map(
-                    lambda big, sm, ax: scatter_rows(big, sm, ax, slots),
-                    cache, small, axes)
+                cache = scatter_cache(cache, small, slots, pages)
                 tok, done, n_gen, budget = set_slot_state(
                     first, max_new, slots, tok, done, n_gen, budget)
                 return cache, tok, done, n_gen, budget, keys, first
 
-            return jax.jit(run, donate_argnums=(6, 7, 8, 9, 10, 11))
+            return jax.jit(run, donate_argnums=(7, 8, 9, 10, 11, 12))
 
         def run(params, dparams, prompts, plen, max_new, slots, spec_new,
-                admit_keys, slot_keys, cache, dcache, tok, done, n_gen,
-                budget, spec, acc, drafted, keys, rounds):
+                admit_keys, slot_keys, pages, dpages, cache, dcache, tok,
+                done, n_gen, budget, spec, acc, drafted, keys, rounds):
             small, lg = scratch_prefill(params, prompts, plen)
             if temperature > 0.0:
                 # first token from the per-request key's prefill half —
@@ -627,14 +741,10 @@ class ServingScheduler:
                                     self.top_k)
             else:
                 first = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-            cache = jax.tree.map(
-                lambda big, sm, ax: scatter_rows(big, sm, ax, slots),
-                cache, small, axes)
+            cache = scatter_cache(cache, small, slots, pages)
             # draft shares the prompt: its own prefill, its own cache
             dsmall, _ = scratch_prefill(dparams, prompts, plen)
-            dcache = jax.tree.map(
-                lambda big, sm, ax: scatter_rows(big, sm, ax, slots),
-                dcache, dsmall, axes)
+            dcache = scatter_cache(dcache, dsmall, slots, dpages)
             spec = spec.at[slots].set(spec_new)
             acc = acc.at[slots].set(0)
             drafted = drafted.at[slots].set(0)
@@ -645,26 +755,75 @@ class ServingScheduler:
             return (cache, dcache, tok, done, n_gen, budget, spec, acc,
                     drafted, keys, rounds, first)
 
-        return jax.jit(run, donate_argnums=tuple(range(9, 20)))
+        return jax.jit(run, donate_argnums=tuple(range(11, 22)))
 
     # ---------------------------------------------------------- admission
     def _check_fits(self, req: Request, bucket: int) -> None:
+        """Validate the queue head BEFORE popping it (and before the
+        caller pops a free slot or pages): a request that can NEVER be
+        served raises with the queue and both allocators untouched —
+        deferring it would retry forever."""
         if bucket + req.max_new + self._spec_margin() + 1 > self._cache_len:
             # out-of-bounds cache writes would be silently dropped by
             # the scatter; refuse instead
             raise ValueError(
-                f"request {req.request_id}: prompt bucket {bucket} + "
-                f"max_new {req.max_new} (+ spec margin "
+                f"request {req.request_id}: bucket mismatch — prompt "
+                f"bucket {bucket} + max_new {req.max_new} (+ spec margin "
                 f"{self._spec_margin()}) exceeds cache_len "
                 f"{self._cache_len}")
+        if self._paged_kv:
+            need = self._alloc.pages_for(self._reserve_tokens(req, bucket))
+            if need > int(self.num_pages):
+                raise ValueError(
+                    f"request {req.request_id}: worst case needs {need} "
+                    f"pages but the pool holds {self.num_pages} — it can "
+                    "never be admitted (raise num_pages or page_size)")
 
-    def _pop_admissible(self) -> Request:
-        """Validate the queue head BEFORE popping it (and before the
-        caller pops a free slot): an oversized request then raises with
-        the queue and the slot allocator untouched."""
-        req = self._queue[0]
-        self._check_fits(req, self._bucket_for(len(req.prompt)))
-        return self._queue.popleft()
+    def _reserve_tokens(self, req: Request, bucket: int) -> int:
+        """Worst-case cache entries the request can ever occupy: the
+        padded prompt, plus every budgeted token, plus the speculative
+        overrun (verify writes k entries past the final accepted
+        position before rolling back)."""
+        return max(bucket, len(req.prompt) + req.max_new
+                   + self._spec_margin())
+
+    def _pages_available(self, req: Request, bucket: int) -> bool:
+        reserve = self._reserve_tokens(req, bucket)
+        if not self._alloc.can_admit(reserve):
+            return False
+        return self._dalloc is None or self._dalloc.can_admit(reserve)
+
+    def _reserve_pages(self, req: Request, bucket: int, slot: int) -> None:
+        """Allocate the prompt's pages now, reserve the worst case —
+        chunk-boundary extends then never exceed the reservation, so an
+        admitted request can always run to completion."""
+        reserve = self._reserve_tokens(req, bucket)
+        self._alloc.admit(slot, bucket, reserve)
+        if self._dalloc is not None:
+            self._dalloc.admit(slot, bucket, reserve)
+
+    def _extend_pages(self) -> None:
+        """Map pages for every write the NEXT chunk dispatch can make:
+        plain decode writes ``chunk`` entries past each slot's pos;
+        a speculative round writes up to ``spec_k + 1`` per iteration
+        plus the ``spec_k`` verify overrun.  Bounded by the slot's
+        budget (== its admission reservation), so this never raises
+        for an admitted request."""
+        for slot, st in enumerate(self._slots):
+            if st.request is None:
+                continue
+            plen = len(st.request.prompt)
+            pos = plen + st.count - 1          # device write pointer
+            if self.speculative:
+                span = self.chunk * (self.spec_k + 1)
+                lim = plen + st.request.max_new + self.spec_k
+            else:
+                span = self.chunk
+                lim = plen + st.request.max_new
+            need = min(pos + span, max(lim, self._bucket_for(plen)))
+            self._alloc.extend(slot, need)
+            if self._dalloc is not None:
+                self._dalloc.extend(slot, need)
 
     def _admit_many(self, admissions: List[Tuple[Request, int]],
                     now: float) -> None:
@@ -701,6 +860,19 @@ class ServingScheduler:
             fn = self._admit_fns[(bucket, kb)] = self._build_admit_fn(
                 bucket, kb)
         d = self._dev
+        if self._paged_kv:
+            # physical page ids for each row's prompt pages, allocated
+            # when the request was popped (_reserve_pages)
+            npg = pages_for(bucket, self.page_size)
+            pages = jnp.asarray(np.stack(
+                [self._alloc.table[slot, :npg] for _, slot in pairs]))
+            dpages = (jnp.asarray(np.stack(
+                [self._dalloc.table[slot, :npg] for _, slot in pairs]))
+                if self._dalloc is not None else jnp.zeros((kb, 1),
+                                                           jnp.int32))
+        else:
+            pages = jnp.zeros((kb, 1), jnp.int32)
+            dpages = jnp.zeros((kb, 1), jnp.int32)
         if self.speculative:
             if self.temperature > 0.0:
                 # per-request stream keys: fold_in(scheduler key,
@@ -724,9 +896,9 @@ class ServingScheduler:
                 self.params, self.draft_params, jnp.asarray(padded),
                 jnp.asarray(plens), jnp.asarray(max_news),
                 jnp.asarray(slots), jnp.asarray(spec_new), admit_keys,
-                slot_keys, d["cache"], d["dcache"], d["tok"], d["done"],
-                d["n_gen"], d["budget"], d["spec"], d["acc"],
-                d["drafted"], d["keys"], d["rounds"])
+                slot_keys, pages, dpages, d["cache"], d["dcache"],
+                d["tok"], d["done"], d["n_gen"], d["budget"], d["spec"],
+                d["acc"], d["drafted"], d["keys"], d["rounds"])
             d.update(cache=cache, dcache=dcache, tok=tok, done=done,
                      n_gen=n_gen, budget=budget, spec=spec, acc=acc,
                      drafted=drafted, keys=keys2, rounds=rounds)
@@ -743,8 +915,8 @@ class ServingScheduler:
             cache, tok, done, n_gen, budget, keys2, first = fn(
                 self.params, jnp.asarray(padded), jnp.asarray(plens),
                 jnp.asarray(max_news), jnp.asarray(slots), admit_keys,
-                d["cache"], d["tok"], d["done"], d["n_gen"], d["budget"],
-                d["keys"])
+                pages, d["cache"], d["tok"], d["done"], d["n_gen"],
+                d["budget"], d["keys"])
             d.update(cache=cache, tok=tok, done=done, n_gen=n_gen,
                      budget=budget, keys=keys2)
         for i, (req, slot) in enumerate(pairs):
@@ -781,6 +953,12 @@ class ServingScheduler:
         st.request = None
         st.tokens = []
         st.count = 0
+        if self._paged_kv:
+            # free-on-eos: every page (and the reservation) returns to
+            # the pool the moment the slot finalizes
+            self._alloc.free(slot)
+            if self._dalloc is not None:
+                self._dalloc.free(slot)
         self._free.append(slot)
 
     # --------------------------------------------------------------- run
@@ -805,11 +983,32 @@ class ServingScheduler:
 
         results: List[RequestResult] = []
         occupancy: List[Tuple[float, int]] = []
+        deferrals: Dict[str, int] = {}
         chunks = 0
         t0 = time.perf_counter()
 
         def now() -> float:
             return time.perf_counter() - t0
+
+        def try_pop(blocked_box: List[Optional[str]]) -> bool:
+            """Pop the queue head into a slot (plus its pages in paged
+            mode) if everything it needs is available; otherwise record
+            WHY it was deferred and leave all allocators untouched."""
+            if not self._free:
+                blocked_box[0] = "no_slot"
+                return False
+            req = self._queue[0]
+            bucket = self._bucket_for(len(req.prompt))
+            self._check_fits(req, bucket)     # never-fits raises here
+            if self._paged_kv and not self._pages_available(req, bucket):
+                blocked_box[0] = "no_pages"
+                return False
+            self._queue.popleft()
+            slot = self._free.pop()
+            if self._paged_kv:
+                self._reserve_pages(req, bucket, slot)
+            pending.append((req, slot))
+            return True
 
         while self._queue or len(self._free) < self.capacity:
             # admission: continuous refills freed slots every chunk
@@ -819,22 +1018,33 @@ class ServingScheduler:
             # Either way the admissible set is grouped into batch-k
             # prefill dispatches (_admit_many).
             pending: List[Tuple[Request, int]] = []
+            blocked: List[Optional[str]] = [None]
             if self.admission == "continuous":
-                while (self._free and self._queue
+                while (self._queue
                        and self._queue[0].arrival_time <= now()):
-                    pending.append((self._pop_admissible(),
-                                    self._free.pop()))
+                    if not try_pop(blocked):
+                        break
             elif len(self._free) == self.capacity and self._queue:
                 need = min(self.capacity, len(self._queue))
                 nth_arrival = list(self._queue)[need - 1].arrival_time
                 if nth_arrival <= now():
                     for _ in range(need):
-                        pending.append((self._pop_admissible(),
-                                        self._free.pop()))
+                        if not try_pop(blocked):
+                            break
+            if blocked[0] is not None:
+                deferrals[blocked[0]] = deferrals.get(blocked[0], 0) + 1
             if pending:
                 self._admit_many(pending, now())
             active = self.capacity - len(self._free)
             if active == 0:
+                if blocked[0] == "no_pages":
+                    # nothing in flight can ever free a page: refusing
+                    # loudly beats spinning (reservation accounting
+                    # makes this unreachable unless state is corrupt —
+                    # _check_fits already rejects never-fits requests)
+                    raise PoolExhausted(
+                        "page pool exhausted with zero active slots — "
+                        "cannot make progress")
                 # idle: sleep up to the next admissible arrival
                 if self.admission == "continuous":
                     target = self._queue[0].arrival_time
@@ -845,6 +1055,14 @@ class ServingScheduler:
                 if wait > 0:
                     time.sleep(min(wait, 0.01))
                 continue
+            if self._paged_kv:
+                # map pages for every write the next dispatch can make,
+                # then mirror the block tables to the device
+                self._extend_pages()
+                d0 = self._dev
+                d0["cache"]["bt"] = jnp.asarray(self._alloc.table)
+                if self.speculative:
+                    d0["dcache"]["bt"] = jnp.asarray(self._dalloc.table)
             occupancy.append((now(), active))
             d = self._dev
             acc_h = drafted_h = None
@@ -899,4 +1117,5 @@ class ServingScheduler:
             accepted=sum(r.accepted for r in results
                          if r.accepted is not None),
             drafted=sum(r.drafted for r in results
-                        if r.drafted is not None))
+                        if r.drafted is not None),
+            deferrals=deferrals)

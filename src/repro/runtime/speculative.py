@@ -28,6 +28,15 @@ ring slots), and ``rollback_verify`` / ``restore_decode`` select or
 restore the accepted prefix.  The same hooks roll the DRAFT cache back
 (``ckpt_decode`` snapshots collected in the draft scan).
 
+The contract is ADDRESSING-AGNOSTIC: the scheduler's paged slots
+(``cache="paged"``, ``runtime/paging.py``) page both the target and
+the draft KV through block tables that ride inside the cache pytree,
+and every hook passes them through untouched — verify's k+1 writes may
+span a page boundary, but rollback stays a ``pos`` reset because pages
+are only freed at finalize, never mid-flight, so rejected-suffix junk
+is causally masked exactly as in a contiguous cache
+(tests/test_rollback.py's paged property tests pin this).
+
 Sampled streams are PER-ROW keyed: row i of a generate call draws from
 ``fold_in(key_r, i)`` folded with its round counter, and the per-round
 draft/accept/correction draws flow through the shared helpers below

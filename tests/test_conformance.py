@@ -2,10 +2,17 @@
 
 {transformer, encdec, mamba2, hybrid} x {dense, PIFA, MPIFA_NS} x
 {engine scan, scheduler continuous, speculative engine, speculative
-scheduler slots}: greedy token BIT-identity everywhere the combo is
-supported, and a LOUD refusal (never a silent skip or fallback) where
-it is not — the scheduler serves token-prompt families, so
-encdec x scheduler raises.
+scheduler slots, PAGED scheduler}: greedy token BIT-identity everywhere
+the combo is supported, and a LOUD refusal (never a silent skip or
+fallback) where it is not — the scheduler serves token-prompt families,
+so encdec x scheduler raises, and ring-cache archs (gemma3) refuse
+``cache="paged"`` (their circular writes overwrite history in place).
+
+The ``paged_scheduler`` column runs the SAME request mix through both
+cache modes at one page-aligned ``cache_len`` and asserts the paged
+run equals the contiguous run request-for-request (token arrays, not
+just the engine reference) — the block-table refactor must be
+invisible in the output.
 
 The reference stream for every (family, compression) cell is the
 single-dispatch engine's batch-1 greedy generation; the engine cell
@@ -28,11 +35,14 @@ from repro.runtime.scheduler import Request, ServingScheduler
 
 FAMILIES = ("transformer", "encdec", "mamba2", "hybrid")
 COMPRESSIONS = ("dense", "pifa", "ns")
-RUNTIMES = ("engine", "scheduler", "spec_engine", "spec_scheduler")
+RUNTIMES = ("engine", "scheduler", "spec_engine", "spec_scheduler",
+            "paged_scheduler")
 # combos that must REFUSE loudly (asserted below, never skipped):
 # enc-dec prefill needs frames, which the token-queue scheduler cannot
-# carry — both scheduler runtimes raise at construction.
-UNSUPPORTED = {("encdec", "scheduler"), ("encdec", "spec_scheduler")}
+# carry — all scheduler runtimes raise at construction.
+UNSUPPORTED = {("encdec", "scheduler"), ("encdec", "spec_scheduler"),
+               ("encdec", "paged_scheduler")}
+PAGE_SIZE = 4
 
 ARCHS = {"encdec": "whisper_medium", "mamba2": "mamba2_2p7b",
          "hybrid": "zamba2_1p2b"}
@@ -159,7 +169,7 @@ def _legacy_tokens(zoo, family, comp, ln, budget):
     return np.asarray(jnp.concatenate(out, axis=1)[0])
 
 
-def _run_scheduler(zoo, family, comp, speculative):
+def _run_scheduler(zoo, family, comp, speculative, **extra):
     cfg, model = zoo.base(family)
     params = zoo.params_for(family, comp)
     reqs = [Request(request_id=i,
@@ -169,6 +179,7 @@ def _run_scheduler(zoo, family, comp, speculative):
     kw = {}
     if speculative:
         kw = dict(draft_params=zoo.draft_for(family), spec_k=SPEC_K)
+    kw.update(extra)
     sched = ServingScheduler(model, params, capacity=2, chunk=2,
                              prompt_buckets=(16,), **kw)
     return sched.run(reqs)
@@ -181,9 +192,10 @@ def test_greedy_conformance(zoo, family, comp, runtime):
     """Every supported (family, compression, runtime) cell emits the
     reference greedy stream bit-for-bit; unsupported cells raise."""
     if (family, runtime) in UNSUPPORTED:
+        kw = {"cache": "paged"} if runtime == "paged_scheduler" else {}
         with pytest.raises(ValueError, match="frames"):
             _run_scheduler(zoo, family, comp,
-                           speculative=runtime == "spec_scheduler")
+                           speculative=runtime == "spec_scheduler", **kw)
         return
 
     if runtime == "engine":
@@ -205,10 +217,28 @@ def test_greedy_conformance(zoo, family, comp, runtime):
         assert res.rounds >= 1
         return
 
-    # scheduler / spec_scheduler: every request bit-identical to the
-    # batch-1 engine reference
-    run = _run_scheduler(zoo, family, comp,
-                         speculative=runtime == "spec_scheduler")
+    if runtime == "paged_scheduler":
+        # the paged cell runs BOTH cache modes at one page-aligned
+        # cache_len: the block-table addressing must be invisible —
+        # request-for-request token equality against the contiguous
+        # scheduler cell, plus the usual engine-reference identity
+        cache_len = 16 + max(BUDGETS) + SPEC_K + PAGE_SIZE
+        cache_len -= cache_len % PAGE_SIZE
+        run_c = _run_scheduler(zoo, family, comp, speculative=False,
+                               cache_len=cache_len)
+        run_p = _run_scheduler(zoo, family, comp, speculative=False,
+                               cache="paged", page_size=PAGE_SIZE,
+                               cache_len=cache_len)
+        contig = {r.request_id: r.tokens for r in run_c.results}
+        for r in run_p.results:
+            assert np.array_equal(r.tokens, contig[r.request_id]), (
+                f"{family}/{comp}: paged diverged from contiguous")
+        run = run_p
+    else:
+        # scheduler / spec_scheduler: every request bit-identical to
+        # the batch-1 engine reference
+        run = _run_scheduler(zoo, family, comp,
+                             speculative=runtime == "spec_scheduler")
     assert sorted(r.request_id for r in run.results) == [0, 1]
     for r in run.results:
         ln, budget = LENS[r.request_id], BUDGETS[r.request_id]
@@ -220,6 +250,17 @@ def test_greedy_conformance(zoo, family, comp, runtime):
             "diverged from the engine reference")
     if runtime == "spec_scheduler":
         assert run.drafted > 0
+
+
+def test_paged_refuses_ring_arch():
+    """The paged column's ring cell: gemma3-style local:global archs
+    keep their windowed circular buffers and refuse ``cache="paged"``
+    loudly (never a silent contiguous fallback)."""
+    cfg = get_smoke_config("gemma3_12b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="ring"):
+        ServingScheduler(model, params, cache="paged")
 
 
 def test_matrix_covers_issue_floor():

@@ -1,0 +1,367 @@
+"""Paged (block-table) KV cache: allocator property tests + scheduler
+bit-identity.
+
+The allocator half property-tests ``runtime/paging.PageAllocator``
+against arbitrary admit/extend/free sequences (hypothesis when
+available, the repo's deterministic parametrized fallback otherwise):
+
+  * a live page is never aliased to two slots (and never the sentinel),
+  * pages never leak — once every slot frees, the whole pool is free,
+  * exhaustion RAISES (``PoolExhausted``) instead of evicting.
+
+The scheduler half pins the serving contract: ``cache="paged"`` output
+is bit-identical to ``cache="contiguous"`` AND to the single-request
+engine — greedy and sampled, plain and speculative slots — while the
+pool drains back to full after every run; undersized pools defer
+admission with a ``no_pages`` reason (never a silent overwrite) and
+ring archs refuse paged mode loudly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models.model import build_model
+from repro.runtime.engine import GenerationEngine
+from repro.runtime.paging import (PageAllocator, PoolExhausted,
+                                  logical_view, pages_for, paginate_cache)
+from repro.runtime.scheduler import Request, ServingScheduler
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # clean container: parametrized fallback below
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------------- allocator
+
+def _run_ops(num_pages, page_size, capacity, n_logical, ops):
+    """Drive an allocator through an op sequence, checking invariants
+    after every step against a shadow model of slot -> page count."""
+    alloc = PageAllocator(num_pages, page_size, capacity, n_logical)
+    live = {}                      # slot -> token high-water
+    for kind, slot, tokens in ops:
+        slot = slot % capacity
+        tokens = 1 + tokens % (n_logical * page_size)
+        if kind == 0 and slot not in live:      # admit
+            try:
+                alloc.admit(slot, tokens)
+                live[slot] = tokens
+            except PoolExhausted:
+                # refusal must leave the slot unallocated
+                assert alloc.slot_pages(slot) == ()
+        elif kind == 1 and slot in live:        # extend
+            try:
+                alloc.extend(slot, tokens)
+                live[slot] = max(live[slot], tokens)
+            except PoolExhausted:
+                pass                            # kept what it had
+        elif kind == 2 and slot in live:        # free
+            alloc.free(slot)
+            del live[slot]
+        alloc.check_invariants()
+        # allocation tracks the shadow model exactly
+        for s, hw in live.items():
+            assert len(alloc.slot_pages(s)) == pages_for(hw, page_size)
+    for slot in list(live):
+        alloc.free(slot)
+    alloc.check_invariants()
+    assert alloc.free_pages == num_pages, "pages leaked"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(num_pages=st.integers(1, 24), page_size=st.integers(1, 8),
+           capacity=st.integers(1, 6), n_logical=st.integers(1, 8),
+           ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 63),
+                                  st.integers(0, 255)), max_size=40))
+    def test_allocator_invariants_property(num_pages, page_size, capacity,
+                                           n_logical, ops):
+        _run_ops(num_pages, page_size, capacity, n_logical, ops)
+
+
+# Deterministic fallback sweep (runs regardless): seeded random op
+# tapes over small/tight pools, covering refusal and churn edges.
+@pytest.mark.parametrize("seed,num_pages,page_size,capacity,n_logical",
+                         [(0, 8, 2, 3, 4), (1, 3, 1, 4, 3), (2, 24, 4, 6, 6),
+                          (3, 1, 8, 2, 1), (4, 12, 3, 5, 4)])
+def test_allocator_invariants(seed, num_pages, page_size, capacity,
+                              n_logical):
+    rng = np.random.default_rng(seed)
+    ops = [(int(rng.integers(0, 3)), int(rng.integers(0, 64)),
+            int(rng.integers(0, 256))) for _ in range(60)]
+    _run_ops(num_pages, page_size, capacity, n_logical, ops)
+
+
+def test_allocator_exhaustion_raises_not_evicts():
+    alloc = PageAllocator(num_pages=4, page_size=2, capacity=3, n_logical=4)
+    alloc.admit(0, 6)                       # 3 pages
+    with pytest.raises(PoolExhausted):
+        alloc.admit(1, 4)                   # needs 2, only 1 free
+    assert alloc.slot_pages(0) == (1, 2, 3)  # nothing evicted
+    assert alloc.slot_pages(1) == ()
+    alloc.admit(1, 2)                       # 1 page fits
+    with pytest.raises(PoolExhausted):
+        alloc.extend(1, 4)                  # pool empty now
+    alloc.check_invariants()
+    assert alloc.free_pages == 0
+
+
+def test_allocator_reservation_blocks_admission():
+    """A reservation holds back pages for a live slot's future extends:
+    a newcomer that would eat them is refused up front, and the live
+    slot's extends then always succeed."""
+    alloc = PageAllocator(num_pages=6, page_size=2, capacity=4, n_logical=6)
+    alloc.admit(0, 2, reserve_tokens=8)     # 1 page now, 4 reserved
+    assert not alloc.can_admit(6)           # 3 > 6 free - 3 outstanding
+    assert alloc.can_admit(4)
+    with pytest.raises(PoolExhausted):
+        alloc.admit(1, 6, reserve_tokens=6)
+    alloc.extend(0, 8)                      # reservation honoured
+    assert len(alloc.slot_pages(0)) == 4
+
+
+def test_allocator_extend_beyond_table_raises():
+    alloc = PageAllocator(num_pages=8, page_size=2, capacity=2, n_logical=3)
+    alloc.admit(0, 2)
+    with pytest.raises(ValueError, match="logical"):
+        alloc.extend(0, 8)                  # 4 pages > 3 table slots
+
+
+# ----------------------------------------------------- paged <-> logical
+
+def test_paginate_roundtrip_and_sentinel():
+    rng = np.random.default_rng(0)
+    cache = {"k": jnp.asarray(rng.normal(size=(2, 3, 10, 2, 4)),
+                              jnp.float32),
+             "v": jnp.asarray(rng.normal(size=(2, 3, 10, 2, 4)),
+                              jnp.float32),
+             "pos": jnp.asarray([10, 10, 10], jnp.int32)}
+    paged = paginate_cache(cache, page_size=4)
+    assert paged["bt"].shape == (3, 3)
+    assert bool(jnp.all(paged["bt"] > 0))           # sentinel unmapped only
+    assert bool(jnp.all(paged["k"][:, 0] == 0))     # sentinel page zeroed
+    lv = logical_view(paged)
+    for key in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(lv[key][:, :, :10]),
+                                      np.asarray(cache[key]))
+
+
+# ------------------------------------------------------------- scheduler
+
+def _requests(cfg, lens, budgets, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(request_id=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(l)).astype(np.int32),
+                    max_new=int(m))
+            for i, (l, m) in enumerate(zip(lens, budgets))]
+
+
+def _assert_bit_identical(engine, params, run, requests, eos_id, **kw):
+    for r in sorted(run.results, key=lambda r: r.request_id):
+        req = requests[r.request_id]
+        ref = np.asarray(engine.generate(
+            params, jnp.asarray(req.prompt[None, :]), req.max_new,
+            eos_id=eos_id, **kw).tokens[0])
+        n = r.prompt_len + r.generated
+        assert r.generated >= 1
+        assert np.array_equal(r.tokens[:n], ref[:n]), (
+            f"request {r.request_id} diverged from single-request engine")
+
+
+def test_paged_bit_identity_and_pool_drains(tiny, engine):
+    """Paged serving is bit-identical to BOTH the contiguous scheduler
+    (same page-aligned cache_len -> identical reduction shapes ->
+    identical logits) and the single-request engine; every page is back
+    in the pool after the drain (free-on-eos, no leaks)."""
+    cfg, model, params = tiny[:3]
+    lens, budgets = [5, 12, 9, 16, 3, 7], [6, 3, 8, 2, 7, 4]
+    runs = {}
+    for mode in ("contiguous", "paged"):
+        sched = ServingScheduler(model, params, capacity=2, chunk=3,
+                                 eos_id=1, prompt_buckets=(8, 16),
+                                 cache_len=28, cache=mode, page_size=4)
+        runs[mode] = sched.run(_requests(cfg, lens, budgets))
+        if mode == "paged":
+            assert sched._alloc.free_pages == sched.num_pages
+            sched._alloc.check_invariants()
+    paged = {r.request_id: r.tokens for r in runs["paged"].results}
+    contig = {r.request_id: r.tokens for r in runs["contiguous"].results}
+    assert sorted(paged) == list(range(len(lens)))
+    for rid in paged:
+        assert np.array_equal(paged[rid], contig[rid]), (
+            f"request {rid}: paged diverged from contiguous")
+    _assert_bit_identical(engine, params, runs["paged"],
+                          _requests(cfg, lens, budgets), eos_id=1)
+
+
+def test_paged_sampled_identical_to_contiguous(tiny):
+    """Sampled decode: per-request streams are identical between paged
+    and contiguous mode (same page-aligned cache_len, same keys)."""
+    cfg, model, params = tiny[:3]
+    runs = {}
+    for mode in ("contiguous", "paged"):
+        sched = ServingScheduler(model, params, capacity=2, chunk=3,
+                                 prompt_buckets=(8, 16), cache_len=24,
+                                 cache=mode, page_size=4,
+                                 temperature=0.8, top_k=4, sample_seed=7)
+        runs[mode] = {r.request_id: r.tokens.tolist()
+                      for r in sched.run(_requests(cfg, [5, 9, 7],
+                                                   [6, 4, 5])).results}
+    assert runs["paged"] == runs["contiguous"]
+
+
+def test_paged_compressed_ns(tiny, tiny_ns):
+    """MPIFA_NS (heterogeneous ranks, bucketed restack) serves through
+    the paged scheduler bit-identically to the engine."""
+    cfg, model, params = tiny[:3]
+    reqs = _requests(cfg, lens=[6, 11, 4], budgets=[5, 3, 6])
+    sched = ServingScheduler(model, tiny_ns, capacity=2, chunk=2,
+                             eos_id=1, prompt_buckets=(8, 16),
+                             cache="paged", page_size=4)
+    run = sched.run(reqs)
+    _assert_bit_identical(GenerationEngine(model), tiny_ns, run, reqs,
+                          eos_id=1)
+
+
+def test_paged_speculative_greedy_and_sampled(tiny, engine, tiny_draft):
+    """Paged speculative slots: greedy output bit-identical to the
+    plain engine (and hence to contiguous spec slots); sampled slots
+    reproduce the batch-1 ``engine.generate_speculative`` stream of
+    their ``spec_request_key`` — the draft cache pages too."""
+    cfg, model, params = tiny[:3]
+    reqs = _requests(cfg, lens=[5, 9, 7], budgets=[6, 4, 8])
+    sched = ServingScheduler(model, params, capacity=2, chunk=2, eos_id=1,
+                             prompt_buckets=(8, 16), cache="paged",
+                             page_size=4, draft_params=tiny_draft,
+                             spec_k=3)
+    run = sched.run(reqs)
+    assert run.drafted > 0
+    _assert_bit_identical(engine, params, run, reqs, eos_id=1)
+    assert sched._alloc.free_pages == sched.num_pages
+    assert sched._dalloc.free_pages == sched.num_pages
+
+    reqs = _requests(cfg, lens=[5, 9, 7], budgets=[6, 4, 8])
+    sched = ServingScheduler(model, params, capacity=2, chunk=2, eos_id=1,
+                             prompt_buckets=(8, 16), cache="paged",
+                             page_size=4, draft_params=tiny_draft,
+                             spec_k=3, temperature=0.8, top_k=4,
+                             sample_seed=11)
+    run = sched.run(reqs)
+    for r in sorted(run.results, key=lambda r: r.request_id):
+        req = reqs[r.request_id]
+        ref = engine.generate_speculative(
+            params, tiny_draft, jnp.asarray(req.prompt[None, :]),
+            req.max_new, spec_k=3, temperature=0.8, top_k=4, eos_id=1,
+            key=sched.spec_request_key(req.request_id))
+        n = r.prompt_len + r.generated
+        assert np.array_equal(r.tokens[:n], np.asarray(ref.tokens[0])[:n]), (
+            f"request {r.request_id} diverged from engine stream")
+
+
+def test_paged_no_pages_deferral_then_serves(tiny, engine):
+    """An undersized pool defers admission with a ``no_pages`` reason
+    (reported in SchedulerRun.deferrals, not a bare retry) and admits
+    once finished requests free their pages — outputs still exact."""
+    cfg, model, params = tiny[:3]
+    reqs = _requests(cfg, lens=[5, 9, 7], budgets=[6, 4, 8])
+    sched = ServingScheduler(model, params, capacity=4, chunk=2, eos_id=1,
+                             prompt_buckets=(8, 16), cache_len=28,
+                             cache="paged", page_size=4, num_pages=9)
+    run = sched.run(reqs)
+    assert run.deferrals.get("no_pages", 0) > 0
+    assert sorted(r.request_id for r in run.results) == [0, 1, 2]
+    _assert_bit_identical(engine, params, run, reqs, eos_id=1)
+
+
+def test_paged_no_slot_deferral_reported(tiny):
+    """Slot starvation is reported as ``no_slot`` (distinct from page
+    starvation) — the single-slot queue defers the followers."""
+    cfg, model, params = tiny[:3]
+    sched = ServingScheduler(model, params, capacity=1, chunk=2,
+                             prompt_buckets=(8,), cache="paged",
+                             page_size=4)
+    run = sched.run(_requests(cfg, [5, 6, 7], [4, 4, 4]))
+    assert run.deferrals.get("no_slot", 0) > 0
+    assert run.deferrals.get("no_pages", 0) == 0
+
+
+def test_paged_request_that_never_fits_raises(tiny):
+    """A request whose worst case exceeds the whole pool raises a
+    bucket-mismatch/pool error instead of deferring forever."""
+    cfg, model, params = tiny[:3]
+    sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                             prompt_buckets=(8,), cache_len=32,
+                             cache="paged", page_size=4, num_pages=4)
+    big = Request(request_id=9, prompt=np.zeros(5, np.int32), max_new=20)
+    with pytest.raises(ValueError, match="never be admitted"):
+        sched.run([big])
+    assert len(sched._free) == sched.capacity      # nothing leaked
+    sched._queue.popleft()
+    run = sched.run(_requests(cfg, [5], [4]))
+    assert [r.request_id for r in run.results] == [0]
+
+
+def test_paged_bucket_mismatch_raises(tiny):
+    """Oversized-for-cache_len requests raise the (renamed) bucket
+    mismatch error in both cache modes; state stays intact."""
+    cfg, model, params = tiny[:3]
+    for mode in ("contiguous", "paged"):
+        sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                                 prompt_buckets=(8,), cache_len=16,
+                                 cache=mode, page_size=4)
+        big = Request(request_id=9, prompt=np.zeros(5, np.int32),
+                      max_new=50)
+        with pytest.raises(ValueError, match="bucket mismatch"):
+            sched.run([big])
+        assert len(sched._free) == sched.capacity
+
+
+def test_paged_hybrid_bit_identity():
+    """The hybrid family pages its shared-attention KV (conv/ssm state
+    stays per-slot by design) and still serves bit-identically."""
+    cfg = get_smoke_config("zamba2_1p2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _requests(cfg, lens=[6, 9, 5, 11], budgets=[4, 2, 5, 3])
+    sched = ServingScheduler(model, params, capacity=2, chunk=2, eos_id=1,
+                             cache="paged", page_size=4)
+    assert sched.prompt_buckets is None
+    run = sched.run(reqs)
+    assert sched._paged_kv
+    _assert_bit_identical(GenerationEngine(model), params, run, reqs,
+                          eos_id=1)
+
+
+def test_paged_mamba2_is_noop_by_design():
+    """Pure SSM state is constant size — paged mode has nothing to page
+    and must behave exactly like the contiguous scheduler."""
+    cfg = get_smoke_config("mamba2_2p7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _requests(cfg, lens=[6, 9, 5], budgets=[4, 2, 5])
+    sched = ServingScheduler(model, params, capacity=2, chunk=2, eos_id=1,
+                             cache="paged", page_size=4)
+    run = sched.run(reqs)
+    assert not sched._paged_kv                  # nothing paged
+    _assert_bit_identical(GenerationEngine(model), params, run, reqs,
+                          eos_id=1)
+
+
+def test_paged_ring_arch_refuses_loudly():
+    cfg = get_smoke_config("gemma3_12b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="ring"):
+        ServingScheduler(model, params, cache="paged")
+
+
+def test_paged_config_errors(tiny):
+    cfg, model, params = tiny[:3]
+    with pytest.raises(ValueError, match="cache"):
+        ServingScheduler(model, params, cache="virtual")
+    with pytest.raises(ValueError, match="page_size"):
+        ServingScheduler(model, params, cache="paged", page_size=0)

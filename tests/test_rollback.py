@@ -125,3 +125,78 @@ _CASES = [(0, 2, 0), (1, 2, 3), (2, 3, 1), (3, 4, 5), (4, 1, 2),
 @pytest.mark.parametrize("arch", ARCHS)
 def test_rollback_matches_sequential_prefix(arch, seed, k, advance):
     _check_rollback(arch, seed, k, advance)
+
+
+# ------------------------------------------------------- paged caches
+
+# every family with a paged path, incl. the encdec decoder self-attn
+# (no scheduler serves it, so this is its paged coverage); ring refuses
+PAGED_ARCHS = ("tiny", "mamba2_2p7b", "zamba2_1p2b", "whisper_medium")
+
+
+def _check_paged_rollback(arch, seed, k, advance):
+    """Verify-then-rollback on a PAGED cache whose k+1 writes cross a
+    page boundary: the logical gather of the rolled-back pool must be
+    element-identical to contiguous rollback (same tolerance contract
+    as above), and ``pos`` must match — pages themselves are never
+    freed mid-flight, so rejected-suffix junk stays masked exactly as
+    contiguous junk does."""
+    from repro.runtime.paging import logical_view, paginate_cache
+    advance = min(advance, k + 1)
+    cfg, model, params, prefill, decode, verify = _setup(arch)
+    rng = np.random.default_rng(seed)
+    P = 4
+    # PLEN=7 puts pos at the tail of page 1; the k+1 verify writes span
+    # into page 2 (and beyond for k >= 4), crossing >= 1 boundary
+    cache_len = PLEN + k + 9
+    cache_len += (-cache_len) % P                  # page-aligned
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, PLEN)),
+                          jnp.int32)
+    pf_in = prompts
+    if arch == "whisper_medium":     # enc-dec prefill carries frames
+        frames = jnp.asarray(
+            rng.normal(size=(1, cfg.encoder_seq, cfg.d_model)) * 0.1,
+            jnp.float32)
+        pf_in = {"frames": frames, "tokens": prompts}
+    _, c0 = prefill(params, pf_in,
+                    model.init_cache(1, cache_len, dtype=jnp.float32))
+    p0 = paginate_cache(c0, P)
+    vin = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, k + 1)),
+                      jnp.int32)
+    adv = jnp.asarray([advance], jnp.int32)
+
+    # contiguous reference: verify + rollback (already checked against
+    # sequential decode above)
+    _, vc = verify(params, vin, c0)
+    ref = model.rollback_verify(vc, c0["pos"], adv)
+
+    _, pvc = verify(params, vin, p0)
+    rolled = model.rollback_verify(pvc, p0["pos"], adv)
+    assert "bt" not in ref
+    lv = logical_view(rolled)
+    lv.pop("bt", None)
+    _assert_cache_equal(
+        {k2: (v[:, :, :cache_len] if k2 in ("k", "v") else v)
+         for k2, v in lv.items()},
+        ref, (arch, "paged-verify", seed, k, advance))
+
+    # draft side: cached decode steps with pre-step ckpts, restored
+    c, cks = p0, []
+    for j in range(k + 1):
+        cks.append(model.ckpt_decode(c))
+        _, c = decode(params, vin[:, j:j + 1], c)
+    stacked = (jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *cks)
+               if cks[0] else {})
+    restored = model.restore_decode(dict(c), stacked, p0["pos"], adv)
+    lv = logical_view(restored)
+    lv.pop("bt", None)
+    _assert_cache_equal(
+        {k2: (v[:, :, :cache_len] if k2 in ("k", "v") else v)
+         for k2, v in lv.items()},
+        ref, (arch, "paged-draft", seed, k, advance))
+
+
+@pytest.mark.parametrize("seed,k,advance", _CASES)
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_paged_rollback_across_page_boundary(arch, seed, k, advance):
+    _check_paged_rollback(arch, seed, k, advance)

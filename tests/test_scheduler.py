@@ -173,6 +173,22 @@ def test_oversized_request_leaves_state_intact(tiny):
     assert sorted(r.request_id for r in run.results) == [0, 1]
 
 
+def test_deferral_reasons_reported(tiny):
+    """An arrived request that cannot be admitted is counted in
+    SchedulerRun.deferrals with WHY (here: all slots busy -> no_slot)
+    instead of a bare retry; an unconstrained run reports none."""
+    cfg, model, params = tiny[:3]
+    reqs = _requests(cfg, lens=[5, 6, 7], budgets=[8, 8, 8])
+    sched = ServingScheduler(model, params, capacity=1, chunk=2,
+                             prompt_buckets=(8,))
+    run = sched.run(reqs)
+    assert run.deferrals.get("no_slot", 0) > 0
+    assert "no_pages" not in run.deferrals     # contiguous: never pages
+    roomy = ServingScheduler(model, params, capacity=4, chunk=2,
+                             prompt_buckets=(8,))
+    assert roomy.run(_requests(cfg, [5, 6], [4, 4])).deferrals == {}
+
+
 def test_arrival_times_respected(tiny):
     """A request with a future arrival_time is not admitted before it."""
     cfg, model, params = tiny[:3]
