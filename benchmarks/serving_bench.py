@@ -1,5 +1,5 @@
-"""Serving benchmark: continuous batching vs run-to-completion, plus
-the paged-KV capacity sweep.
+"""Serving benchmark: continuous batching vs run-to-completion, the
+paged-KV capacity sweep, and the preemption-under-burst sweep.
 
 Poisson arrivals with mixed prompt/output lengths through the
 slot-allocated scheduler (runtime/scheduler.py), against the *same*
@@ -20,12 +20,22 @@ sweep HARD-GATES: peak paged concurrency must be >= 1.3x contiguous
 (and every request's tokens must match the contiguous run exactly) or
 the benchmark exits non-zero — CI runs it.
 
+The **preemption-under-burst sweep** (ISSUE 6) saturates every slot
+with low-priority long requests and lands short high-priority
+latecomers mid-run, measuring their p99 latency with preemption OFF
+(they queue behind a long completion) vs ``preemption="save_restore"``
+(they evict a victim at the next chunk boundary; the victim resumes
+from its saved pages).  HARD GATE: the no-preempt/preempt latency
+ratio must be >= 1.2 with zero token mismatches across the two runs —
+preemption must cut tail latency without touching a single stream.
+
 Reports aggregate tokens/s, p50/p99 per-request latency and mean slot
 occupancy, and writes machine-readable ``BENCH_serving.json`` so the
 perf trajectory is tracked across PRs.
 
   PYTHONPATH=src python benchmarks/serving_bench.py [--compressed]
   PYTHONPATH=src python benchmarks/serving_bench.py --paged-gate-only
+  PYTHONPATH=src python benchmarks/serving_bench.py --preempt-gate-only
 """
 from __future__ import annotations
 
@@ -175,6 +185,89 @@ def paged_capacity_sweep(model, params, *, contig_capacity: int = 6,
     return row
 
 
+def preemption_sweep(model, params, *, capacity: int = 4, chunk: int = 4,
+                     page_size: int = 16, n_high: int = 3,
+                     low_budget: int = 128, high_budget: int = 8,
+                     prompt_len: int = 16, seed: int = 0) -> dict:
+    """Preemption under burst: high-priority latency with and without
+    eviction.
+
+    ``capacity`` low-priority long requests saturate every slot; a few
+    short high-priority requests arrive mid-run.  Without preemption
+    they wait for the first low completion; with ``save_restore`` they
+    evict a victim at the next chunk boundary and the victim resumes
+    later.  Metrics: high-priority p99 latency in both modes (the gate
+    ratio), preempt/resume counts, and a hard correctness bar — every
+    request's tokens identical across the two runs (preemption must be
+    invisible in every stream, including the victims')."""
+    cache_len = prompt_len + low_budget + 1
+    cache_len += (-cache_len) % page_size
+    rng = np.random.default_rng(seed)
+    high_ids = list(range(100, 100 + n_high))
+
+    def mk(arrivals_live: bool):
+        reqs = [Request(
+            request_id=i,
+            prompt=rng.integers(0, BENCH_CFG.vocab_size,
+                                prompt_len).astype(np.int32),
+            max_new=low_budget) for i in range(capacity)]
+        for j, rid in enumerate(high_ids):
+            reqs.append(Request(
+                request_id=rid,
+                prompt=rng.integers(0, BENCH_CFG.vocab_size,
+                                    prompt_len).astype(np.int32),
+                max_new=high_budget,
+                arrival_time=(0.1 + 0.05 * j) if arrivals_live else 0.0,
+                priority=1))
+        return reqs
+
+    rng_state = rng.bit_generator.state
+    runs = {}
+    for label, mode in (("no_preempt", "off"), ("preempt", "save_restore")):
+        sched = ServingScheduler(model, params, capacity=capacity,
+                                 chunk=chunk, cache_len=cache_len,
+                                 cache="paged", page_size=page_size,
+                                 prompt_buckets=(prompt_len,),
+                                 preemption=mode)
+        # warm with LIVE arrivals so the evict/restore device
+        # gathers/scatters compile before the measured run
+        rng.bit_generator.state = rng_state
+        sched.run(mk(arrivals_live=True))
+        rng.bit_generator.state = rng_state
+        runs[label] = sched.run(mk(arrivals_live=True))
+        assert sched._alloc.free_pages == sched._alloc.num_pages, (
+            "pages leaked")
+
+    def hi_lat(run):
+        lats = [r.finished_at - r.arrival_time for r in run.results
+                if r.request_id in high_ids]
+        return float(np.percentile(lats, 99))
+
+    toks_off = {r.request_id: r.tokens for r in runs["no_preempt"].results}
+    mismatches = sum(
+        0 if np.array_equal(r.tokens, toks_off[r.request_id]) else 1
+        for r in runs["preempt"].results)
+    p99_off, p99_on = hi_lat(runs["no_preempt"]), hi_lat(runs["preempt"])
+    ratio = p99_off / max(p99_on, 1e-9)
+    row = {
+        "capacity": capacity,
+        "low_budget": low_budget,
+        "high_budget": high_budget,
+        "high_requests": n_high,
+        "high_p99_latency_no_preempt_s": round(p99_off, 4),
+        "high_p99_latency_preempt_s": round(p99_on, 4),
+        "latency_ratio": round(ratio, 2),
+        "preemptions": runs["preempt"].preemptions,
+        "resumes": runs["preempt"].resumes,
+        "rejected": len(runs["preempt"].rejected),
+        "token_mismatches": mismatches,
+    }
+    emit("serving/preempt/high_priority_p99", p99_on * 1e6,
+         f"{p99_on:.3f}s vs {p99_off:.3f}s unpreempted ({ratio:.2f}x, "
+         f"{row['preemptions']} preempts, {row['resumes']} resumes)")
+    return row
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
@@ -190,10 +283,16 @@ def main(argv=None) -> int:
     ap.add_argument("--paged-gate-only", action="store_true",
                     help="run only the paged capacity sweep + hard gate "
                          "(the CI paged smoke)")
+    ap.add_argument("--preempt-gate-only", action="store_true",
+                    help="run only the preemption-under-burst sweep + "
+                         "hard gate (the CI fault-injection smoke)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--capacity-gate", type=float, default=1.3,
                     help="minimum paged/contiguous concurrency ratio at "
                          "equal cache HBM")
+    ap.add_argument("--preempt-gate", type=float, default=1.2,
+                    help="minimum high-priority p99 latency improvement "
+                         "(no-preempt / preempt) under burst")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
 
@@ -213,14 +312,34 @@ def main(argv=None) -> int:
                   flush=True)
         return ok
 
-    if args.paged_gate_only:
+    def run_preempt_gate(report):
+        row = preemption_sweep(model, params, page_size=args.page_size,
+                               seed=args.seed)
+        report["preemption"] = row
+        ok = (row["latency_ratio"] >= args.preempt_gate
+              and row["token_mismatches"] == 0
+              and row["preemptions"] >= 1 and row["resumes"] >= 1)
+        if not ok:
+            print(f"[serving_bench] PREEMPT GATE FAILED: ratio "
+                  f"{row['latency_ratio']} < {args.preempt_gate}, "
+                  f"{row['token_mismatches']} token mismatches, "
+                  f"{row['preemptions']} preempts / "
+                  f"{row['resumes']} resumes", flush=True)
+        return ok
+
+    if args.paged_gate_only or args.preempt_gate_only:
         report = {"config": {"model": BENCH_CFG.name,
                              "page_size": args.page_size,
                              "backend": jax.default_backend(),
                              "timestamp": time.strftime(
                                  "%Y-%m-%dT%H:%M:%S")}}
-        ok = run_paged_gate(report)
-        print(json.dumps(report["paged_capacity"], indent=2), flush=True)
+        if args.paged_gate_only:
+            ok = run_paged_gate(report)
+            print(json.dumps(report["paged_capacity"], indent=2),
+                  flush=True)
+        else:
+            ok = run_preempt_gate(report)
+            print(json.dumps(report["preemption"], indent=2), flush=True)
         return 0 if ok else 1
     requests = make_requests(args.requests, args.rate, BENCH_CFG.vocab_size,
                              args.seed, max(BUDGET_MIX))
@@ -276,6 +395,7 @@ def main(argv=None) -> int:
         emit(f"serving/{label}/speedup", 0.0, f"{speedup:.2f}x")
 
     gate_ok = run_paged_gate(report)
+    gate_ok = run_preempt_gate(report) and gate_ok
 
     out = Path(args.out)
     out.write_text(json.dumps(report, indent=2) + "\n")

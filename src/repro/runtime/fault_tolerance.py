@@ -14,16 +14,24 @@ run per-host at scale, minus the RPC transport.
     thermally-throttled or pre-failing chip; mitigation = checkpoint,
     evict, resume on spares — see ElasticPlan in elastic.py).
   * RestartPolicy      — exponential backoff with a crash budget; the
-    train loop consults it on every failure.
+    train loop consults it on every failure, and the serving scheduler
+    reuses it for admission backpressure (a deferred request retries
+    with exponential backoff until its budget exhausts -> Rejected) and
+    for chunk-dispatch retries under injected faults.
+  * FaultPlan          — a deterministic fault schedule for the serving
+    scheduler's failure-injection tests: at chosen chunk boundaries it
+    injects allocator exhaustion, dispatch exceptions, clock skew,
+    cancellations, or forced preemptions.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import defaultdict, deque
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
-__all__ = ["HeartbeatRegistry", "StragglerDetector", "RestartPolicy"]
+__all__ = ["HeartbeatRegistry", "StragglerDetector", "RestartPolicy",
+           "FaultPlan", "InjectedFault"]
 
 
 class HeartbeatRegistry:
@@ -107,3 +115,62 @@ class RestartPolicy:
         if n > self.max_restarts:
             return None
         return min(self.base_backoff_s * (2 ** (n - 1)), self.max_backoff_s)
+
+
+class InjectedFault(RuntimeError):
+    """A deliberately-injected failure (see :class:`FaultPlan`).
+
+    Deliberately a distinct type so the scheduler's retry wrapper can
+    catch exactly the failures the harness planted without masking real
+    bugs behind a broad ``except``."""
+
+
+class FaultPlan:
+    """Deterministic fault schedule keyed by scheduler loop iteration.
+
+    The serving scheduler consumes one batch of actions per chunk
+    boundary (``take(step)`` — each action fires exactly once, so a
+    boundary retried after an injected dispatch failure does not
+    re-fire).  Supported kinds:
+
+      * ``pool_exhausted`` — arm the page allocator to raise
+        ``PoolExhausted`` on its next admit/extend call (mid-admission
+        and mid-flight allocator failure paths);
+      * ``dispatch_error`` — raise :class:`InjectedFault` at the next
+        chunk dispatch, BEFORE any device buffer is donated, so a retry
+        reproduces the exact same tokens;
+      * ``clock_skew`` — add ``arg`` seconds to the scheduler's notion
+        of now (deadline/backoff robustness under clock jumps);
+      * ``cancel`` — call ``scheduler.cancel(arg)`` at that boundary;
+      * ``preempt`` — force-preempt the slot running request-id ``arg``
+        regardless of priority (deterministic preempt->resume
+        bit-identity tests without needing real contention).
+
+    ``step`` counts scheduler loop iterations from 0; admission for a
+    step happens AFTER its actions fire, so the earliest step at which
+    an admitted request can be preempted or cancelled is 1.
+    """
+
+    KINDS = ("pool_exhausted", "dispatch_error", "clock_skew", "cancel",
+             "preempt")
+
+    def __init__(self):
+        self._actions: Dict[int, List[Tuple[str, Any]]] = defaultdict(list)
+        self.skew = 0.0                  # accumulated clock_skew seconds
+        self.fired: List[Tuple[int, str, Any]] = []
+
+    def at(self, step: int, kind: str, arg: Any = None) -> "FaultPlan":
+        if kind not in self.KINDS:
+            raise ValueError(f"unknown fault kind {kind!r}; "
+                             f"one of {self.KINDS}")
+        self._actions[int(step)].append((kind, arg))
+        return self
+
+    def take(self, step: int) -> List[Tuple[str, Any]]:
+        """Pop and return the actions armed for ``step`` (once only)."""
+        acts = self._actions.pop(int(step), [])
+        self.fired.extend((int(step), k, a) for k, a in acts)
+        return acts
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self._actions.values())

@@ -94,6 +94,7 @@ class PageAllocator:
         self._pages: List[List[int]] = [[] for _ in range(self.capacity)]
         self._reserved: List[int] = [0] * self.capacity
         self.table = np.zeros((self.capacity, self.n_logical), np.int32)
+        self._fail_next = 0              # armed injected faults (tests)
 
     # ------------------------------------------------------------- state
     @property
@@ -111,6 +112,19 @@ class PageAllocator:
     def pages_for(self, tokens: int) -> int:
         return pages_for(tokens, self.page_size)
 
+    # ---------------------------------------------------- fault injection
+    def inject_fault(self, n: int = 1) -> None:
+        """Arm the allocator to raise :class:`PoolExhausted` on its next
+        ``n`` admit/extend calls (even ones that would succeed).  Used by
+        the scheduler's FaultPlan harness to prove admission is atomic
+        and chunk-boundary extension is retryable."""
+        self._fail_next += int(n)
+
+    def _maybe_fail(self, op: str) -> None:
+        if self._fail_next > 0:
+            self._fail_next -= 1
+            raise PoolExhausted(f"injected allocator fault during {op}")
+
     # -------------------------------------------------------- operations
     def can_admit(self, reserve_tokens: int) -> bool:
         """True when a request reserving ``reserve_tokens`` worst-case
@@ -125,6 +139,7 @@ class PageAllocator:
         slot, reserving ``reserve_tokens`` (>= tokens_now) worst case."""
         if self._pages[slot]:
             raise ValueError(f"slot {slot} still holds pages — free first")
+        self._maybe_fail("admit")
         need = self.pages_for(tokens_now)
         reserve = max(need, self.pages_for(reserve_tokens)
                       if reserve_tokens is not None else need)
@@ -140,6 +155,7 @@ class PageAllocator:
         """Grow the slot's mapping to cover ``tokens`` entries (no-op if
         already covered).  Raises :class:`PoolExhausted` on shortfall —
         never steals a live page."""
+        self._maybe_fail("extend")
         need = self.pages_for(tokens)
         if need > self.n_logical:
             raise ValueError(

@@ -94,25 +94,68 @@ windowed slots and refuse ``cache="paged"`` loudly.  Deferred
 admissions report WHY (``no_slot`` vs ``no_pages``) in
 ``SchedulerRun.deferrals``; a request whose prompt bucket can never
 fit raises a ``bucket mismatch`` error instead of retrying forever.
+
+**Robustness layer** (priority preemption, deadlines, cancellation,
+backpressure, fault injection):
+
+  * ``Request`` carries a ``priority`` class and an optional
+    ``deadline_s``; admission walks the queue in (priority desc,
+    arrival, id) order, and a blocked request blocks everything at or
+    below its own priority — strict FIFO within a priority class, so a
+    large request can never be starved by a stream of smaller later
+    arrivals, while higher-priority latecomers may still overtake;
+  * with ``preemption="save_restore"`` (paged cache only), a
+    higher-priority admission that finds no slot/pages **preempts**
+    the lowest-priority victim at the chunk boundary: the victim's
+    page payloads (only the pages its write pointer has touched),
+    per-slot device rows (pos/SSM state), scalars (next token, PRNG
+    key, counters, spec round counter) and emitted tokens are saved
+    host-side, its slot and pages freed; re-admission restores them
+    and the resumed stream is BIT-IDENTICAL to an unpreempted run
+    (greedy and sampled, plain and speculative — the saved key/round
+    counter continue the exact sample stream).  The contiguous cache
+    cannot save block tables; it must opt into
+    ``preemption="recompute"`` (save the emitted prefix, re-prefill
+    on resume) or construction refuses loudly;
+  * ``cancel(request_id)`` and per-request deadlines are honoured at
+    chunk boundaries: the slot and its pages are freed immediately and
+    the result reports a :class:`CancelReason` (``cancelled`` /
+    ``deadline`` / ``preempted_unresumed``);
+  * deferred admissions consult a :class:`RestartPolicy` exponential
+    backoff (injectable clock) when ``admit_retries``/``backoff_base_s``
+    are set: a request whose retry budget exhausts becomes an explicit
+    :class:`Rejected` entry instead of spinning at every boundary, and
+    a preempted request that can never re-admit surfaces as
+    ``preempted_unresumed`` with its partial tokens;
+  * a :class:`~repro.runtime.fault_tolerance.FaultPlan` injects
+    allocator exhaustion, dispatch errors (raised BEFORE buffers are
+    donated, so the retry path reproduces identical tokens), clock
+    skew, cancels and forced preemptions at chosen boundaries;
+    :class:`StragglerDetector` watches per-chunk dispatch wall-times
+    and flags persistent outliers in ``SchedulerRun.slow_chunks``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import enum
 import time
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.fault_tolerance import (FaultPlan, InjectedFault,
+                                           RestartPolicy, StragglerDetector)
 from repro.runtime.paging import (PageAllocator, PoolExhausted,
                                   make_paged_cache, pages_for)
 
 Pytree = Any
 
 __all__ = ["Request", "RequestResult", "SchedulerRun", "ServingScheduler",
-           "ADMIT_BATCH", "PoolExhausted"]
+           "ADMIT_BATCH", "PoolExhausted", "CancelReason", "Rejected",
+           "FaultPlan", "InjectedFault"]
 
 # Grouped-admission batch sizes, largest first.  Also the cap on the
 # jit-cache key space: one compiled admit fn per (prompt bucket, k).
@@ -123,13 +166,41 @@ ADMIT_BATCH = (4, 2, 1)
 class Request:
     """One serving request; ``arrival_time`` is seconds after run start
     (0 = already queued).  ``speculative`` opts a request out of
-    draft/verify on a speculative scheduler (ignored otherwise)."""
+    draft/verify on a speculative scheduler (ignored otherwise).
+    ``priority`` is an int class (higher = more important — may preempt
+    lower classes when the scheduler enables preemption); ``deadline_s``
+    is seconds after ``arrival_time`` by which the request must finish,
+    checked at chunk boundaries (expiry cancels with reason
+    ``deadline``)."""
 
     request_id: int
     prompt: np.ndarray            # (len,) int32
     max_new: int
     arrival_time: float = 0.0
     speculative: bool = True
+    priority: int = 0
+    deadline_s: Optional[float] = None
+
+
+class CancelReason(enum.Enum):
+    """Why a request finished without draining its budget."""
+
+    CANCELLED = "cancelled"                # explicit cancel(request_id)
+    DEADLINE = "deadline"                  # arrival_time + deadline_s passed
+    PREEMPTED_UNRESUMED = "preempted_unresumed"  # evicted, re-admission
+    #                                        retry budget exhausted
+
+
+@dataclasses.dataclass
+class Rejected:
+    """A request dropped at admission after its backoff retry budget
+    exhausted (never ran — contrast ``preempted_unresumed``, which ran
+    and carries partial tokens in a RequestResult)."""
+
+    request_id: int
+    reason: str                   # last deferral cause: no_slot/no_pages
+    attempts: int                 # admission attempts before giving up
+    rejected_at: float            # seconds after run start
 
 
 @dataclasses.dataclass
@@ -148,6 +219,8 @@ class RequestResult:
     # pollute aggregate acceptance stats.
     accepted: Optional[int] = None   # draft tokens the target accepted
     drafted: Optional[int] = None    # draft tokens proposed for this slot
+    cancel_reason: Optional[CancelReason] = None  # None = ran to eos/budget
+    preemptions: int = 0             # times this request was evicted
 
     @property
     def latency(self) -> float:
@@ -166,11 +239,19 @@ class SchedulerRun:
     accepted: int = 0             # draft tokens accepted (spec slots only)
     drafted: int = 0              # draft tokens proposed (spec slots only)
     # WHY arrived requests were not admitted at a chunk boundary,
-    # counted per (boundary, blocked queue head): "no_slot" (all slots
+    # counted per (boundary, blocked request): "no_slot" (all slots
     # busy) or "no_pages" (paged pool cannot cover the request's
     # worst-case reservation).  A request that can NEVER fit raises a
     # "bucket mismatch" ValueError instead of deferring forever.
     deferrals: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # requests dropped after their admission retry budget exhausted
+    # (backpressure: results + rejected partition the submitted set)
+    rejected: List[Rejected] = dataclasses.field(default_factory=list)
+    preemptions: int = 0          # slot evictions (priority or forced)
+    resumes: int = 0              # preempted requests re-admitted
+    # chunk indices whose dispatch wall-time the StragglerDetector
+    # flagged as persistent outliers vs the run median
+    slow_chunks: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def tokens_per_sec(self) -> float:
@@ -196,6 +277,36 @@ class _Slot:
     tokens: List[int] = dataclasses.field(default_factory=list)
     count: int = 0                # generated so far (device n_gen mirror)
     admitted_at: float = 0.0
+    seq: int = -1                 # admission order (victim tie-break)
+    preempts: int = 0             # evictions this request has survived
+
+
+@dataclasses.dataclass
+class _SavedSlot:
+    """Host-side snapshot of a preempted slot (see ``_evict``).
+
+    ``save_restore`` keeps the full device row: every non-paged cache
+    leaf's slot row plus the page payloads the write pointer has
+    touched.  ``recompute`` keeps only the scalars — resume re-prefills
+    the prompt + emitted prefix."""
+
+    tokens: List[int]             # emitted tokens so far (host ints)
+    count: int                    # == device n_gen at eviction
+    pos: int                      # device write pointer (plen + count - 1)
+    tok: np.ndarray               # (1,) next input token
+    keys: np.ndarray              # (2,) per-slot PRNG key (sample stream)
+    admitted_at: float            # first admission (latency accounting)
+    n_preempts: int
+    # speculative scalars (None on plain schedulers)
+    spec: Optional[bool] = None
+    acc: Optional[int] = None
+    drafted: Optional[int] = None
+    rounds: Optional[int] = None
+    # save_restore payloads (None in recompute mode)
+    rows: Optional[Dict[str, np.ndarray]] = None    # target non-paged rows
+    drows: Optional[Dict[str, np.ndarray]] = None   # draft non-paged rows
+    pages: Optional[Dict[str, np.ndarray]] = None   # target page payloads
+    dpages: Optional[Dict[str, np.ndarray]] = None  # draft page payloads
 
 
 class ServingScheduler:
@@ -218,13 +329,38 @@ class ServingScheduler:
                  sample_seed: int = 0,
                  draft_params: Optional[Pytree] = None, spec_k: int = 4,
                  cache: str = "contiguous", page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 preemption: str = "off",
+                 admit_retries: Optional[int] = None,
+                 backoff_base_s: float = 0.0, backoff_max_s: float = 1.0,
+                 dispatch_retries: int = 3,
+                 clock: Optional[Callable[[], float]] = None,
+                 sleep_fn: Optional[Callable[[float], None]] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 straggler_threshold: float = 4.0):
         if admission not in ("continuous", "drain"):
             raise ValueError("admission: 'continuous' or 'drain'")
         if cache not in ("contiguous", "paged"):
             raise ValueError("cache: 'contiguous' or 'paged'")
         if page_size < 1:
             raise ValueError("page_size must be >= 1")
+        if preemption not in ("off", "save_restore", "recompute"):
+            raise ValueError(
+                "preemption: 'off', 'save_restore' or 'recompute'")
+        if preemption == "save_restore" and cache != "paged":
+            raise ValueError(
+                'preemption="save_restore" needs cache="paged": the '
+                "contiguous cache has no block tables to save, so an "
+                "evicted slot's KV cannot be parked host-side page by "
+                'page — use preemption="recompute" (save the emitted '
+                "prefix and re-prefill on resume, costing recompute "
+                'instead of HBM) or switch to cache="paged"')
+        if preemption == "recompute" and cache != "contiguous":
+            raise ValueError(
+                'preemption="recompute" is the contiguous-cache '
+                'fallback; the paged cache preempts via '
+                'preemption="save_restore" (block-table save/restore, '
+                "zero recompute)")
         family = getattr(getattr(model, "cfg", None), "family", "dense")
         if family == "encdec":
             raise ValueError("scheduler serves token-prompt families; "
@@ -274,6 +410,18 @@ class ServingScheduler:
         self.cache_mode = cache
         self.page_size = int(page_size)
         self.num_pages = num_pages          # resolved at _ensure_state
+        self.preemption = preemption
+        # backpressure: admission backoff is OFF by default (a deferred
+        # request retries at every boundary forever, today's behavior);
+        # setting admit_retries and/or backoff_base_s bounds it
+        self._admit_retries = admit_retries
+        self._backoff_base = float(backoff_base_s)
+        self._backoff_max = float(backoff_max_s)
+        self._dispatch_retries = int(dispatch_retries)
+        self._clock = clock if clock is not None else time.perf_counter
+        self._sleep = sleep_fn if sleep_fn is not None else time.sleep
+        self._fault_plan = fault_plan
+        self._straggler_threshold = float(straggler_threshold)
         self.cache_dtype = cache_dtype
         self.temperature = float(temperature)
         self.top_k = int(top_k)
@@ -318,10 +466,37 @@ class ServingScheduler:
         self._n_logical = 0
         self._alloc: Optional[PageAllocator] = None
         self._dalloc: Optional[PageAllocator] = None
+        # robustness state
+        self._resume_fns: Dict[int, Any] = {}      # recompute re-prefills
+        self._preempted: Dict[int, _SavedSlot] = {}
+        self._cancelled: set = set()
+        self._backoff: Dict[int, RestartPolicy] = {}
+        self._retry_at: Dict[int, float] = {}
+        self._seq = 0
+        self._n_preempt = 0
+        self._n_resume = 0
+        self._last_block: Optional[str] = None
 
     # ------------------------------------------------------------- queue
+    @staticmethod
+    def _qkey(r: Request) -> Tuple[int, float, int]:
+        """Admission order: priority class desc, then strict FIFO within
+        the class (arrival, then id) — the starvation fix: a blocked
+        request sets a ceiling no same-or-lower-priority later arrival
+        can pass."""
+        return (-r.priority, r.arrival_time, r.request_id)
+
     def submit(self, request: Request) -> None:
         self._queue.append(request)
+
+    def cancel(self, request_id: int) -> None:
+        """Cancel a request mid-flight: honoured at the next chunk
+        boundary (a dispatch in progress cannot be interrupted), where
+        the slot and its pages are freed immediately and the result
+        carries ``CancelReason.CANCELLED`` with tokens emitted so far.
+        Queued (or preempted-and-parked) requests are simply dropped
+        with the same reason.  Unknown ids are ignored."""
+        self._cancelled.add(int(request_id))
 
     def spec_request_key(self, request_id: int) -> jax.Array:
         """The engine-equivalent PRNG key of a sampled speculative
@@ -757,6 +932,47 @@ class ServingScheduler:
 
         return jax.jit(run, donate_argnums=tuple(range(11, 22)))
 
+    def _build_resume_fn(self, bucket: int):
+        """Batch-1 re-prefill for ``preemption="recompute"``: prefill
+        the saved prefix (prompt + emitted tokens minus the pending
+        input token) into the victim's old slot row and set its write
+        pointer to the true prefix length.  No token is drawn — the
+        saved ``tok``/key scalars carry the stream, so the decode
+        continuation picks up exactly where the victim stopped (modulo
+        prefill-vs-decode fp association, which is why only
+        save_restore promises bit-identity)."""
+        model = self.model
+        cache_len = self._cache_len if self._ring else bucket
+        cache_dtype = self.cache_dtype
+        axes = self._slot_axes
+        speculative = self.speculative
+
+        def scatter1(big, sm, ax, slot):
+            starts = [jnp.int32(0)] * big.ndim
+            starts[ax] = slot
+            return jax.lax.dynamic_update_slice(big, sm.astype(big.dtype),
+                                                tuple(starts))
+
+        def refill(params, prefix, plen, slot, cache):
+            small = model.init_cache(1, cache_len, dtype=cache_dtype)
+            _, small = model.prefill(params, prefix, small,
+                                     last_idx=plen - 1)
+            small = {**small, "pos": plen.astype(jnp.int32)}
+            out = dict(cache)
+            for key, sm in small.items():
+                out[key] = scatter1(out[key], sm, axes[key], slot)
+            return out
+
+        if not speculative:
+            def run(params, prefix, plen, slot, cache):
+                return refill(params, prefix, plen, slot, cache)
+            return jax.jit(run, donate_argnums=(4,))
+
+        def run(params, dparams, prefix, plen, slot, cache, dcache):
+            return (refill(params, prefix, plen, slot, cache),
+                    refill(dparams, prefix, plen, slot, dcache))
+        return jax.jit(run, donate_argnums=(5, 6))
+
     # ---------------------------------------------------------- admission
     def _check_fits(self, req: Request, bucket: int) -> None:
         """Validate the queue head BEFORE popping it (and before the
@@ -824,6 +1040,406 @@ class ServingScheduler:
             self._alloc.extend(slot, need)
             if self._dalloc is not None:
                 self._dalloc.extend(slot, need)
+
+    # --------------------------------------------- preemption / cancel
+    def _save_rows(self, cache: Dict[str, Any], slot: int
+                   ) -> Dict[str, np.ndarray]:
+        """Host copies of every non-paged cache leaf's slot row (pos,
+        SSM conv/ssm state, contiguous k/v...) with the batch axis kept,
+        so restore is one dynamic_update_slice per leaf."""
+        rows = {}
+        for key, leaf in cache.items():
+            if key == "bt" or (self._paged_kv and key in self._paged_keys):
+                continue
+            ax = self._slot_axes[key]
+            rows[key] = np.asarray(
+                jax.lax.index_in_dim(leaf, slot, ax, keepdims=True))
+        return rows
+
+    def _save_pages(self, cache: Dict[str, Any], alloc: PageAllocator,
+                    slot: int, n_save: int) -> Dict[str, np.ndarray]:
+        """Payloads of the first ``n_save`` pages the slot's write
+        pointer has touched (entries beyond ``pos`` are junk the causal
+        mask excludes, so later-mapped pages need not be saved)."""
+        ids = jnp.asarray(alloc.slot_pages(slot)[:n_save], jnp.int32)
+        return {key: np.asarray(jnp.take(cache[key], ids, axis=1))
+                for key in self._paged_keys}
+
+    def _evict(self, slot: int) -> Request:
+        """Preempt the slot at a chunk boundary: park its state
+        host-side (mode-dependent depth), free the slot and every page
+        it holds (the zeroed block-table row sends the frozen row's
+        junk writes to the sentinel page), and hand the request back
+        for re-queueing."""
+        st = self._slots[slot]
+        req = st.request
+        d = self._dev
+        pos = len(req.prompt) + st.count - 1   # device write pointer
+        saved = _SavedSlot(
+            tokens=[int(t) for t in st.tokens],
+            count=st.count, pos=pos,
+            tok=np.asarray(d["tok"][slot]),
+            keys=np.asarray(d["keys"][slot]),
+            admitted_at=st.admitted_at,
+            n_preempts=st.preempts + 1)
+        if self.speculative:
+            saved.spec = bool(np.asarray(d["spec"][slot]))
+            saved.acc = int(np.asarray(d["acc"][slot]))
+            saved.drafted = int(np.asarray(d["drafted"][slot]))
+            saved.rounds = int(np.asarray(d["rounds"][slot]))
+        if self.preemption == "save_restore":
+            saved.rows = self._save_rows(d["cache"], slot)
+            if self.speculative:
+                saved.drows = self._save_rows(d["dcache"], slot)
+            if self._paged_kv:
+                n_save = pages_for(pos, self.page_size)
+                saved.pages = self._save_pages(d["cache"], self._alloc,
+                                               slot, n_save)
+                if self._dalloc is not None:
+                    saved.dpages = self._save_pages(
+                        d["dcache"], self._dalloc, slot, n_save)
+        d["done"] = d["done"].at[slot].set(True)
+        if self._paged_kv:
+            self._alloc.free(slot)
+            if self._dalloc is not None:
+                self._dalloc.free(slot)
+        st.request = None
+        st.tokens = []
+        st.count = 0
+        st.preempts = 0
+        self._free.append(slot)
+        self._preempted[req.request_id] = saved
+        self._n_preempt += 1
+        return req
+
+    def _pick_victim(self, priority: int) -> Optional[int]:
+        """Strictly-lower-priority active slot to evict: lowest class
+        first, most-recently-admitted within the class (it has the
+        least sunk work)."""
+        best, bkey = None, None
+        for slot, st in enumerate(self._slots):
+            if st.request is None or st.request.priority >= priority:
+                continue
+            key = (st.request.priority, -st.seq)
+            if bkey is None or key < bkey:
+                best, bkey = slot, key
+        return best
+
+    def _restore(self, req: Request, slot: int, saved: _SavedSlot,
+                 now_t: float) -> None:
+        """Re-admit a preempted request into ``slot``.  Allocator work
+        happens FIRST: an injected PoolExhausted here leaves the device
+        untouched and the caller hands the slot back — admission stays
+        atomic under mid-admission faults."""
+        d = self._dev
+        n_save = 0
+        if self.preemption == "save_restore":
+            if self._paged_kv:
+                bucket = self._bucket_for(len(req.prompt))
+                reserve = self._reserve_tokens(req, bucket)
+                n_save = pages_for(saved.pos, self.page_size)
+                self._alloc.admit(slot, saved.pos, reserve)
+                try:
+                    if self._dalloc is not None:
+                        self._dalloc.admit(slot, saved.pos, reserve)
+                except PoolExhausted:
+                    self._alloc.free(slot)
+                    raise
+            cache = dict(d["cache"])
+            if self._paged_kv:
+                ids = jnp.asarray(self._alloc.table[slot, :n_save])
+                for key in self._paged_keys:
+                    cache[key] = cache[key].at[:, ids].set(
+                        jnp.asarray(saved.pages[key]).astype(
+                            cache[key].dtype))
+            for key, row in saved.rows.items():
+                cache[key] = jax.lax.dynamic_update_slice_in_dim(
+                    cache[key], jnp.asarray(row).astype(cache[key].dtype),
+                    slot, self._slot_axes[key])
+            d["cache"] = cache
+            if self.speculative:
+                dcache = dict(d["dcache"])
+                if self._dalloc is not None:
+                    dids = jnp.asarray(self._dalloc.table[slot, :n_save])
+                    for key in self._paged_keys:
+                        dcache[key] = dcache[key].at[:, dids].set(
+                            jnp.asarray(saved.dpages[key]).astype(
+                                dcache[key].dtype))
+                for key, row in saved.drows.items():
+                    dcache[key] = jax.lax.dynamic_update_slice_in_dim(
+                        dcache[key],
+                        jnp.asarray(row).astype(dcache[key].dtype),
+                        slot, self._slot_axes[key])
+                d["dcache"] = dcache
+        else:
+            # recompute: re-prefill prompt + emitted prefix (everything
+            # except the pending input token) into the slot row
+            prefix = np.concatenate([
+                np.asarray(req.prompt, np.int32),
+                np.asarray(saved.tokens[:saved.count - 1], np.int32)])
+            plen = int(prefix.shape[0])
+            assert plen == saved.pos
+            bucket = self._bucket_for(plen)
+            padded = np.full((1, bucket), self.pad_id, np.int32)
+            padded[0, :plen] = prefix
+            fn = self._resume_fns.get(bucket)
+            if fn is None:
+                fn = self._resume_fns[bucket] = self._build_resume_fn(
+                    bucket)
+            plen_a = jnp.asarray([plen], jnp.int32)
+            slot_a = jnp.int32(slot)
+            if self.speculative:
+                d["cache"], d["dcache"] = fn(
+                    self.params, self.draft_params, jnp.asarray(padded),
+                    plen_a, slot_a, d["cache"], d["dcache"])
+            else:
+                d["cache"] = fn(self.params, jnp.asarray(padded), plen_a,
+                                slot_a, d["cache"])
+        d["tok"] = d["tok"].at[slot].set(jnp.asarray(saved.tok))
+        d["done"] = d["done"].at[slot].set(False)
+        d["n_gen"] = d["n_gen"].at[slot].set(saved.count)
+        d["budget"] = d["budget"].at[slot].set(req.max_new)
+        d["keys"] = d["keys"].at[slot].set(jnp.asarray(saved.keys))
+        if self.speculative:
+            d["spec"] = d["spec"].at[slot].set(bool(saved.spec))
+            d["acc"] = d["acc"].at[slot].set(saved.acc)
+            d["drafted"] = d["drafted"].at[slot].set(saved.drafted)
+            d["rounds"] = d["rounds"].at[slot].set(saved.rounds)
+        st = self._slots[slot]
+        st.request = req
+        st.tokens = list(saved.tokens)
+        st.count = saved.count
+        st.admitted_at = saved.admitted_at
+        st.preempts = saved.n_preempts
+        self._seq += 1
+        st.seq = self._seq
+        self._n_resume += 1
+
+    def _force_preempt(self, request_id: int) -> bool:
+        """FaultPlan hook: evict the slot running ``request_id``
+        regardless of priority (no-op if not active)."""
+        if self.preemption == "off":
+            raise ValueError(
+                "FaultPlan preempt action needs preemption enabled "
+                '(preemption="save_restore" or "recompute")')
+        for slot, st in enumerate(self._slots):
+            if (st.request is not None
+                    and st.request.request_id == int(request_id)):
+                req = self._evict(slot)
+                self._queue = collections.deque(
+                    sorted([*self._queue, req], key=self._qkey))
+                return True
+        return False
+
+    def _terminate_queued(self, req: Request, reason: CancelReason,
+                          now_t: float, results: List[RequestResult]
+                          ) -> None:
+        """Resolve a queued request without running it: preempted ones
+        carry their partial tokens, never-admitted ones just the
+        prompt."""
+        saved = self._preempted.pop(req.request_id, None)
+        self._backoff.pop(req.request_id, None)
+        self._retry_at.pop(req.request_id, None)
+        toks = saved.tokens if saved is not None else []
+        spec_on = (self.speculative and bool(req.speculative)
+                   and saved is not None)
+        results.append(RequestResult(
+            request_id=req.request_id,
+            tokens=np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray(toks, np.int32)]),
+            generated=saved.count if saved is not None else 0,
+            prompt_len=len(req.prompt),
+            slot=-1,
+            arrival_time=req.arrival_time,
+            admitted_at=(saved.admitted_at if saved is not None else now_t),
+            finished_at=now_t,
+            accepted=saved.acc if spec_on else None,
+            drafted=saved.drafted if spec_on else None,
+            cancel_reason=reason,
+            preemptions=saved.n_preempts if saved is not None else 0))
+
+    def _sweep_active(self, now_t: float,
+                      results: List[RequestResult]) -> None:
+        """Chunk-boundary cancellation/deadline check over active
+        slots: free the slot and its pages immediately."""
+        for slot in range(self.capacity):
+            st = self._slots[slot]
+            if st.request is None:
+                continue
+            req = st.request
+            reason = None
+            if req.request_id in self._cancelled:
+                self._cancelled.discard(req.request_id)
+                reason = CancelReason.CANCELLED
+            elif (req.deadline_s is not None
+                  and now_t > req.arrival_time + req.deadline_s):
+                reason = CancelReason.DEADLINE
+            if reason is None:
+                continue
+            d = self._dev
+            acc_h = drafted_h = None
+            if self.speculative and bool(req.speculative):
+                acc_h = np.asarray(d["acc"])
+                drafted_h = np.asarray(d["drafted"])
+            d["done"] = d["done"].at[slot].set(True)
+            self._finalize(slot, now_t, results, acc_h, drafted_h,
+                           reason=reason)
+
+    def _defer(self, req: Request, reason: str, now_t: float,
+               results: List[RequestResult],
+               rejected: List[Rejected]) -> bool:
+        """Backpressure bookkeeping for a blocked request.  Returns
+        False when the retry budget is exhausted and the request was
+        resolved (Rejected, or preempted_unresumed with partial
+        tokens) — the caller drops it from the queue."""
+        if self._admit_retries is None and self._backoff_base == 0.0:
+            return True                    # legacy: retry every boundary
+        rid = req.request_id
+        policy = self._backoff.get(rid)
+        if policy is None:
+            policy = self._backoff[rid] = RestartPolicy(
+                max_restarts=(self._admit_retries
+                              if self._admit_retries is not None
+                              else 1 << 30),
+                window_s=float("inf"),
+                base_backoff_s=self._backoff_base,
+                max_backoff_s=self._backoff_max,
+                clock=self._clock)
+        delay = policy.on_failure()
+        if delay is None:
+            attempts = len(policy.crashes)
+            if rid in self._preempted:
+                self._terminate_queued(
+                    req, CancelReason.PREEMPTED_UNRESUMED, now_t, results)
+            else:
+                self._backoff.pop(rid, None)
+                self._retry_at.pop(rid, None)
+                rejected.append(Rejected(request_id=rid, reason=reason,
+                                         attempts=attempts,
+                                         rejected_at=now_t))
+            return False
+        if delay > 0.0:
+            self._retry_at[rid] = now_t + delay
+        return True
+
+    def _try_admit(self, req: Request, now_t: float,
+                   pending: List[Tuple[Request, int]],
+                   requeued: List[Request]
+                   ) -> Tuple[bool, Optional[str]]:
+        """Admit one request (fresh or resumed), preempting
+        strictly-lower-priority victims if enabled and needed.  On
+        failure everything is left as found (modulo victims already
+        evicted for a newcomer whose own admission then faulted — they
+        are parked and re-queued, a consistent state)."""
+        rid = req.request_id
+        saved = self._preempted.get(rid)
+        bucket = self._bucket_for(len(req.prompt))
+        if saved is None:
+            self._check_fits(req, bucket)  # never-fits raises here
+        while True:
+            if not self._free:
+                reason = "no_slot"
+            elif self._paged_kv and not self._pages_available(req, bucket):
+                reason = "no_pages"
+            else:
+                break
+            victim = (self._pick_victim(req.priority)
+                      if self.preemption != "off" else None)
+            if victim is None:
+                return False, reason
+            requeued.append(self._evict(victim))
+        slot = self._free.pop()
+        try:
+            if saved is not None:
+                self._restore(req, slot, saved, now_t)
+                self._preempted.pop(rid, None)
+            else:
+                if self._paged_kv:
+                    self._reserve_pages(req, bucket, slot)
+                pending.append((req, slot))
+        except PoolExhausted:
+            # injected mid-admission allocator fault: hand back the
+            # slot and any partially-allocated pages, stay deferred
+            if self._paged_kv:
+                self._alloc.free(slot)
+                if self._dalloc is not None:
+                    self._dalloc.free(slot)
+            self._free.append(slot)
+            return False, "no_pages"
+        return True, None
+
+    def _admission_scan(self, now_t: float, results: List[RequestResult],
+                        deferrals: Dict[str, int],
+                        rejected: List[Rejected],
+                        pending: List[Tuple[Request, int]],
+                        limit: Optional[int] = None) -> None:
+        """One chunk-boundary pass over the queue in ``_qkey`` order:
+        resolve cancels/deadlines, honour backoff timers, admit what
+        fits (preempting if enabled).  A blocked or backing-off request
+        sets a priority ceiling — nothing at or below its class admits
+        behind it (FIFO within priority; higher classes may pass)."""
+        snapshot = list(self._queue)
+        out: List[Request] = []
+        requeued: List[Request] = []
+        ceiling: Optional[int] = None
+        admitted = 0
+        i = 0
+        try:
+            for i, req in enumerate(snapshot):
+                rid = req.request_id
+                if rid in self._cancelled:
+                    self._cancelled.discard(rid)
+                    self._terminate_queued(req, CancelReason.CANCELLED,
+                                           now_t, results)
+                    continue
+                if (req.deadline_s is not None
+                        and now_t > req.arrival_time + req.deadline_s):
+                    self._terminate_queued(req, CancelReason.DEADLINE,
+                                           now_t, results)
+                    continue
+                if req.arrival_time > now_t:
+                    out.append(req)
+                    continue
+                if limit is not None and admitted >= limit:
+                    out.append(req)
+                    continue
+                if ceiling is not None and req.priority <= ceiling:
+                    out.append(req)
+                    continue
+                if self._retry_at.get(rid, 0.0) > now_t:
+                    ceiling = req.priority     # backing off, holds FIFO
+                    out.append(req)
+                    continue
+                ok, reason = self._try_admit(req, now_t, pending, requeued)
+                if ok:
+                    admitted += 1
+                    self._retry_at.pop(rid, None)
+                    self._backoff.pop(rid, None)
+                else:
+                    deferrals[reason] = deferrals.get(reason, 0) + 1
+                    if self._last_block is None:
+                        self._last_block = reason
+                    if self._defer(req, reason, now_t, results, rejected):
+                        ceiling = req.priority
+                        out.append(req)
+        except Exception:
+            # a mid-scan raise (never-fits request, real allocator bug)
+            # must lose nothing: hand back this pass's not-yet-prefilled
+            # pops and requeue everything untouched
+            for req2, slot in pending:
+                if self._paged_kv:
+                    self._alloc.free(slot)
+                    if self._dalloc is not None:
+                        self._dalloc.free(slot)
+                self._free.append(slot)
+                out.append(req2)
+            pending.clear()
+            out.extend(snapshot[i:])
+            self._queue = collections.deque(
+                sorted(out + requeued, key=self._qkey))
+            raise
+        self._queue = collections.deque(
+            sorted(out + requeued, key=self._qkey))
 
     def _admit_many(self, admissions: List[Tuple[Request, int]],
                     now: float) -> None:
@@ -927,9 +1543,13 @@ class ServingScheduler:
             st.tokens = [first[i]]
             st.count = 1
             st.admitted_at = now
+            st.preempts = 0
+            self._seq += 1
+            st.seq = self._seq
 
     def _finalize(self, slot: int, now: float, results: List[RequestResult],
-                  acc_h=None, drafted_h=None) -> None:
+                  acc_h=None, drafted_h=None,
+                  reason: Optional[CancelReason] = None) -> None:
         st = self._slots[slot]
         req = st.request
         # accept/draft counters only exist for slots that really ran
@@ -949,10 +1569,13 @@ class ServingScheduler:
             finished_at=now,
             accepted=int(acc_h[slot]) if spec_on else None,
             drafted=int(drafted_h[slot]) if spec_on else None,
+            cancel_reason=reason,
+            preemptions=st.preempts,
         ))
         st.request = None
         st.tokens = []
         st.count = 0
+        st.preempts = 0
         if self._paged_kv:
             # free-on-eos: every page (and the reservation) returns to
             # the pool the moment the slot finalizes
@@ -975,7 +1598,7 @@ class ServingScheduler:
         for r in requests or ():
             self.submit(r)
         self._queue = collections.deque(
-            sorted(self._queue, key=lambda r: r.arrival_time))
+            sorted(self._queue, key=self._qkey))
         self._ensure_state()
         if self._chunk_fn is None:
             self._chunk_fn = (self._build_spec_chunk_fn() if self.speculative
@@ -984,85 +1607,126 @@ class ServingScheduler:
         results: List[RequestResult] = []
         occupancy: List[Tuple[float, int]] = []
         deferrals: Dict[str, int] = {}
+        rejected: List[Rejected] = []
+        slow: set = set()
         chunks = 0
-        t0 = time.perf_counter()
+        step = 0
+        self._backoff.clear()
+        self._retry_at.clear()
+        self._cancelled.clear()
+        self._last_block = None
+        self._n_preempt = 0
+        self._n_resume = 0
+        plan = self._fault_plan
+        straggler = StragglerDetector(threshold=self._straggler_threshold,
+                                      patience=2)
+        # retries for injected pre-dispatch faults (dispatch_error,
+        # chunk-boundary extend hit by an armed allocator fault): the
+        # fault fires BEFORE any buffer donation, so state is intact
+        # and the retried chunk emits identical tokens
+        dispatch_policy = RestartPolicy(
+            max_restarts=self._dispatch_retries, window_s=float("inf"),
+            base_backoff_s=self._backoff_base,
+            max_backoff_s=self._backoff_max, clock=self._clock)
+        dispatch_fault = False
+        t0 = self._clock()
 
         def now() -> float:
-            return time.perf_counter() - t0
+            skew = plan.skew if plan is not None else 0.0
+            return self._clock() - t0 + skew
 
-        def try_pop(blocked_box: List[Optional[str]]) -> bool:
-            """Pop the queue head into a slot (plus its pages in paged
-            mode) if everything it needs is available; otherwise record
-            WHY it was deferred and leave all allocators untouched."""
-            if not self._free:
-                blocked_box[0] = "no_slot"
-                return False
-            req = self._queue[0]
-            bucket = self._bucket_for(len(req.prompt))
-            self._check_fits(req, bucket)     # never-fits raises here
-            if self._paged_kv and not self._pages_available(req, bucket):
-                blocked_box[0] = "no_pages"
-                return False
-            self._queue.popleft()
-            slot = self._free.pop()
-            if self._paged_kv:
-                self._reserve_pages(req, bucket, slot)
-            pending.append((req, slot))
-            return True
+        # backoff disabled (the legacy spin-retry configuration)?
+        legacy = self._admit_retries is None and self._backoff_base == 0.0
 
         while self._queue or len(self._free) < self.capacity:
-            # admission: continuous refills freed slots every chunk
-            # boundary; drain is textbook static batching — it waits
-            # for ALL slots to free, then for a full batch's worth of
-            # arrivals (or the queue tail), and admits them at once.
-            # Either way the admissible set is grouped into batch-k
-            # prefill dispatches (_admit_many).
+            now_t = now()
+            # fault-plan actions for this boundary fire exactly once —
+            # a boundary retried after an injected dispatch failure
+            # does not re-fire them
+            if plan is not None:
+                for kind, arg in plan.take(step):
+                    if kind == "cancel":
+                        self.cancel(arg)
+                    elif kind == "preempt":
+                        self._force_preempt(arg)
+                    elif kind == "clock_skew":
+                        plan.skew += float(arg)
+                    elif kind == "pool_exhausted":
+                        if self._alloc is not None:
+                            self._alloc.inject_fault()
+                    elif kind == "dispatch_error":
+                        dispatch_fault = True
+                now_t = now()
+            step += 1
+            # cancellation/deadline sweep over active slots, then the
+            # queue walk: admission — continuous refills freed slots at
+            # every boundary; drain is textbook static batching (waits
+            # for ALL slots free plus a full batch's worth of arrivals)
+            # but still resolves queued cancels/deadlines in between.
+            self._sweep_active(now_t, results)
             pending: List[Tuple[Request, int]] = []
-            blocked: List[Optional[str]] = [None]
+            self._last_block = None
             if self.admission == "continuous":
-                while (self._queue
-                       and self._queue[0].arrival_time <= now()):
-                    if not try_pop(blocked):
-                        break
-            elif len(self._free) == self.capacity and self._queue:
-                need = min(self.capacity, len(self._queue))
-                nth_arrival = list(self._queue)[need - 1].arrival_time
-                if nth_arrival <= now():
-                    for _ in range(need):
-                        if not try_pop(blocked):
-                            break
-            if blocked[0] is not None:
-                deferrals[blocked[0]] = deferrals.get(blocked[0], 0) + 1
+                self._admission_scan(now_t, results, deferrals, rejected,
+                                     pending)
+            else:
+                limit = 0
+                if len(self._free) == self.capacity and self._queue:
+                    need = min(self.capacity, len(self._queue))
+                    if list(self._queue)[need - 1].arrival_time <= now_t:
+                        limit = need
+                self._admission_scan(now_t, results, deferrals, rejected,
+                                     pending, limit=limit)
             if pending:
                 self._admit_many(pending, now())
             active = self.capacity - len(self._free)
             if active == 0:
-                if blocked[0] == "no_pages":
+                if not self._queue:
+                    continue               # loop condition exits
+                if (self._last_block == "no_pages" and legacy
+                        and plan is None):
                     # nothing in flight can ever free a page: refusing
                     # loudly beats spinning (reservation accounting
                     # makes this unreachable unless state is corrupt —
-                    # _check_fits already rejects never-fits requests)
+                    # _check_fits already rejects never-fits requests;
+                    # with backoff enabled the retry budget resolves it
+                    # to Rejected instead)
                     raise PoolExhausted(
                         "page pool exhausted with zero active slots — "
                         "cannot make progress")
-                # idle: sleep up to the next admissible arrival
-                if self.admission == "continuous":
-                    target = self._queue[0].arrival_time
-                else:
-                    need = min(self.capacity, len(self._queue))
-                    target = list(self._queue)[need - 1].arrival_time
+                # idle: sleep up to the next admissible arrival or
+                # backoff-retry time
+                target = min(
+                    max(r.arrival_time,
+                        self._retry_at.get(r.request_id, 0.0))
+                    for r in self._queue)
                 wait = target - now()
                 if wait > 0:
-                    time.sleep(min(wait, 0.01))
+                    self._sleep(min(wait, 0.01))
                 continue
-            if self._paged_kv:
-                # map pages for every write the next dispatch can make,
-                # then mirror the block tables to the device
-                self._extend_pages()
-                d0 = self._dev
-                d0["cache"]["bt"] = jnp.asarray(self._alloc.table)
-                if self.speculative:
-                    d0["dcache"]["bt"] = jnp.asarray(self._dalloc.table)
+            t_chunk = self._clock()
+            try:
+                if dispatch_fault:
+                    dispatch_fault = False
+                    raise InjectedFault("injected dispatch failure")
+                if self._paged_kv:
+                    # map pages for every write the next dispatch can
+                    # make, then mirror the block tables to the device
+                    self._extend_pages()
+                    d0 = self._dev
+                    d0["cache"]["bt"] = jnp.asarray(self._alloc.table)
+                    if self.speculative:
+                        d0["dcache"]["bt"] = jnp.asarray(self._dalloc.table)
+            except (InjectedFault, PoolExhausted):
+                # pre-dispatch failure: nothing was donated, state is
+                # intact — back off and retry the boundary (extend is
+                # idempotent: already-covered slots are no-ops)
+                delay = dispatch_policy.on_failure()
+                if delay is None:
+                    raise
+                if delay > 0:
+                    self._sleep(delay)
+                continue
             occupancy.append((now(), active))
             d = self._dev
             acc_h = drafted_h = None
@@ -1086,6 +1750,12 @@ class ServingScheduler:
             done_h = np.asarray(d["done"])
             ngen_h = np.asarray(d["n_gen"])
             toks_h = np.asarray(toks)
+            # per-chunk dispatch wall-time (the np.asarray sync above
+            # blocks on the dispatch) -> straggler detection: chunks
+            # persistently slower than the run median get flagged
+            straggler.record(f"c{chunks - 1}", self._clock() - t_chunk)
+            for h in straggler.stragglers():
+                slow.add(int(h[1:]))
             if self.speculative and any(
                     done_h[s] for s in range(self.capacity)
                     if self._slots[s].request is not None):
@@ -1118,4 +1788,6 @@ class ServingScheduler:
                          if r.accepted is not None),
             drafted=sum(r.drafted for r in results
                         if r.drafted is not None),
-            deferrals=deferrals)
+            deferrals=deferrals, rejected=rejected,
+            preemptions=self._n_preempt, resumes=self._n_resume,
+            slow_chunks=sorted(slow))

@@ -45,6 +45,20 @@ scheduler threads the identical derivation through its slots, so a
 sampled speculative scheduler slot reproduces the token stream of a
 batch-1 ``engine.generate_speculative`` call with the same key.
 
+That per-slot round counter is also what makes speculative slots
+PREEMPTIBLE: the scheduler's save/restore path (``preemption=
+"save_restore"``) checkpoints each slot's stream key together with its
+round counter and accept/draft accounting, and pages both the TARGET
+and the DRAFT KV pools through the same block-table snapshot.  Because
+preemption only happens at chunk boundaries — never mid-round — a
+restored slot's next round folds the same (key, round) pair it would
+have folded uninterrupted, so a preempted-and-resumed sampled
+speculative request emits the bit-identical token stream.  Nothing in
+this module needs to know about preemption; the contract it must hold
+is only that all cross-round state lives in (cache, cur, done,
+n_emitted, out, round counter), which the round function above already
+guarantees.
+
 The per-round device program is: one scanned draft pass (k+1 draft
 decode steps — the extra step seats the last proposal's k/v for the
 all-accept case), one target verify dispatch, and pure-jnp accept /

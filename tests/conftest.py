@@ -25,6 +25,29 @@ import pytest  # noqa: E402
 PROMPT_LEN = 12
 
 
+class FakeClock:
+    """Deterministic injectable clock shared by every robustness test
+    (fault_tolerance components AND the scheduler's admission backoff):
+    time only moves when advanced, so no test sleeps on wall-clock."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, seconds: float) -> None:
+        self.t += float(seconds)
+
+    # drop-in for the scheduler's sleep_fn: sleeping IS advancing
+    sleep = advance
+
+
+@pytest.fixture
+def fake_clock():
+    return FakeClock()
+
+
 @pytest.fixture(scope="session")
 def tiny():
     """(cfg, model, params, calib, prompts): random-init tiny LM with

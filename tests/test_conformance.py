@@ -12,7 +12,10 @@ The ``paged_scheduler`` column runs the SAME request mix through both
 cache modes at one page-aligned ``cache_len`` and asserts the paged
 run equals the contiguous run request-for-request (token arrays, not
 just the engine reference) — the block-table refactor must be
-invisible in the output.
+invisible in the output.  The ``preempt_scheduler`` column forces an
+eviction at a chunk boundary (paged save/restore, ISSUE 6) and holds
+the same engine-reference bit-identity: preemption must be invisible
+too.
 
 The reference stream for every (family, compression) cell is the
 single-dispatch engine's batch-1 greedy generation; the engine cell
@@ -31,17 +34,18 @@ from repro.configs.base import get_smoke_config
 from repro.launch.serve import compress_generic
 from repro.models.model import build_model
 from repro.runtime.engine import GenerationEngine
-from repro.runtime.scheduler import Request, ServingScheduler
+from repro.runtime.scheduler import FaultPlan, Request, ServingScheduler
 
 FAMILIES = ("transformer", "encdec", "mamba2", "hybrid")
 COMPRESSIONS = ("dense", "pifa", "ns")
 RUNTIMES = ("engine", "scheduler", "spec_engine", "spec_scheduler",
-            "paged_scheduler")
+            "paged_scheduler", "preempt_scheduler")
 # combos that must REFUSE loudly (asserted below, never skipped):
 # enc-dec prefill needs frames, which the token-queue scheduler cannot
 # carry — all scheduler runtimes raise at construction.
 UNSUPPORTED = {("encdec", "scheduler"), ("encdec", "spec_scheduler"),
-               ("encdec", "paged_scheduler")}
+               ("encdec", "paged_scheduler"),
+               ("encdec", "preempt_scheduler")}
 PAGE_SIZE = 4
 
 ARCHS = {"encdec": "whisper_medium", "mamba2": "mamba2_2p7b",
@@ -192,7 +196,9 @@ def test_greedy_conformance(zoo, family, comp, runtime):
     """Every supported (family, compression, runtime) cell emits the
     reference greedy stream bit-for-bit; unsupported cells raise."""
     if (family, runtime) in UNSUPPORTED:
-        kw = {"cache": "paged"} if runtime == "paged_scheduler" else {}
+        kw = {}
+        if runtime in ("paged_scheduler", "preempt_scheduler"):
+            kw["cache"] = "paged"
         with pytest.raises(ValueError, match="frames"):
             _run_scheduler(zoo, family, comp,
                            speculative=runtime == "spec_scheduler", **kw)
@@ -234,6 +240,19 @@ def test_greedy_conformance(zoo, family, comp, runtime):
             assert np.array_equal(r.tokens, contig[r.request_id]), (
                 f"{family}/{comp}: paged diverged from contiguous")
         run = run_p
+    elif runtime == "preempt_scheduler":
+        # forced eviction at boundary 1 + paged save/restore
+        # re-admission: the interruption must be invisible — the same
+        # engine-reference bit-identity as every other scheduler cell,
+        # plus the run must actually have preempted and resumed
+        cache_len = 16 + max(BUDGETS) + PAGE_SIZE
+        cache_len -= cache_len % PAGE_SIZE
+        run = _run_scheduler(zoo, family, comp, speculative=False,
+                             cache="paged", page_size=PAGE_SIZE,
+                             cache_len=cache_len,
+                             preemption="save_restore",
+                             fault_plan=FaultPlan().at(1, "preempt", 0))
+        assert run.preemptions >= 1 and run.resumes >= 1
     else:
         # scheduler / spec_scheduler: every request bit-identical to
         # the batch-1 engine reference

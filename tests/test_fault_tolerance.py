@@ -1,21 +1,18 @@
-"""Heartbeats, straggler detection, restart backoff (runtime/)."""
+"""Heartbeats, straggler detection, restart backoff, fault plans
+(runtime/).  Every component runs against the shared ``fake_clock``
+fixture (conftest.py) — the same injectable clock the scheduler's
+admission backoff uses — so no robustness test sleeps on wall-clock
+time."""
 import pytest
 
 from repro.runtime.elastic import plan_mesh
-from repro.runtime.fault_tolerance import (HeartbeatRegistry, RestartPolicy,
+from repro.runtime.fault_tolerance import (FaultPlan, HeartbeatRegistry,
+                                           InjectedFault, RestartPolicy,
                                            StragglerDetector)
 
 
-class FakeClock:
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
-
-
-def test_heartbeat_detects_dead_host():
-    clock = FakeClock()
+def test_heartbeat_detects_dead_host(fake_clock):
+    clock = fake_clock
     hb = HeartbeatRegistry(timeout_s=10, clock=clock)
     for h in ("h0", "h1", "h2"):
         hb.beat(h)
@@ -52,8 +49,8 @@ def test_straggler_single_spike_not_flagged():
     assert sd.stragglers() == []
 
 
-def test_restart_backoff_and_budget():
-    clock = FakeClock()
+def test_restart_backoff_and_budget(fake_clock):
+    clock = fake_clock
     rp = RestartPolicy(max_restarts=3, window_s=100, base_backoff_s=1,
                        max_backoff_s=8, clock=clock)
     assert rp.on_failure() == 1
@@ -62,6 +59,42 @@ def test_restart_backoff_and_budget():
     assert rp.on_failure() is None       # budget exhausted
     clock.t = 200                        # window expired: budget refills
     assert rp.on_failure() == 1
+
+
+def test_fault_plan_actions_fire_once():
+    plan = (FaultPlan().at(2, "cancel", 7).at(2, "clock_skew", 1.5)
+            .at(5, "dispatch_error"))
+    assert plan.pending() == 3
+    assert plan.take(0) == []
+    acts = plan.take(2)
+    assert ("cancel", 7) in acts and ("clock_skew", 1.5) in acts
+    assert plan.take(2) == []          # a retried boundary won't re-fire
+    assert plan.take(5) == [("dispatch_error", None)]
+    assert plan.pending() == 0
+    assert [(s, k) for s, k, _ in plan.fired] == [(2, "cancel"),
+                                                  (2, "clock_skew"),
+                                                  (5, "dispatch_error")]
+    with pytest.raises(ValueError):
+        plan.at(0, "meteor_strike")
+    assert isinstance(InjectedFault("x"), RuntimeError)
+
+
+def test_allocator_fault_injection():
+    from repro.runtime.paging import PageAllocator, PoolExhausted
+    alloc = PageAllocator(num_pages=8, page_size=4, capacity=2, n_logical=4)
+    alloc.inject_fault()
+    with pytest.raises(PoolExhausted):
+        alloc.admit(0, 4, 8)
+    # armed fault consumed; state untouched — the same call now works
+    alloc.admit(0, 4, 8)
+    alloc.check_invariants()
+    alloc.inject_fault()
+    with pytest.raises(PoolExhausted):
+        alloc.extend(0, 8)
+    alloc.extend(0, 8)
+    alloc.check_invariants()
+    alloc.free(0)
+    assert alloc.free_pages == 8
 
 
 def test_elastic_plan_shrink_grow():

@@ -1,0 +1,459 @@
+"""Preemptible, deadline-aware serving (ISSUE 6).
+
+The acceptance bar: preempt-and-resume must be INVISIBLE in the token
+stream.  A request evicted at a chunk boundary via the paged
+save/restore path and re-admitted later emits bit-identical tokens to
+an uninterrupted run — across {transformer, mamba2, hybrid} x
+{dense, pifa, ns} and for speculative slots (greedy and sampled).
+Around that core: priority preemption under slot pressure,
+mid-flight cancellation and deadlines (pages freed immediately),
+bounded-backoff backpressure whose rejections PARTITION the submitted
+set, FIFO-within-priority (no starvation), and a fault-injection
+harness whose interleavings never leak pages or corrupt untouched
+requests.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.launch.serve import compress_generic
+from repro.models.model import build_model
+from repro.runtime.scheduler import (CancelReason, FaultPlan, Request,
+                                     ServingScheduler)
+
+PAGE_SIZE = 4
+ARCHS = {"mamba2": "mamba2_2p7b", "hybrid": "zamba2_1p2b"}
+
+
+def _mk_reqs(cfg, n, seed=0, max_new=6, lens=None, **kw):
+    rng = np.random.default_rng(seed)
+    lens = lens or [6 + (i % 3) for i in range(n)]
+    return [Request(request_id=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(lens[i])).astype(np.int32),
+                    max_new=max_new, **kw)
+            for i in range(n)]
+
+
+def _tokens(run):
+    return {r.request_id: r.tokens.tolist() for r in run.results}
+
+
+def _assert_pool_clean(sched):
+    """Zero page leaks / aliasing after the drain."""
+    if getattr(sched, "_alloc", None) is not None:
+        sched._alloc.check_invariants()
+        assert sched._alloc.free_pages == sched._alloc.num_pages
+    if getattr(sched, "_dalloc", None) is not None:
+        sched._dalloc.check_invariants()
+        assert sched._dalloc.free_pages == sched._dalloc.num_pages
+
+
+# ------------------------------------------------- save/restore identity
+
+class _PreemptZoo:
+    """Lazy (family, comp) model/params cache for the identity matrix."""
+
+    def __init__(self, tiny, tiny_pifa, tiny_ns):
+        self._tiny = tiny
+        self._tp = {"dense": tiny[2], "pifa": tiny_pifa, "ns": tiny_ns}
+        self._base = {}
+        self._params = {}
+
+    def base(self, family):
+        if family == "transformer":
+            return self._tiny[0], self._tiny[1]
+        if family not in self._base:
+            cfg = get_smoke_config(ARCHS[family])
+            self._base[family] = (cfg, build_model(cfg))
+        return self._base[family]
+
+    def params_for(self, family, comp):
+        if family == "transformer":
+            return self._tp[comp]
+        key = (family, comp)
+        if key not in self._params:
+            cfg, model = self.base(family)
+            if comp == "dense":
+                p = model.init(jax.random.PRNGKey(0))
+            elif comp == "pifa":
+                p = compress_generic(model,
+                                     model.init(jax.random.PRNGKey(0)), 0.6)
+            else:
+                p = compress_generic(model,
+                                     model.init(jax.random.PRNGKey(0)), 0.6,
+                                     per_block=(0.45, 0.7))
+            self._params[key] = p
+        return self._params[key]
+
+
+@pytest.fixture(scope="module")
+def pzoo(tiny, tiny_pifa, tiny_ns):
+    return _PreemptZoo(tiny, tiny_pifa, tiny_ns)
+
+
+@pytest.mark.parametrize("comp", ["dense", "pifa", "ns"])
+@pytest.mark.parametrize("family", ["transformer", "mamba2", "hybrid"])
+def test_preempt_resume_bit_identity(pzoo, family, comp):
+    """Forced eviction + paged save/restore re-admission reproduces the
+    uninterrupted paged run token-for-token, with zero page leaks."""
+    cfg, model = pzoo.base(family)
+    params = pzoo.params_for(family, comp)
+    reqs = _mk_reqs(cfg, 2, seed=11)
+
+    def serve(plan):
+        sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                                 prompt_buckets=(16,), cache_len=32,
+                                 cache="paged", page_size=PAGE_SIZE,
+                                 preemption="save_restore",
+                                 fault_plan=plan)
+        run = sched.run(list(reqs))
+        _assert_pool_clean(sched)
+        return run
+
+    ref = _tokens(serve(None))
+    run = serve(FaultPlan().at(1, "preempt", 0))
+    assert run.preemptions >= 1 and run.resumes >= 1
+    victim = next(r for r in run.results if r.request_id == 0)
+    assert victim.preemptions >= 1 and victim.cancel_reason is None
+    got = _tokens(run)
+    for rid, toks in ref.items():
+        assert got[rid] == toks, (
+            f"{family}/{comp}: request {rid} diverged across "
+            "preempt/resume")
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_preempt_resume_speculative(tiny, tiny_draft, temperature):
+    """Speculative slots page BOTH pools through save/restore: a
+    preempted spec request (greedy and sampled) resumes its round
+    counter and key stream bit-identically."""
+    cfg, model, params = tiny[:3]
+    reqs = _mk_reqs(cfg, 2, seed=5, max_new=6)
+
+    def serve(plan):
+        sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                                 prompt_buckets=(16,), cache_len=32,
+                                 cache="paged", page_size=PAGE_SIZE,
+                                 draft_params=tiny_draft, spec_k=2,
+                                 temperature=temperature, sample_seed=3,
+                                 preemption="save_restore",
+                                 fault_plan=plan)
+        run = sched.run(list(reqs))
+        _assert_pool_clean(sched)
+        return run
+
+    ref = _tokens(serve(None))
+    run = serve(FaultPlan().at(1, "preempt", 0))
+    assert run.preemptions >= 1 and run.resumes >= 1
+    assert _tokens(run) == ref
+    assert run.drafted > 0
+
+
+def test_recompute_preemption_contiguous(tiny, engine):
+    """Contiguous caches preempt via save-prefix-and-recompute: the
+    resumed request re-prefills prompt+prefix and continues the same
+    greedy stream."""
+    cfg, model, params = tiny[:3]
+    reqs = _mk_reqs(cfg, 4, seed=7, max_new=8)
+
+    def serve(plan, preemption="off"):
+        sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                                 prompt_buckets=(16,), cache_len=32,
+                                 preemption=preemption, fault_plan=plan)
+        return sched.run(list(reqs))
+
+    ref = _tokens(serve(None))
+    run = serve(FaultPlan().at(1, "preempt", 0), preemption="recompute")
+    assert run.preemptions >= 1 and run.resumes >= 1
+    assert _tokens(run) == ref
+
+
+def test_mode_cache_pairing_refusals(tiny):
+    """save_restore without a paged cache (and recompute WITH one)
+    refuse loudly at construction — never a silent fallback."""
+    cfg, model, params = tiny[:3]
+    with pytest.raises(ValueError, match="save_restore"):
+        ServingScheduler(model, params, preemption="save_restore")
+    with pytest.raises(ValueError, match="recompute"):
+        ServingScheduler(model, params, cache="paged",
+                         page_size=PAGE_SIZE, preemption="recompute")
+    with pytest.raises(ValueError, match="preemption"):
+        ServingScheduler(model, params, preemption="sometimes")
+
+
+# ------------------------------------------------------------- priority
+
+def test_priority_preemption_under_pressure(tiny):
+    """A higher-priority latecomer evicts the lowest-priority victim at
+    a chunk boundary; the victim resumes and still completes its full
+    budget."""
+    cfg, model, params = tiny[:3]
+    lows = _mk_reqs(cfg, 2, seed=3, max_new=24)
+    high = _mk_reqs(cfg, 1, seed=4, max_new=4)[0]
+    # arrive after the first boundary (compile dominates chunk 1) but
+    # well before the lows finish their 24-token budgets
+    high = Request(request_id=10, prompt=high.prompt, max_new=4,
+                   arrival_time=0.05, priority=1)
+    sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                             prompt_buckets=(16,), cache_len=48,
+                             cache="paged", page_size=PAGE_SIZE,
+                             preemption="save_restore")
+    run = sched.run(lows + [high])
+    assert run.preemptions >= 1 and run.resumes >= 1
+    by_id = {r.request_id: r for r in run.results}
+    assert by_id[10].generated == 4
+    assert by_id[10].preemptions == 0           # the high class never waits
+    assert all(by_id[i].generated == 24 for i in (0, 1))
+    assert sum(by_id[i].preemptions for i in (0, 1)) >= 1
+    _assert_pool_clean(sched)
+
+
+def test_fifo_within_priority_no_starvation(tiny):
+    """A page-blocked request sets a ceiling for its priority class:
+    later same-priority small arrivals cannot leapfrog it, so a big
+    request admits as soon as pages free instead of starving under a
+    stream of small ones."""
+    cfg, model, params = tiny[:3]
+    rng = np.random.default_rng(9)
+
+    def req(rid, max_new, arrival):
+        return Request(request_id=rid,
+                       prompt=rng.integers(0, cfg.vocab_size,
+                                           6).astype(np.int32),
+                       max_new=max_new, arrival_time=arrival)
+
+    # pool of 10 pages; r0 holds 4 while running; big r1 needs 8 (must
+    # wait for r0); small r2/r3 need 4 each (would fit immediately)
+    reqs = [req(0, 10, 0.0), req(1, 24, 1e-5), req(2, 4, 2e-5),
+            req(3, 4, 3e-5)]
+    sched = ServingScheduler(model, params, capacity=3, chunk=2,
+                             prompt_buckets=(16,), cache_len=48,
+                             cache="paged", page_size=PAGE_SIZE,
+                             num_pages=10)
+    run = sched.run(reqs)
+    by_id = {r.request_id: r for r in run.results}
+    assert sorted(by_id) == [0, 1, 2, 3]        # nobody starves
+    assert all(by_id[i].generated == reqs[i].max_new for i in by_id)
+    # FIFO within the class: the blocked big request admits first
+    assert by_id[1].admitted_at <= by_id[2].admitted_at
+    assert by_id[1].admitted_at <= by_id[3].admitted_at
+    _assert_pool_clean(sched)
+
+
+# ---------------------------------------------------- cancel / deadline
+
+def test_cancel_mid_flight_frees_pages(tiny):
+    """A FaultPlan cancel lands at the next chunk boundary: the result
+    carries CANCELLED with the tokens emitted so far, and the freed
+    slot + pages serve the rest of the queue."""
+    cfg, model, params = tiny[:3]
+    reqs = _mk_reqs(cfg, 4, seed=0, max_new=12)
+    sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                             prompt_buckets=(16,), cache_len=32,
+                             cache="paged", page_size=PAGE_SIZE,
+                             fault_plan=FaultPlan().at(1, "cancel", 1))
+    run = sched.run(reqs)
+    by_id = {r.request_id: r for r in run.results}
+    assert sorted(by_id) == [0, 1, 2, 3]
+    assert by_id[1].cancel_reason is CancelReason.CANCELLED
+    assert 0 < by_id[1].generated < 12
+    assert all(by_id[i].cancel_reason is None and by_id[i].generated == 12
+               for i in (0, 2, 3))
+    _assert_pool_clean(sched)
+
+
+def test_cancel_queued_request(tiny):
+    """Cancelling a not-yet-admitted request resolves it from the queue
+    (slot -1, zero generated) without disturbing the others."""
+    cfg, model, params = tiny[:3]
+    reqs = _mk_reqs(cfg, 3, seed=2, max_new=6)
+    sched = ServingScheduler(model, params, capacity=1, chunk=2,
+                             prompt_buckets=(16,), cache_len=32,
+                             fault_plan=FaultPlan().at(0, "cancel", 2))
+    run = sched.run(reqs)
+    by_id = {r.request_id: r for r in run.results}
+    assert by_id[2].cancel_reason is CancelReason.CANCELLED
+    assert by_id[2].generated == 0 and by_id[2].slot == -1
+    assert all(by_id[i].generated == 6 for i in (0, 1))
+
+
+def test_deadline_exceeded(tiny):
+    """Deadlines are checked at chunk boundaries against arrival time:
+    an expired request finishes early with DEADLINE, budget untouched
+    requests run to completion."""
+    cfg, model, params = tiny[:3]
+    reqs = _mk_reqs(cfg, 2, seed=6, max_new=16)
+    reqs[0] = Request(request_id=0, prompt=reqs[0].prompt, max_new=16,
+                      deadline_s=0.0)
+    sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                             prompt_buckets=(16,), cache_len=48)
+    run = sched.run(reqs)
+    by_id = {r.request_id: r for r in run.results}
+    assert by_id[0].cancel_reason is CancelReason.DEADLINE
+    assert by_id[0].generated < 16
+    assert by_id[1].cancel_reason is None and by_id[1].generated == 16
+
+
+# -------------------------------------------------------- backpressure
+
+def test_backpressure_partition_no_slot(tiny):
+    """Bounded admission retries: every submitted request ends EITHER
+    completed OR Rejected (disjoint, exhaustive) when slots stay
+    scarce."""
+    cfg, model, params = tiny[:3]
+    reqs = _mk_reqs(cfg, 3, seed=1, max_new=8)
+    sched = ServingScheduler(model, params, capacity=1, chunk=2,
+                             prompt_buckets=(16,), cache_len=32,
+                             admit_retries=1)
+    run = sched.run(reqs)
+    done = {r.request_id for r in run.results}
+    rej = {r.request_id for r in run.rejected}
+    assert done | rej == {0, 1, 2} and not (done & rej)
+    assert rej, "expected at least one bounded-backoff rejection"
+    assert all(r.reason == "no_slot" and r.attempts >= 1
+               for r in run.rejected)
+
+
+def test_backpressure_partition_no_pages(tiny):
+    """The same partition property under PAGE scarcity: a pool too
+    small for the full mix rejects the overflow with reason no_pages
+    and leaks nothing."""
+    cfg, model, params = tiny[:3]
+    reqs = _mk_reqs(cfg, 4, seed=8, max_new=8, lens=[6, 6, 6, 6])
+    # each request reserves max(16, 14) = 16 tokens -> 4 pages; a pool
+    # of 6 pages serves exactly one at a time through 2 free slots
+    sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                             prompt_buckets=(16,), cache_len=32,
+                             cache="paged", page_size=PAGE_SIZE,
+                             num_pages=6, admit_retries=1)
+    run = sched.run(reqs)
+    done = {r.request_id for r in run.results}
+    rej = {r.request_id for r in run.rejected}
+    assert done | rej == {0, 1, 2, 3} and not (done & rej)
+    assert any(r.reason == "no_pages" for r in run.rejected)
+    _assert_pool_clean(sched)
+
+
+def test_backoff_honored_with_fake_clock(tiny, fake_clock):
+    """Admission backoff consults the injected clock: a deferred
+    request is not retried before its backoff expires, and time only
+    moves when the (injected) sleep advances it."""
+    cfg, model, params = tiny[:3]
+    reqs = _mk_reqs(cfg, 2, seed=4, max_new=4)
+    sched = ServingScheduler(model, params, capacity=1, chunk=2,
+                             prompt_buckets=(16,), cache_len=32,
+                             backoff_base_s=0.05, clock=fake_clock,
+                             sleep_fn=fake_clock.sleep)
+    run = sched.run(reqs)
+    by_id = {r.request_id: r for r in run.results}
+    assert sorted(by_id) == [0, 1]
+    assert by_id[1].admitted_at >= 0.05         # waited out the backoff
+    assert not run.rejected                     # budget was unbounded
+
+
+def test_preempted_unresumed_returns_partial(tiny, engine):
+    """A victim whose re-admission retry budget exhausts is resolved
+    with PREEMPTED_UNRESUMED carrying the tokens generated before
+    eviction — a true prefix of its uninterrupted stream."""
+    import jax.numpy as jnp
+    cfg, model, params = tiny[:3]
+    low = _mk_reqs(cfg, 1, seed=12, max_new=8)[0]
+    high = Request(request_id=1,
+                   prompt=np.asarray(low.prompt, np.int32), max_new=16,
+                   arrival_time=0.05, priority=1)
+    sched = ServingScheduler(model, params, capacity=1, chunk=2,
+                             prompt_buckets=(16,), cache_len=48,
+                             cache="paged", page_size=PAGE_SIZE,
+                             preemption="save_restore",
+                             admit_retries=1, backoff_base_s=1e-6)
+    run = sched.run([low, high])
+    by_id = {r.request_id: r for r in run.results}
+    assert by_id[1].generated == 16             # the high class finished
+    r0 = by_id[0]
+    assert r0.cancel_reason is CancelReason.PREEMPTED_UNRESUMED
+    assert 0 < r0.generated < 8 and r0.preemptions >= 1
+    ref = np.asarray(engine.generate(
+        params, jnp.asarray(low.prompt[None, :]), 8).tokens[0])
+    n = r0.prompt_len + r0.generated
+    assert np.array_equal(r0.tokens[:n], ref[:n])
+    _assert_pool_clean(sched)
+
+
+# ------------------------------------------------------ fault injection
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fault_interleaving_preserves_everything(tiny, seed):
+    """Randomized FaultPlan interleavings (allocator faults, dispatch
+    errors, clock skew, forced preemptions) across chunk boundaries:
+    every request still completes with the fault-free token stream,
+    and the page pool comes back whole — no leaks, no aliasing."""
+    cfg, model, params = tiny[:3]
+    reqs = _mk_reqs(cfg, 4, seed=20, max_new=6)
+
+    def serve(plan):
+        sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                                 prompt_buckets=(16,), cache_len=32,
+                                 cache="paged", page_size=PAGE_SIZE,
+                                 preemption="save_restore",
+                                 fault_plan=plan)
+        run = sched.run(list(reqs))
+        _assert_pool_clean(sched)
+        return run
+
+    ref = _tokens(serve(None))
+    rng = np.random.default_rng(seed)
+    plan = FaultPlan()
+    n_dispatch = 0
+    for step in sorted(rng.choice(np.arange(1, 7), size=3, replace=False)):
+        kind = rng.choice(["pool_exhausted", "dispatch_error",
+                           "clock_skew", "preempt"])
+        if kind == "dispatch_error":
+            if n_dispatch >= 2:          # stay under the retry budget
+                kind = "pool_exhausted"
+            else:
+                n_dispatch += 1
+        arg = {"clock_skew": 1e-3, "preempt": int(rng.integers(0, 4)),
+               "pool_exhausted": None, "dispatch_error": None}[kind]
+        plan.at(int(step), kind, arg)
+    run = serve(plan)
+    assert _tokens(run) == ref, f"seed {seed}: faults corrupted a stream"
+    done = {r.request_id for r in run.results}
+    assert done == {0, 1, 2, 3} and not run.rejected
+    assert all(r.cancel_reason is None for r in run.results)
+
+
+def test_mid_admission_allocator_fault_leaves_state_intact(tiny):
+    """An allocator fault injected DURING admission hands back the slot
+    and any partial pages: the request stays deferred (not lost) and
+    admits cleanly on a later boundary."""
+    cfg, model, params = tiny[:3]
+    reqs = _mk_reqs(cfg, 3, seed=15, max_new=6)
+    plan = FaultPlan().at(0, "pool_exhausted").at(1, "pool_exhausted")
+    sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                             prompt_buckets=(16,), cache_len=32,
+                             cache="paged", page_size=PAGE_SIZE,
+                             fault_plan=plan)
+    run = sched.run(reqs)
+    assert sorted(r.request_id for r in run.results) == [0, 1, 2]
+    assert all(r.generated == 6 for r in run.results)
+    assert run.deferrals.get("no_pages", 0) >= 1   # the faults surfaced
+    assert plan.pending() == 0
+    _assert_pool_clean(sched)
+
+
+def test_slow_chunk_flagging(tiny):
+    """Per-chunk dispatch wall-times feed the straggler detector; a
+    threshold of ~0 flags chunks, the default does not flood (at most
+    the compile chunk)."""
+    cfg, model, params = tiny[:3]
+    reqs = _mk_reqs(cfg, 2, seed=30, max_new=8)
+    sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                             prompt_buckets=(16,), cache_len=32,
+                             straggler_threshold=1e-9)
+    run = sched.run(reqs)
+    assert run.chunks >= 2
+    # an absurdly low threshold flags steady-state chunks too
+    assert len(run.slow_chunks) >= 1
+    assert all(0 <= c < run.chunks for c in run.slow_chunks)
