@@ -268,6 +268,91 @@ def preemption_sweep(model, params, *, capacity: int = 4, chunk: int = 4,
     return row
 
 
+def recovery_sweep(model, params, *, capacity: int = 4, chunk: int = 4,
+                   page_size: int = 16, n_requests: int = 10,
+                   crash_step: int = 3, snapshot_every: int = 2,
+                   seed: int = 0) -> dict:
+    """Crash recovery: wall-clock recovery time + zero token loss.
+
+    One request mix, three runs: an uninterrupted reference, a journaled
+    run killed by an injected ``SchedulerCrash`` at ``crash_step``, and
+    a recovery (fresh scheduler <- journal + latest snapshot) that
+    drains to completion.  Metrics: recovery time (journal replay +
+    snapshot load + slot restore, before the first resumed dispatch)
+    and the two zero-token-loss bars — every journaled pre-crash token
+    re-emitted identically, and every merged stream bit-equal to the
+    reference.  Both must be zero-mismatch; CI hard-gates on it."""
+    import tempfile
+
+    from repro.runtime.durability import (Durability, finish_recovered,
+                                          recover_into)
+    from repro.runtime.fault_tolerance import FaultPlan, SchedulerCrash
+
+    prompt_len = max(PROMPT_MIX)
+    max_new = 16
+    cache_len = prompt_len + max_new + 1
+    cache_len += (-cache_len) % page_size
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.choice(PROMPT_MIX))
+        budget = min(int(rng.choice(BUDGET_MIX, p=BUDGET_P)), max_new)
+        reqs.append(Request(
+            request_id=i,
+            prompt=rng.integers(0, BENCH_CFG.vocab_size,
+                                plen).astype(np.int32),
+            max_new=budget))
+    kwargs = dict(capacity=capacity, chunk=chunk, cache_len=cache_len,
+                  cache="paged", page_size=page_size)
+
+    ref = ServingScheduler(model, params, **kwargs).run(list(reqs))
+    ref_toks = {r.request_id: r.tokens for r in ref.results}
+
+    crashed = False
+    with tempfile.TemporaryDirectory() as td:
+        dur = Durability(td, snapshot_every=snapshot_every)
+        plan = FaultPlan().at(crash_step, "crash")
+        sched = ServingScheduler(model, params, durability=dur,
+                                 fault_plan=plan, **kwargs)
+        try:
+            sched.run(list(reqs))
+        except SchedulerCrash:
+            crashed = True
+        dur.close()
+
+        dur2 = Durability(td, snapshot_every=snapshot_every)
+        sched2 = ServingScheduler(model, params, durability=dur2,
+                                  **kwargs)
+        info = recover_into(sched2)
+        rec = finish_recovered(sched2, info)
+        dur2.close()
+
+    got = {r.request_id: r.tokens for r in rec.run.results}
+    mismatches = sum(
+        0 if (rid in got and np.array_equal(got[rid], toks)) else 1
+        for rid, toks in ref_toks.items())
+    row = {
+        "requests": n_requests,
+        "crash_step": crash_step,
+        "snapshot_every": snapshot_every,
+        "crashed": crashed,
+        "snapshot_tag": info.snapshot_tag,
+        "restored": len(info.restored),
+        "recomputed": len(info.recomputed),
+        "requeued": len(info.requeued),
+        "recovery_s": round(info.recover_s, 4),
+        "replayed_tokens": rec.replayed,
+        "replay_mismatches": rec.mismatches,
+        "token_mismatches": mismatches,
+        "results": len(rec.run.results),
+    }
+    emit("serving/recovery/time", info.recover_s * 1e6,
+         f"{info.recover_s*1e3:.1f}ms to recover {len(info.restored)} "
+         f"slots + {len(info.requeued)} queued, {rec.replayed} tokens "
+         f"replayed, {mismatches} mismatches")
+    return row
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
@@ -286,6 +371,9 @@ def main(argv=None) -> int:
     ap.add_argument("--preempt-gate-only", action="store_true",
                     help="run only the preemption-under-burst sweep + "
                          "hard gate (the CI fault-injection smoke)")
+    ap.add_argument("--recovery-gate-only", action="store_true",
+                    help="run only the crash-recovery sweep + zero-token-"
+                         "loss hard gate (the CI crash-recovery smoke)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--capacity-gate", type=float, default=1.3,
                     help="minimum paged/contiguous concurrency ratio at "
@@ -327,7 +415,26 @@ def main(argv=None) -> int:
                   f"{row['resumes']} resumes", flush=True)
         return ok
 
-    if args.paged_gate_only or args.preempt_gate_only:
+    def run_recovery_gate(report):
+        row = recovery_sweep(model, params, page_size=args.page_size,
+                             seed=args.seed)
+        report["recovery"] = row
+        # zero token loss is the whole contract: the crash must have
+        # fired, every journaled token must replay identically, and the
+        # merged results must cover every request bit-identically
+        ok = (row["crashed"] and row["replay_mismatches"] == 0
+              and row["token_mismatches"] == 0
+              and row["results"] == row["requests"])
+        if not ok:
+            print(f"[serving_bench] RECOVERY GATE FAILED: crashed="
+                  f"{row['crashed']}, {row['replay_mismatches']} replay "
+                  f"mismatches, {row['token_mismatches']} token "
+                  f"mismatches, {row['results']}/{row['requests']} "
+                  "results", flush=True)
+        return ok
+
+    if (args.paged_gate_only or args.preempt_gate_only
+            or args.recovery_gate_only):
         report = {"config": {"model": BENCH_CFG.name,
                              "page_size": args.page_size,
                              "backend": jax.default_backend(),
@@ -337,9 +444,12 @@ def main(argv=None) -> int:
             ok = run_paged_gate(report)
             print(json.dumps(report["paged_capacity"], indent=2),
                   flush=True)
-        else:
+        elif args.preempt_gate_only:
             ok = run_preempt_gate(report)
             print(json.dumps(report["preemption"], indent=2), flush=True)
+        else:
+            ok = run_recovery_gate(report)
+            print(json.dumps(report["recovery"], indent=2), flush=True)
         return 0 if ok else 1
     requests = make_requests(args.requests, args.rate, BENCH_CFG.vocab_size,
                              args.seed, max(BUDGET_MIX))
@@ -396,6 +506,7 @@ def main(argv=None) -> int:
 
     gate_ok = run_paged_gate(report)
     gate_ok = run_preempt_gate(report) and gate_ok
+    gate_ok = run_recovery_gate(report) and gate_ok
 
     out = Path(args.out)
     out.write_text(json.dumps(report, indent=2) + "\n")

@@ -28,6 +28,7 @@ import os
 import pathlib
 import re
 import threading
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -35,7 +36,47 @@ import numpy as np
 
 Pytree = Any
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "CorruptCheckpoint", "commit_dir", "crc32_file"]
+
+
+class CorruptCheckpoint(RuntimeError):
+    """A committed checkpoint shard's bytes no longer match the CRC32
+    recorded in meta.json at save time — bit rot, a torn write that slipped
+    behind the commit rename, or tampering.  Distinct from IO errors so
+    restore loops can fall back to an older step instead of crashing."""
+
+
+def crc32_file(path: pathlib.Path, chunk: int = 1 << 20) -> int:
+    """CRC32 of a file's bytes, streamed (shards can be large)."""
+    crc = 0
+    with open(path, "rb") as fh:
+        while True:
+            buf = fh.read(chunk)
+            if not buf:
+                break
+            crc = zlib.crc32(buf, crc)
+    return crc & 0xFFFFFFFF
+
+
+def commit_dir(tmp: pathlib.Path, final: pathlib.Path) -> None:
+    """Atomic directory commit: fsync every file in ``tmp``, rename to
+    ``final``, fsync the parent.  The rename is the commit point — a crash
+    at any instant leaves either the previous committed state or the new
+    one, never a torn directory.  Shared by checkpoints and the serving
+    durability snapshots (runtime/durability.py)."""
+    for f in sorted(tmp.iterdir()):
+        if f.is_file():
+            fd = os.open(f, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
+    os.replace(tmp, final)
+    dfd = os.open(final.parent, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
 
 
 def _flatten_with_paths(tree: Pytree) -> List[Tuple[str, Any]]:
@@ -84,9 +125,13 @@ class Checkpointer:
             if final.exists():  # idempotent re-save of the same step
                 return
             tmp.mkdir(parents=True, exist_ok=True)
-            np.savez(tmp / f"shard_{self.process_index:05d}.npz", **host)
+            shard = tmp / f"shard_{self.process_index:05d}.npz"
+            np.savez(shard, **host)
+            # Per-shard CRC of the bytes as written: restore verifies the
+            # file survived the commit rename AND the time on disk intact.
+            meta["shard_crcs"] = {shard.name: crc32_file(shard)}
             (tmp / "meta.json").write_text(json.dumps(meta))
-            os.replace(tmp, final)  # commit point
+            commit_dir(tmp, final)
             self._gc()
 
         self._thread = threading.Thread(target=_write, daemon=True)
@@ -132,8 +177,14 @@ class Checkpointer:
         """
         d = self.dir / f"step_{step:08d}"
         meta = json.loads((d / "meta.json").read_text())
+        crcs = meta.get("shard_crcs", {})  # absent on pre-CRC checkpoints
         host: Dict[str, np.ndarray] = {}
         for shard in sorted(d.glob("shard_*.npz")):
+            want = crcs.get(shard.name)
+            if want is not None and crc32_file(shard) != want:
+                raise CorruptCheckpoint(
+                    f"{shard} fails CRC32 (expected {want:#010x}); refusing "
+                    f"to restore silently-corrupt parameters")
             with np.load(shard) as z:
                 for k in z.files:
                     host[k] = z[k]

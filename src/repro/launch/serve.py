@@ -179,6 +179,92 @@ def serve_preemptible(model, params, *, vocab_size: int, capacity: int = 2,
                                  "changed the token stream")
 
 
+def serve_durable(model, params, *, vocab_size: int, journal_dir: str,
+                  snapshot_every: int = 2, resume: bool = False,
+                  crash_at=None, capacity: int = 4, chunk: int = 4,
+                  max_new: int = 16, prompt_len: int = 16,
+                  n_requests: int = 8, page_size: int = 16,
+                  paged: bool = False, seed: int = 0) -> int:
+    """Durable serving demo (ISSUE 7): crash-and-resume round trip.
+
+    Two invocations over the same ``--journal-dir``:
+
+      1. ``--crash-at N`` runs with a write-ahead journal + snapshots
+         and an injected :class:`SchedulerCrash` at chunk boundary N —
+         the process exits 17 with in-flight work on disk only;
+      2. ``--resume`` recovers a FRESH scheduler from the journal +
+         latest snapshot, drains it, and verifies every stream is
+         bit-identical to an uninterrupted in-process reference run —
+         non-zero exit on any divergence (the CI hard gate).
+    """
+    from repro.runtime.durability import (Durability, finish_recovered,
+                                          recover_into)
+    from repro.runtime.fault_tolerance import SchedulerCrash
+
+    rng = np.random.default_rng(seed)
+    # the request mix derives ONLY from the seed: both invocations (and
+    # the in-process reference) must serve the identical requests
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(max(2, prompt_len // 2), prompt_len + 1))
+        budget = int(rng.choice([max(1, max_new // 4),
+                                 max(1, max_new // 2), max_new]))
+        reqs.append(Request(
+            request_id=i,
+            prompt=rng.integers(0, vocab_size, plen).astype(np.int32),
+            max_new=budget))
+    kwargs = dict(capacity=capacity, chunk=chunk,
+                  prompt_buckets=(prompt_len,),
+                  cache_len=prompt_len + max_new + 1,
+                  cache="paged" if paged else "contiguous",
+                  page_size=page_size)
+
+    if not resume:
+        dur = Durability(journal_dir, snapshot_every=snapshot_every)
+        plan = (FaultPlan().at(int(crash_at), "crash")
+                if crash_at is not None else None)
+        sched = ServingScheduler(model, params, durability=dur,
+                                 fault_plan=plan, **kwargs)
+        try:
+            run = sched.run(list(reqs))
+        except SchedulerCrash as e:
+            dur.close()
+            print(f"[serve] durable: {e} — journal + snapshots left in "
+                  f"{journal_dir}; resume with --resume", flush=True)
+            return 17
+        dur.close()
+        print(f"[serve] durable: clean drain ({run.generated} tokens, "
+              f"{len(run.results)} results) — journal in {journal_dir}",
+              flush=True)
+        return 0
+
+    # --resume: recover a fresh scheduler from disk, drain, verify
+    dur = Durability(journal_dir, snapshot_every=snapshot_every)
+    sched = ServingScheduler(model, params, durability=dur, **kwargs)
+    info = recover_into(sched)
+    rec = finish_recovered(sched, info)
+    dur.close()
+    print(f"[serve] durable resume: recovered in {info.recover_s*1e3:.1f}ms "
+          f"(snapshot {info.snapshot_tag}, {len(info.restored)} restored, "
+          f"{len(info.recomputed)} recomputed, {len(info.requeued)} "
+          f"requeued, {info.truncated_bytes} torn bytes), replayed "
+          f"{rec.replayed} journaled tokens, {rec.mismatches} mismatches",
+          flush=True)
+    ref = ServingScheduler(model, params, **kwargs).run(list(reqs))
+    ref_toks = {r.request_id: r.tokens.tolist() for r in ref.results}
+    got = {r.request_id: r.tokens.tolist() for r in rec.run.results}
+    bad = sorted(rid for rid in ref_toks
+                 if got.get(rid) != ref_toks[rid])
+    if rec.mismatches or bad:
+        raise SystemExit(
+            f"durable resume diverged: {rec.mismatches} replay "
+            f"mismatches, requests {bad} differ from the uninterrupted "
+            "reference")
+    print(f"[serve] durable resume: all {len(ref_toks)} streams "
+          "bit-identical to the uninterrupted run", flush=True)
+    return 0
+
+
 def compress_generic(model, params, density, *, per_block=None):
     """Family-agnostic PIFA compression: every dense linear inside every
     block is factorized data-free (SVD prune, no reconstruction).
@@ -304,6 +390,20 @@ def main(argv=None) -> int:
     ap.add_argument("--cancel-request", type=int, default=None,
                     help="request id to cancel mid-flight in the "
                          "--preempt demo (low requests are 0..capacity)")
+    ap.add_argument("--journal-dir", default=None,
+                    help="durable-serving mode: write-ahead journal + "
+                         "snapshots under this directory (skips the "
+                         "engine benchmarks; see --crash-at / --resume)")
+    ap.add_argument("--snapshot-every", type=int, default=2,
+                    help="scheduler snapshot cadence in chunk dispatches "
+                         "(durable mode)")
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="inject a SchedulerCrash at this chunk boundary "
+                         "(durable mode; process exits 17)")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover from --journal-dir, drain, and verify "
+                         "bit-identity against an uninterrupted reference "
+                         "(non-zero exit on divergence)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--draft-density", type=float, default=None,
@@ -320,6 +420,16 @@ def main(argv=None) -> int:
         else get_smoke_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+
+    if args.journal_dir is not None:
+        return serve_durable(
+            model, params, vocab_size=cfg.vocab_size,
+            journal_dir=args.journal_dir,
+            snapshot_every=args.snapshot_every, resume=args.resume,
+            crash_at=args.crash_at, capacity=args.capacity,
+            chunk=args.chunk, max_new=args.max_new,
+            prompt_len=args.prompt_len, n_requests=args.requests,
+            page_size=args.page_size, paged=args.paged, seed=args.seed)
 
     rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(

@@ -1,0 +1,607 @@
+"""Durable serving: write-ahead request journal + scheduler snapshots
+with crash recovery and bit-identical resume.
+
+PR 6 made the continuous-batching scheduler preemptible: an active slot
+can be parked host-side as a :class:`~repro.runtime.scheduler._SavedSlot`
+(page payloads, per-slot device rows, PRNG key, speculative round
+counter, emitted tokens) and re-admitted later with a BIT-IDENTICAL
+continuation.  That machinery only lived in process memory — process
+death lost every in-flight request.  This module puts it on disk:
+
+  * :class:`RequestJournal` — an append-only write-ahead log.  Every
+    scheduler event (submit / emit-chunk / finalize / cancel / reject,
+    plus one ``config`` record pinning the resolved geometry) is a
+    CRC32-framed JSON record, fsync'd per append, so the journal on disk
+    is always a consistent prefix of the run.  A torn tail (partial or
+    CRC-failing record at EOF — the crash landed mid-write) is truncated
+    on open; everything before it is intact by induction.
+  * :class:`SnapshotStore` — periodic scheduler snapshots: one ``.npz``
+    per active slot (its save_restore payload) plus ``meta.json``
+    (scalars, the queue, per-file CRCs), written on a background thread
+    and committed with the checkpointer's atomic-rename protocol
+    (``.tmp`` dir -> fsync -> ``os.replace`` — see
+    ``checkpoint/checkpointer.py``).  Snapshots are named by the journal
+    LSN at capture time, so recency ordering survives restarts.
+  * :func:`recover_into` — opens the latest committed snapshot, injects
+    each saved slot into a FRESH scheduler's preempted-parking map
+    (restore onto fresh physical pages rides the existing re-admission
+    path), re-queues the snapshot queue plus every journaled submit the
+    snapshot predates, and re-applies unhonoured cancels.  Finished
+    requests are reconstructed from their finalize records.
+  * :func:`finish_recovered` — drains the recovered scheduler, merges
+    with the pre-crash results, and verifies every journaled token
+    prefix was re-emitted bitwise identically (the zero-token-loss
+    contract: ``mismatches`` must be 0).
+
+Why recovery is bit-identical: a restored slot resumes through PR 6's
+save_restore path (same pages, same rows, same key/round scalars — the
+preemption tests already pin this), and a request re-queued from
+scratch regenerates its exact stream because per-request PRNG keys are
+``fold_in(scheduler_key, request_id)`` — placement-, order- and
+boundary-invariant by construction.  Replayed prefixes therefore agree
+token for token with what the crashed run already emitted, for greedy
+AND sampled, plain AND speculative slots.
+
+Graceful degradation, outermost first:
+
+  * snapshot ``meta.json`` unreadable / CRC-torn -> try the previous
+    snapshot; none left -> journal-only recovery (everything re-queued
+    from scratch — slower, still bit-identical);
+  * one slot's ``.npz`` fails its CRC -> only that slot degrades to
+    recompute-from-journaled-prefix (``_SavedSlot.mode="recompute"``:
+    re-prefill prompt + emitted tokens, scalars from the snapshot
+    meta); the other slots still restore from their payloads;
+  * a stale snapshot (older than some finalizes) is safe: slots and
+    queue entries whose request already finalized per the journal are
+    skipped;
+  * dispatch errors during the resumed drain ride the scheduler's
+    existing ``RestartPolicy`` retry loop, exactly as before the crash.
+
+Crash injection for tests: ``FaultPlan().at(step, "crash")`` raises
+:class:`~repro.runtime.fault_tolerance.SchedulerCrash` at that chunk
+boundary with no cleanup — the journal is already fsync'd record by
+record, so disk state is exactly what a SIGKILL would leave.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import re
+import struct
+import threading
+import time
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint.checkpointer import commit_dir, crc32_file
+from repro.runtime.scheduler import (CancelReason, Rejected, Request,
+                                     RequestResult, SchedulerRun,
+                                     ServingScheduler, _request_meta,
+                                     _SavedSlot)
+
+__all__ = ["RequestJournal", "SnapshotStore", "Durability", "RecoveryInfo",
+           "RecoveredRun", "CorruptSnapshot", "recover_into",
+           "finish_recovered"]
+
+# record framing: u32 payload length + u32 CRC32(payload), then the
+# JSON payload — fixed-width header so a torn tail is detectable by
+# length alone even before the CRC check
+_HDR = struct.Struct("<II")
+
+
+class CorruptSnapshot(RuntimeError):
+    """A snapshot's ``meta.json`` is unreadable — the whole snapshot is
+    unusable and recovery falls back to an older one (per-SLOT payload
+    corruption degrades more gently; see :meth:`SnapshotStore.load`)."""
+
+
+# --------------------------------------------------------------- journal
+class RequestJournal:
+    """Append-only fsync'd write-ahead log of scheduler events.
+
+    ``lsn`` (log sequence number) is the byte offset past the last
+    committed record — snapshots stamp it so recovery knows which
+    journal suffix postdates them.  Opening truncates any torn tail
+    (``truncated_bytes`` reports how much); :meth:`read` replays without
+    opening for append.
+    """
+
+    def __init__(self, path, fsync: bool = True):
+        self.path = pathlib.Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self.fsync = bool(fsync)
+        self.truncated_bytes = self._truncate_torn_tail()
+        self._fh = open(self.path, "ab")
+        self.lsn = self.path.stat().st_size
+
+    def _truncate_torn_tail(self) -> int:
+        if not self.path.exists():
+            return 0
+        data = self.path.read_bytes()
+        off = 0
+        while off + _HDR.size <= len(data):
+            n, crc = _HDR.unpack_from(data, off)
+            end = off + _HDR.size + n
+            if end > len(data):
+                break                      # partial record at EOF
+            if zlib.crc32(data[off + _HDR.size:end]) & 0xFFFFFFFF != crc:
+                break                      # bit rot / torn write
+            off = end
+        torn = len(data) - off
+        if torn:
+            with open(self.path, "r+b") as fh:
+                fh.truncate(off)
+                fh.flush()
+                os.fsync(fh.fileno())
+        return torn
+
+    def append(self, kind: str, **fields) -> int:
+        """Append one record and fsync; returns the new LSN."""
+        payload = json.dumps({"kind": kind, **fields},
+                             separators=(",", ":")).encode("utf-8")
+        self._fh.write(_HDR.pack(len(payload),
+                                 zlib.crc32(payload) & 0xFFFFFFFF))
+        self._fh.write(payload)
+        self._fh.flush()
+        if self.fsync:
+            os.fsync(self._fh.fileno())
+        self.lsn += _HDR.size + len(payload)
+        return self.lsn
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    @classmethod
+    def read(cls, path) -> Tuple[List[Dict[str, Any]], int]:
+        """Committed records + torn-tail byte count, read-only (no
+        truncation — safe while another handle appends)."""
+        path = pathlib.Path(path)
+        if not path.exists():
+            return [], 0
+        data = path.read_bytes()
+        out: List[Dict[str, Any]] = []
+        off = 0
+        while off + _HDR.size <= len(data):
+            n, crc = _HDR.unpack_from(data, off)
+            end = off + _HDR.size + n
+            if end > len(data):
+                break
+            payload = data[off + _HDR.size:end]
+            if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+                break
+            out.append(json.loads(payload.decode("utf-8")))
+            off = end
+        return out, len(data) - off
+
+
+# ------------------------------------------------------------- snapshots
+class SnapshotStore:
+    """Atomic, async scheduler snapshots under ``<dir>/snap_<lsn>/``.
+
+    One ``slot_NNN.npz`` per active slot (save_restore payload: rows /
+    draft rows / page payloads) plus ``meta.json`` carrying scalars,
+    the queue, the config fingerprint and a per-file CRC32.  The write
+    runs on a background thread and commits via the checkpointer's
+    atomic-rename protocol, so a crash mid-snapshot leaves the previous
+    snapshot untouched and the torn ``.tmp`` invisible.
+    """
+
+    def __init__(self, directory, keep: int = 2):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = int(keep)
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, tag: int, slot_arrays: Dict[int, Dict[str, np.ndarray]],
+             meta: Dict[str, Any], blocking: bool = False) -> None:
+        """Write snapshot ``tag`` (the journal LSN) asynchronously."""
+        self.wait()
+
+        def _write():
+            tmp = self.dir / f"snap_{int(tag):012d}.tmp"
+            final = self.dir / f"snap_{int(tag):012d}"
+            if final.exists():             # idempotent re-save
+                return
+            tmp.mkdir(parents=True, exist_ok=True)
+            files = {}
+            for slot, arrays in slot_arrays.items():
+                f = tmp / f"slot_{int(slot):03d}.npz"
+                np.savez(f, **arrays)
+                files[str(int(slot))] = {"file": f.name,
+                                         "crc": crc32_file(f)}
+            m = dict(meta)
+            m["files"] = files
+            (tmp / "meta.json").write_text(json.dumps(m))
+            commit_dir(tmp, final)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        for tag in self.tags()[:-self.keep] if self.keep else []:
+            d = self.dir / f"snap_{tag:012d}"
+            for f in d.iterdir():
+                f.unlink()
+            d.rmdir()
+
+    def tags(self) -> List[int]:
+        out = []
+        for p in self.dir.iterdir():
+            m = re.fullmatch(r"snap_(\d+)", p.name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def load(self, tag: int) -> Tuple[Dict[str, Any],
+                                      Dict[int, Optional[Dict[str, Any]]],
+                                      List[int]]:
+        """-> (meta, per-slot arrays, corrupt slot ids).
+
+        A slot whose ``.npz`` fails its CRC (or cannot be read) maps to
+        ``None`` and lands in the corrupt list — the caller degrades
+        that slot to recompute-from-journaled-prefix instead of losing
+        the snapshot.  An unreadable ``meta.json`` raises
+        :class:`CorruptSnapshot` (fall back to an older snapshot, then
+        to journal-only recovery)."""
+        d = self.dir / f"snap_{int(tag):012d}"
+        try:
+            meta = json.loads((d / "meta.json").read_text())
+        except Exception as e:
+            raise CorruptSnapshot(f"{d / 'meta.json'} unreadable: {e}")
+        arrays: Dict[int, Optional[Dict[str, Any]]] = {}
+        corrupt: List[int] = []
+        for slot_s, ent in meta.get("files", {}).items():
+            slot = int(slot_s)
+            f = d / ent["file"]
+            try:
+                if crc32_file(f) != int(ent["crc"]):
+                    raise OSError("CRC32 mismatch")
+                with np.load(f) as z:
+                    arrays[slot] = {k: z[k] for k in z.files}
+            except Exception:
+                arrays[slot] = None
+                corrupt.append(slot)
+        return meta, arrays, sorted(corrupt)
+
+
+class Durability:
+    """One serving run's durable state: journal + snapshot store.
+
+    Pass to the scheduler (``ServingScheduler(..., durability=...)``) to
+    journal every event and snapshot every ``snapshot_every`` chunk
+    dispatches.  After a crash, construct a fresh ``Durability`` over
+    the same directory and hand it to a fresh scheduler, then call
+    :func:`recover_into` / :func:`finish_recovered`.
+    """
+
+    def __init__(self, directory, *, snapshot_every: int = 8,
+                 keep: int = 2, fsync: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.journal = RequestJournal(self.dir / "journal.wal", fsync=fsync)
+        self.store = SnapshotStore(self.dir / "snapshots", keep=keep)
+        self.snapshot_every = int(snapshot_every)
+
+    def wait(self) -> None:
+        self.store.wait()
+
+    def close(self) -> None:
+        self.store.wait()
+        self.journal.close()
+
+
+# -------------------------------------------------------------- recovery
+def _request_from_meta(m: Dict[str, Any]) -> Request:
+    return Request(
+        request_id=int(m["rid"]),
+        prompt=np.asarray(m["prompt"], np.int32),
+        max_new=int(m["max_new"]),
+        arrival_time=float(m["arrival_time"]),
+        speculative=bool(m["speculative"]),
+        priority=int(m["priority"]),
+        deadline_s=(None if m["deadline_s"] is None
+                    else float(m["deadline_s"])))
+
+
+@dataclasses.dataclass
+class _JournalState:
+    """Folded view of the journal: first submit / latest emit state /
+    last finalize per request, plus rejects and cancels in order."""
+
+    config: Optional[Dict[str, Any]] = None
+    submits: Dict[int, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict)
+    emits: Dict[int, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict)
+    finals: Dict[int, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict)
+    rejects: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    cancels: List[int] = dataclasses.field(default_factory=list)
+
+
+def _replay(records: List[Dict[str, Any]]) -> _JournalState:
+    st = _JournalState()
+    for r in records:
+        kind = r.get("kind")
+        if kind == "config":
+            if st.config is None:
+                st.config = r
+        elif kind == "submit":
+            # first submission wins: recovery re-journals submits, so
+            # later duplicates are expected and identical
+            st.submits.setdefault(int(r["rid"]), r)
+        elif kind == "emit":
+            e = st.emits.setdefault(int(r["rid"]), {"toks": []})
+            toks: List[int] = e["toks"]
+            at = int(r["at"])
+            if at > len(toks):
+                continue                   # gap: unreachable by protocol
+            toks[at:at + len(r["toks"])] = [int(t) for t in r["toks"]]
+            e.update(tok=int(r["tok"]), keys=list(r["keys"]),
+                     acc=r.get("acc"), drafted=r.get("drafted"),
+                     rounds=r.get("rounds"))
+        elif kind == "finalize":
+            st.finals[int(r["rid"])] = r
+        elif kind == "reject":
+            st.rejects.append(r)
+        elif kind == "cancel":
+            st.cancels.append(int(r["rid"]))
+    return st
+
+
+@dataclasses.dataclass
+class RecoveryInfo:
+    """What recovery reconstructed, and how."""
+
+    prior_results: List[RequestResult]    # finalized before the crash
+    prior_rejected: List[Rejected]
+    replay: Dict[int, List[int]]          # rid -> journaled token prefix
+    snapshot_tag: Optional[int]           # LSN of the snapshot used
+    restored: List[int]                   # rids restored from payloads
+    recomputed: List[int]                 # rids degraded to recompute
+    requeued: List[int]                   # rids re-queued from scratch
+    corrupt_slots: List[int]              # snapshot slots failing CRC
+    truncated_bytes: int                  # torn journal tail dropped
+    recover_s: float                      # wall-clock recovery time
+
+
+@dataclasses.dataclass
+class RecoveredRun:
+    """A drained recovery: merged results + the zero-token-loss audit."""
+
+    run: SchedulerRun                     # prior + resumed, merged
+    resumed: SchedulerRun                 # the post-crash drain alone
+    info: RecoveryInfo
+    replayed: int                         # journaled tokens re-verified
+    mismatches: int                       # MUST be 0 (bit-identity)
+
+
+def _saved_from_snapshot(sched: ServingScheduler, sm: Dict[str, Any],
+                         arr: Optional[Dict[str, Any]]) -> _SavedSlot:
+    """Rebuild a ``_SavedSlot`` from snapshot meta + (maybe) payloads.
+
+    With intact payload arrays the slot restores at save_restore depth
+    (bit-identical continuation); a CRC-corrupt payload degrades to
+    ``mode="recompute"`` — the meta scalars alone are enough to
+    re-prefill prompt + emitted prefix and continue the exact stream
+    scalars (tok / PRNG key / round counter)."""
+    saved = _SavedSlot(
+        tokens=[int(t) for t in sm["tokens"]],
+        count=int(sm["count"]), pos=int(sm["pos"]),
+        tok=np.asarray([int(sm["tok"])], np.int32),
+        keys=np.asarray(sm["keys"], np.uint32),
+        admitted_at=float(sm["admitted_at"]),
+        n_preempts=int(sm["n_preempts"]),
+        mode="recompute")
+    if sched.speculative:
+        saved.spec = bool(sm["spec"])
+        saved.acc = int(sm["acc"])
+        saved.drafted = int(sm["drafted"])
+        saved.rounds = int(sm["rounds"])
+    if arr is None:
+        return saved
+    rows = {k[len("rows__"):]: arr[k] for k in arr
+            if k.startswith("rows__")}
+    drows = {k[len("drows__"):]: arr[k] for k in arr
+             if k.startswith("drows__")}
+    pages = {k[len("pages__"):]: arr[k] for k in arr
+             if k.startswith("pages__")}
+    dpages = {k[len("dpages__"):]: arr[k] for k in arr
+              if k.startswith("dpages__")}
+    saved.rows = rows
+    saved.drows = drows or None
+    saved.pages = pages or None
+    saved.dpages = dpages or None
+    saved.mode = "save_restore"
+    return saved
+
+
+def recover_into(sched: ServingScheduler,
+                 durability: Optional[Durability] = None) -> RecoveryInfo:
+    """Load journal + latest committed snapshot into a FRESH scheduler.
+
+    The scheduler must be constructed exactly as the crashed one was
+    (same model/params/config — the journal's ``config`` record is
+    checked and a mismatch raises, because resumed streams would not be
+    bit-identical).  Active slots land in the preempted-parking map and
+    re-admit through the existing restore path onto fresh physical
+    pages; everything else is re-queued.  Call :func:`finish_recovered`
+    (or ``sched.run()``) afterwards to drain.
+    """
+    dur = durability if durability is not None else sched._durability
+    if dur is None:
+        raise ValueError(
+            "recover_into needs a Durability (pass one, or construct the "
+            "scheduler with durability=...)")
+    t0 = time.perf_counter()
+    records, torn = RequestJournal.read(dur.journal.path)
+    state = _replay(records)
+
+    # pin the resolved geometry from the journal BEFORE _ensure_state
+    # derives defaults from the (empty) queue
+    cfg = state.config
+    if cfg is not None:
+        if sched._cache_len is None:
+            sched._cache_len = int(cfg["cache_len"])
+        if sched.num_pages is None and cfg.get("num_pages") is not None:
+            sched.num_pages = int(cfg["num_pages"])
+    sched._ensure_state()
+    if cfg is not None:
+        mine = sched._durability_config()
+        diffs = {k: (cfg[k], mine[k]) for k in mine
+                 if k in cfg and cfg[k] != mine[k]}
+        if diffs:
+            raise ValueError(
+                "journal/scheduler config mismatch — a resumed stream "
+                f"would not be bit-identical: {diffs}")
+
+    # finished work, reconstructed from finalize (+ submit) records
+    prior_results: List[RequestResult] = []
+    for rid in sorted(state.finals):
+        f = state.finals[rid]
+        sub = state.submits.get(rid)
+        if sub is None:
+            continue                       # unreachable: submit precedes
+        prompt = np.asarray(sub["prompt"], np.int32)
+        prior_results.append(RequestResult(
+            request_id=rid,
+            tokens=np.concatenate(
+                [prompt, np.asarray(f["toks"], np.int32)]),
+            generated=int(f["generated"]),
+            prompt_len=int(f["prompt_len"]),
+            slot=int(f.get("slot", -1)),
+            arrival_time=float(f["arrival"]),
+            admitted_at=float(f["admitted"]),
+            finished_at=float(f["finished"]),
+            accepted=f.get("accepted"),
+            drafted=f.get("drafted"),
+            cancel_reason=(CancelReason(f["reason"])
+                           if f.get("reason") else None),
+            preemptions=int(f.get("preemptions", 0))))
+    prior_rejected = [Rejected(request_id=int(r["rid"]),
+                               reason=str(r["reason"]),
+                               attempts=int(r["attempts"]),
+                               rejected_at=float(r["at_s"]))
+                      for r in state.rejects]
+    done_rids = set(state.finals) | {r.request_id for r in prior_rejected}
+
+    # newest usable snapshot; meta corruption falls back to older ones,
+    # and with none left recovery is journal-only (slower, still exact)
+    dur.store.wait()
+    snap_tag = None
+    meta: Optional[Dict[str, Any]] = None
+    arrays: Dict[int, Optional[Dict[str, Any]]] = {}
+    corrupt: List[int] = []
+    for tag in reversed(dur.store.tags()):
+        try:
+            meta, arrays, corrupt = dur.store.load(tag)
+            snap_tag = tag
+            break
+        except CorruptSnapshot:
+            continue
+
+    restored: List[int] = []
+    recomputed: List[int] = []
+    requeued: List[int] = []
+    queued: set = set()
+    submitted: List[Request] = []
+    if meta is not None:
+        for slot_s, sm in meta.get("slots", {}).items():
+            rid = int(sm["request"]["rid"])
+            if rid in done_rids or rid in queued:
+                continue                   # stale snapshot: already done
+            saved = _saved_from_snapshot(sched, sm, arrays.get(int(slot_s)))
+            (restored if saved.mode == "save_restore"
+             else recomputed).append(rid)
+            sched._preempted[rid] = saved
+            submitted.append(_request_from_meta(sm["request"]))
+            queued.add(rid)
+        for qm in meta.get("queue", []):
+            rid = int(qm["rid"])
+            if rid in done_rids or rid in queued:
+                continue
+            submitted.append(_request_from_meta(qm))
+            queued.add(rid)
+    # journal suffix: submits the snapshot predates (or journal-only
+    # recovery: every unfinished submit) re-queue from scratch — their
+    # fold_in(key, rid) streams regenerate the journaled prefix exactly
+    for rid in sorted(state.submits):
+        if rid in done_rids or rid in queued:
+            continue
+        submitted.append(_request_from_meta(state.submits[rid]))
+        queued.add(rid)
+        requeued.append(rid)
+
+    for req in sorted(submitted, key=ServingScheduler._qkey):
+        sched.submit(req)
+    # journaled-but-unhonoured cancels apply at the first boundary
+    for rid in state.cancels:
+        if rid not in done_rids:
+            sched.cancel(rid)
+
+    replay = {rid: list(e["toks"]) for rid, e in state.emits.items()
+              if rid not in done_rids and e["toks"]}
+    return RecoveryInfo(
+        prior_results=prior_results, prior_rejected=prior_rejected,
+        replay=replay, snapshot_tag=snap_tag, restored=sorted(restored),
+        recomputed=sorted(recomputed), requeued=requeued,
+        corrupt_slots=corrupt, truncated_bytes=torn,
+        recover_s=time.perf_counter() - t0)
+
+
+def finish_recovered(sched: ServingScheduler, info: RecoveryInfo
+                     ) -> RecoveredRun:
+    """Drain the recovered scheduler and audit zero token loss.
+
+    Every journaled prefix must be re-emitted bitwise identically —
+    ``mismatches`` counts requests whose resumed stream diverged from
+    (or fell short of) what the crashed run already produced, and MUST
+    be 0.  ``run`` merges pre-crash results with the resumed drain, so
+    callers see one complete ``SchedulerRun`` for the logical serving
+    run."""
+    resumed = sched.run()
+    by_rid = {r.request_id: r for r in resumed.results}
+    replayed = 0
+    mismatches = 0
+    for rid, prefix in info.replay.items():
+        r = by_rid.get(rid)
+        if r is None:
+            continue                       # rejected on resume
+        gen = [int(t) for t in r.tokens[r.prompt_len:]]
+        n = min(len(prefix), len(gen))
+        replayed += n
+        if gen[:n] != prefix[:n]:
+            mismatches += 1
+        elif r.cancel_reason is None and len(gen) < len(prefix):
+            mismatches += 1                # lost already-emitted tokens
+    results = info.prior_results + resumed.results
+    merged = SchedulerRun(
+        results=results,
+        elapsed=resumed.elapsed,
+        generated=sum(r.generated for r in results),
+        chunks=resumed.chunks,
+        occupancy=resumed.occupancy,
+        accepted=sum(r.accepted for r in results
+                     if r.accepted is not None),
+        drafted=sum(r.drafted for r in results
+                    if r.drafted is not None),
+        deferrals=resumed.deferrals,
+        rejected=info.prior_rejected + resumed.rejected,
+        preemptions=resumed.preemptions,
+        resumes=resumed.resumes,
+        slow_chunks=resumed.slow_chunks)
+    return RecoveredRun(run=merged, resumed=resumed, info=info,
+                        replayed=replayed, mismatches=mismatches)

@@ -31,7 +31,7 @@ from collections import defaultdict, deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 __all__ = ["HeartbeatRegistry", "StragglerDetector", "RestartPolicy",
-           "FaultPlan", "InjectedFault"]
+           "FaultPlan", "InjectedFault", "SchedulerCrash"]
 
 
 class HeartbeatRegistry:
@@ -40,6 +40,14 @@ class HeartbeatRegistry:
         self.clock = clock
         self.last_seen: Dict[str, float] = {}
         self.dead: set = set()
+
+    def register(self, host: str) -> None:
+        """Expect heartbeats from ``host`` starting now.  Without this, a
+        host that dies BEFORE its first ``beat()`` is never tracked and
+        never reported dead — registration opens the silence window at
+        the expected-join time, so ``check()`` flags it like any other
+        silent host.  A no-op for hosts that already beat."""
+        self.last_seen.setdefault(host, self.clock())
 
     def beat(self, host: str) -> None:
         if host in self.dead:
@@ -70,11 +78,13 @@ class StragglerDetector:
         self.ewma = ewma
         self.step_time: Dict[str, float] = {}
         self.strikes: Dict[str, int] = defaultdict(int)
+        self._fresh: set = set()   # hosts with a record() since last poll
 
     def record(self, host: str, step_seconds: float) -> None:
         prev = self.step_time.get(host)
         self.step_time[host] = (step_seconds if prev is None else
                                 self.ewma * step_seconds + (1 - self.ewma) * prev)
+        self._fresh.add(host)
 
     def stragglers(self) -> List[str]:
         if len(self.step_time) < 2:
@@ -82,13 +92,23 @@ class StragglerDetector:
         times = sorted(self.step_time.values())
         median = times[len(times) // 2]
         out = []
+        # Strikes advance at most once per new fleet observation: a poll
+        # with no record() since the last one must not burn patience
+        # (polling twice per step would flag at 2x speed), and an
+        # already-flagged host stays flagged without its strike count
+        # drifting while no new data arrives.  A host's own EWMA need
+        # not have moved — "persistently slow" means slower than the
+        # fleet median as that median keeps evolving.
+        fresh = bool(self._fresh)
         for host, t in self.step_time.items():
             if t > self.threshold * median:
-                self.strikes[host] += 1
+                if fresh:
+                    self.strikes[host] += 1
                 if self.strikes[host] >= self.patience:
                     out.append(host)
-            else:
+            elif fresh:
                 self.strikes[host] = 0
+        self._fresh.clear()
         return out
 
 
@@ -125,6 +145,19 @@ class InjectedFault(RuntimeError):
     bugs behind a broad ``except``."""
 
 
+class SchedulerCrash(RuntimeError):
+    """Injected process death at a chunk boundary (``crash`` FaultPlan
+    kind).  Unlike :class:`InjectedFault` this is NOT retried in-process:
+    it propagates out of ``ServingScheduler.run()``, abandoning the
+    scheduler object mid-flight exactly like a SIGKILL would, and the
+    only way forward is crash recovery from the write-ahead journal and
+    snapshots (``runtime/durability.py``) on a FRESH scheduler."""
+
+    def __init__(self, step: int):
+        super().__init__(f"injected crash at chunk boundary {step}")
+        self.step = int(step)
+
+
 class FaultPlan:
     """Deterministic fault schedule keyed by scheduler loop iteration.
 
@@ -144,7 +177,10 @@ class FaultPlan:
       * ``cancel`` — call ``scheduler.cancel(arg)`` at that boundary;
       * ``preempt`` — force-preempt the slot running request-id ``arg``
         regardless of priority (deterministic preempt->resume
-        bit-identity tests without needing real contention).
+        bit-identity tests without needing real contention);
+      * ``crash`` — raise :class:`SchedulerCrash` at that boundary,
+        tearing down the run loop without any cleanup (simulated process
+        death; exercised by the durability crash-recovery tests).
 
     ``step`` counts scheduler loop iterations from 0; admission for a
     step happens AFTER its actions fire, so the earliest step at which
@@ -152,7 +188,7 @@ class FaultPlan:
     """
 
     KINDS = ("pool_exhausted", "dispatch_error", "clock_skew", "cancel",
-             "preempt")
+             "preempt", "crash")
 
     def __init__(self):
         self._actions: Dict[int, List[Tuple[str, Any]]] = defaultdict(list)

@@ -45,7 +45,7 @@ Pytree = Any
 
 __all__ = ["PoolExhausted", "PageAllocator", "PAGED_KEYS", "pages_for",
            "paged_cache_spec", "make_paged_cache", "paginate_cache",
-           "logical_view"]
+           "logical_view", "scatter_prompt_pages"]
 
 # cache leaves that hold positional KV entries and therefore page;
 # every other leaf (pos, conv/ssm state, encdec cross-KV, ring kl/vl)
@@ -61,6 +61,29 @@ class PoolExhausted(RuntimeError):
 def pages_for(tokens: int, page_size: int) -> int:
     """Pages needed to hold ``tokens`` cache entries."""
     return -(-int(tokens) // int(page_size))
+
+
+def scatter_prompt_pages(pool: jnp.ndarray, sm: jnp.ndarray,
+                         pages: jnp.ndarray, page_size: int) -> jnp.ndarray:
+    """Land contiguously-prefilled KV rows into physical pool pages.
+
+    ``sm`` is ``(L, kb, length, ...)`` — ``kb`` rows of a scratch prefill —
+    and ``pages`` is ``(kb, npg)`` physical page ids.  The row tail is
+    page-padded (pad entries stay causally masked: the write pointer and
+    attention length both stop at the true position), split into
+    ``npg`` pages of ``page_size``, and scattered into
+    ``pool (L, num_pages+1, page_size, ...)``.  Shared by the scheduler's
+    batch-k admission fns and the crash-recovery recompute resume path,
+    so both land bitwise-identical page payloads.
+    """
+    kb, length = int(sm.shape[1]), int(sm.shape[2])
+    npg = int(pages.shape[-1])
+    pad = npg * int(page_size) - length
+    if pad:
+        sm = jnp.pad(sm, ((0, 0), (0, 0), (0, pad))
+                     + ((0, 0),) * (sm.ndim - 3))
+    sm = sm.reshape(sm.shape[:2] + (npg, int(page_size)) + sm.shape[3:])
+    return pool.at[:, pages].set(sm.astype(pool.dtype))
 
 
 class PageAllocator:

@@ -147,15 +147,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.fault_tolerance import (FaultPlan, InjectedFault,
-                                           RestartPolicy, StragglerDetector)
+                                           RestartPolicy, SchedulerCrash,
+                                           StragglerDetector)
 from repro.runtime.paging import (PageAllocator, PoolExhausted,
-                                  make_paged_cache, pages_for)
+                                  make_paged_cache, pages_for,
+                                  scatter_prompt_pages)
 
 Pytree = Any
 
 __all__ = ["Request", "RequestResult", "SchedulerRun", "ServingScheduler",
            "ADMIT_BATCH", "PoolExhausted", "CancelReason", "Rejected",
-           "FaultPlan", "InjectedFault"]
+           "FaultPlan", "InjectedFault", "SchedulerCrash"]
 
 # Grouped-admission batch sizes, largest first.  Also the cap on the
 # jit-cache key space: one compiled admit fn per (prompt bucket, k).
@@ -180,6 +182,20 @@ class Request:
     speculative: bool = True
     priority: int = 0
     deadline_s: Optional[float] = None
+
+
+def _request_meta(r: Request) -> Dict[str, Any]:
+    """JSON-serializable view of a Request — the wire format shared by
+    journal submit records and snapshot slot/queue entries (see
+    ``runtime/durability.py``, which reconstructs Requests from it)."""
+    return {"rid": int(r.request_id),
+            "prompt": [int(t) for t in np.asarray(r.prompt)],
+            "max_new": int(r.max_new),
+            "arrival_time": float(r.arrival_time),
+            "speculative": bool(r.speculative),
+            "priority": int(r.priority),
+            "deadline_s": (None if r.deadline_s is None
+                           else float(r.deadline_s))}
 
 
 class CancelReason(enum.Enum):
@@ -279,6 +295,7 @@ class _Slot:
     admitted_at: float = 0.0
     seq: int = -1                 # admission order (victim tie-break)
     preempts: int = 0             # evictions this request has survived
+    journaled: int = 0            # tokens already written to the WAL
 
 
 @dataclasses.dataclass
@@ -307,6 +324,12 @@ class _SavedSlot:
     drows: Optional[Dict[str, np.ndarray]] = None   # draft non-paged rows
     pages: Optional[Dict[str, np.ndarray]] = None   # target page payloads
     dpages: Optional[Dict[str, np.ndarray]] = None  # draft page payloads
+    # restore depth for THIS saved slot — snapshots always capture at
+    # save_restore depth (nothing is freed, so payloads exist even on a
+    # contiguous cache), while a CRC-corrupt snapshot payload degrades
+    # just that slot to recompute; the scheduler-wide ``preemption``
+    # setting only governs live evictions
+    mode: str = "save_restore"
 
 
 class ServingScheduler:
@@ -337,7 +360,8 @@ class ServingScheduler:
                  clock: Optional[Callable[[], float]] = None,
                  sleep_fn: Optional[Callable[[float], None]] = None,
                  fault_plan: Optional[FaultPlan] = None,
-                 straggler_threshold: float = 4.0):
+                 straggler_threshold: float = 4.0,
+                 durability: Optional[Any] = None):
         if admission not in ("continuous", "drain"):
             raise ValueError("admission: 'continuous' or 'drain'")
         if cache not in ("contiguous", "paged"):
@@ -422,6 +446,16 @@ class ServingScheduler:
         self._sleep = sleep_fn if sleep_fn is not None else time.sleep
         self._fault_plan = fault_plan
         self._straggler_threshold = float(straggler_threshold)
+        # durability (runtime/durability.py — duck-typed so this module
+        # never imports it): every queue event is journaled, and every
+        # snapshot_every chunk dispatches the active slots are captured
+        # at save_restore depth into the snapshot store
+        self._durability = durability
+        self._journal = getattr(durability, "journal", None)
+        self._snap_store = getattr(durability, "store", None)
+        self._snap_every = int(getattr(durability, "snapshot_every", 0)
+                               or 0)
+        self._journal_cfg = False      # config record written yet?
         self.cache_dtype = cache_dtype
         self.temperature = float(temperature)
         self.top_k = int(top_k)
@@ -487,6 +521,8 @@ class ServingScheduler:
         return (-r.priority, r.arrival_time, r.request_id)
 
     def submit(self, request: Request) -> None:
+        if self._journal is not None:
+            self._journal.append("submit", **_request_meta(request))
         self._queue.append(request)
 
     def cancel(self, request_id: int) -> None:
@@ -496,6 +532,8 @@ class ServingScheduler:
         carries ``CancelReason.CANCELLED`` with tokens emitted so far.
         Queued (or preempted-and-parked) requests are simply dropped
         with the same reason.  Unknown ids are ignored."""
+        if self._journal is not None:
+            self._journal.append("cancel", rid=int(request_id))
         self._cancelled.add(int(request_id))
 
     def spec_request_key(self, request_id: int) -> jax.Array:
@@ -506,6 +544,28 @@ class ServingScheduler:
         ``fold_in(scheduler key, request_id)`` — placement- and
         admission-order-invariant by construction."""
         return jax.random.fold_in(self._sample_key, request_id)
+
+    def _durability_config(self) -> Dict[str, Any]:
+        """The config fingerprint journaled once per run and stamped on
+        snapshots: everything a resumed stream's bit-identity depends
+        on.  Recovery refuses a scheduler whose fingerprint disagrees
+        (see ``durability.recover_into``) — continuing with, say, a
+        different temperature or spec_k would silently diverge."""
+        return {
+            "capacity": self.capacity, "chunk": self.chunk,
+            "cache_len": (None if self._cache_len is None
+                          else int(self._cache_len)),
+            "cache": self.cache_mode, "page_size": self.page_size,
+            "num_pages": (None if self.num_pages is None
+                          else int(self.num_pages)),
+            "temperature": self.temperature, "top_k": self.top_k,
+            "speculative": self.speculative, "spec_k": self.spec_k,
+            "eos_id": self.eos_id, "pad_id": self.pad_id,
+            "admission": self.admission, "preemption": self.preemption,
+            "prompt_buckets": (None if self.prompt_buckets is None
+                               else list(self.prompt_buckets)),
+            "sample_key": [int(k) for k in np.asarray(self._sample_key)],
+        }
 
     # ------------------------------------------------------- device state
     def _bucket_for(self, n: int) -> int:
@@ -825,7 +885,6 @@ class ServingScheduler:
         paged = self._paged_kv
         paged_keys = self._paged_keys
         P = self.page_size
-        npg = pages_for(bucket, P) if paged else 0
 
         def scatter_rows(big, sm, ax, slots):
             for i in range(kb):
@@ -836,21 +895,13 @@ class ServingScheduler:
                     big, row.astype(big.dtype), tuple(starts))
             return big
 
-        def scatter_kv_pages(pool, sm, pages):
-            # sm (L, kb, bucket, h, d) -> page-pad, split into pages,
-            # land each row's npg prompt pages at its physical ids
-            pad = npg * P - bucket
-            if pad:
-                sm = jnp.pad(sm, ((0, 0), (0, 0), (0, pad))
-                             + ((0, 0),) * (sm.ndim - 3))
-            sm = sm.reshape(sm.shape[:2] + (npg, P) + sm.shape[3:])
-            return pool.at[:, pages].set(sm.astype(pool.dtype))
-
         def scatter_cache(big, small, slots, pages):
             out = dict(big)            # keeps "bt" (host-mirrored)
             for key, sm in small.items():
                 if paged and key in paged_keys:
-                    out[key] = scatter_kv_pages(out[key], sm, pages)
+                    # page-pad, split into pages, land each row's prompt
+                    # pages at its physical ids (shared with resume)
+                    out[key] = scatter_prompt_pages(out[key], sm, pages, P)
                 else:
                     out[key] = scatter_rows(out[key], sm, axes[key], slots)
             return out
@@ -946,6 +997,9 @@ class ServingScheduler:
         cache_dtype = self.cache_dtype
         axes = self._slot_axes
         speculative = self.speculative
+        paged = self._paged_kv
+        paged_keys = self._paged_keys
+        P = self.page_size
 
         def scatter1(big, sm, ax, slot):
             starts = [jnp.int32(0)] * big.ndim
@@ -953,24 +1007,41 @@ class ServingScheduler:
             return jax.lax.dynamic_update_slice(big, sm.astype(big.dtype),
                                                 tuple(starts))
 
-        def refill(params, prefix, plen, slot, cache):
+        def refill(params, prefix, plen, slot, pages, cache):
             small = model.init_cache(1, cache_len, dtype=cache_dtype)
             _, small = model.prefill(params, prefix, small,
                                      last_idx=plen - 1)
             small = {**small, "pos": plen.astype(jnp.int32)}
             out = dict(cache)
             for key, sm in small.items():
-                out[key] = scatter1(out[key], sm, axes[key], slot)
+                if paged and key in paged_keys:
+                    out[key] = scatter_prompt_pages(out[key], sm, pages, P)
+                else:
+                    out[key] = scatter1(out[key], sm, axes[key], slot)
             return out
 
         if not speculative:
+            if paged:
+                def run(params, prefix, plen, slot, pages, cache):
+                    return refill(params, prefix, plen, slot, pages,
+                                  cache)
+                return jax.jit(run, donate_argnums=(5,))
+
             def run(params, prefix, plen, slot, cache):
-                return refill(params, prefix, plen, slot, cache)
+                return refill(params, prefix, plen, slot, None, cache)
             return jax.jit(run, donate_argnums=(4,))
 
+        if paged:
+            def run(params, dparams, prefix, plen, slot, pages, dpages,
+                    cache, dcache):
+                return (refill(params, prefix, plen, slot, pages, cache),
+                        refill(dparams, prefix, plen, slot, dpages,
+                               dcache))
+            return jax.jit(run, donate_argnums=(7, 8))
+
         def run(params, dparams, prefix, plen, slot, cache, dcache):
-            return (refill(params, prefix, plen, slot, cache),
-                    refill(dparams, prefix, plen, slot, dcache))
+            return (refill(params, prefix, plen, slot, None, cache),
+                    refill(dparams, prefix, plen, slot, None, dcache))
         return jax.jit(run, donate_argnums=(5, 6))
 
     # ---------------------------------------------------------- admission
@@ -1065,12 +1136,14 @@ class ServingScheduler:
         return {key: np.asarray(jnp.take(cache[key], ids, axis=1))
                 for key in self._paged_keys}
 
-    def _evict(self, slot: int) -> Request:
-        """Preempt the slot at a chunk boundary: park its state
-        host-side (mode-dependent depth), free the slot and every page
-        it holds (the zeroed block-table row sends the frozen row's
-        junk writes to the sentinel page), and hand the request back
-        for re-queueing."""
+    def _capture_slot(self, slot: int, mode: str) -> _SavedSlot:
+        """Park a live slot's state host-side at ``mode`` depth without
+        touching the slot itself.  ``save_restore`` copies the full
+        device row + touched page payloads (valid on ANY cache mode —
+        nothing is freed here, so contiguous rows capture fine; the
+        ctor's save_restore/paged restriction only applies to live
+        evictions, which must free pages).  Shared by eviction and the
+        durability snapshots."""
         st = self._slots[slot]
         req = st.request
         d = self._dev
@@ -1081,13 +1154,14 @@ class ServingScheduler:
             tok=np.asarray(d["tok"][slot]),
             keys=np.asarray(d["keys"][slot]),
             admitted_at=st.admitted_at,
-            n_preempts=st.preempts + 1)
+            n_preempts=st.preempts,
+            mode=mode)
         if self.speculative:
             saved.spec = bool(np.asarray(d["spec"][slot]))
             saved.acc = int(np.asarray(d["acc"][slot]))
             saved.drafted = int(np.asarray(d["drafted"][slot]))
             saved.rounds = int(np.asarray(d["rounds"][slot]))
-        if self.preemption == "save_restore":
+        if mode == "save_restore":
             saved.rows = self._save_rows(d["cache"], slot)
             if self.speculative:
                 saved.drows = self._save_rows(d["dcache"], slot)
@@ -1098,6 +1172,19 @@ class ServingScheduler:
                 if self._dalloc is not None:
                     saved.dpages = self._save_pages(
                         d["dcache"], self._dalloc, slot, n_save)
+        return saved
+
+    def _evict(self, slot: int) -> Request:
+        """Preempt the slot at a chunk boundary: park its state
+        host-side (mode-dependent depth), free the slot and every page
+        it holds (the zeroed block-table row sends the frozen row's
+        junk writes to the sentinel page), and hand the request back
+        for re-queueing."""
+        st = self._slots[slot]
+        req = st.request
+        d = self._dev
+        saved = self._capture_slot(slot, mode=self.preemption)
+        saved.n_preempts += 1
         d["done"] = d["done"].at[slot].set(True)
         if self._paged_kv:
             self._alloc.free(slot)
@@ -1107,6 +1194,7 @@ class ServingScheduler:
         st.tokens = []
         st.count = 0
         st.preempts = 0
+        st.journaled = 0
         self._free.append(slot)
         self._preempted[req.request_id] = saved
         self._n_preempt += 1
@@ -1133,7 +1221,12 @@ class ServingScheduler:
         atomic under mid-admission faults."""
         d = self._dev
         n_save = 0
-        if self.preemption == "save_restore":
+        # the SAVED slot's depth decides the restore path, not the
+        # scheduler-wide preemption setting: durability snapshots always
+        # capture at save_restore depth (even on contiguous caches), and
+        # a CRC-corrupt snapshot payload degrades just its slot to
+        # recompute-from-journaled-prefix
+        if saved.mode == "save_restore":
             if self._paged_kv:
                 bucket = self._bucket_for(len(req.prompt))
                 reserve = self._reserve_tokens(req, bucket)
@@ -1179,9 +1272,28 @@ class ServingScheduler:
                 np.asarray(saved.tokens[:saved.count - 1], np.int32)])
             plen = int(prefix.shape[0])
             assert plen == saved.pos
-            bucket = self._bucket_for(plen)
+            bucket = min(self._bucket_for(plen), self._cache_len)
             padded = np.full((1, bucket), self.pad_id, np.int32)
             padded[0, :plen] = prefix
+            pages_a = dpages_a = None
+            if self._paged_kv:
+                # allocate the prefix's pages + the worst-case
+                # reservation exactly as a fresh admission would
+                reserve = max(self._reserve_tokens(
+                    req, self._bucket_for(len(req.prompt))), bucket)
+                self._alloc.admit(slot, bucket, reserve)
+                try:
+                    if self._dalloc is not None:
+                        self._dalloc.admit(slot, bucket, reserve)
+                except PoolExhausted:
+                    self._alloc.free(slot)
+                    raise
+                npg = pages_for(bucket, self.page_size)
+                pages_a = jnp.asarray(
+                    self._alloc.table[slot, :npg][None, :])
+                if self._dalloc is not None:
+                    dpages_a = jnp.asarray(
+                        self._dalloc.table[slot, :npg][None, :])
             fn = self._resume_fns.get(bucket)
             if fn is None:
                 fn = self._resume_fns[bucket] = self._build_resume_fn(
@@ -1189,9 +1301,19 @@ class ServingScheduler:
             plen_a = jnp.asarray([plen], jnp.int32)
             slot_a = jnp.int32(slot)
             if self.speculative:
-                d["cache"], d["dcache"] = fn(
-                    self.params, self.draft_params, jnp.asarray(padded),
-                    plen_a, slot_a, d["cache"], d["dcache"])
+                if self._paged_kv:
+                    d["cache"], d["dcache"] = fn(
+                        self.params, self.draft_params,
+                        jnp.asarray(padded), plen_a, slot_a, pages_a,
+                        dpages_a, d["cache"], d["dcache"])
+                else:
+                    d["cache"], d["dcache"] = fn(
+                        self.params, self.draft_params,
+                        jnp.asarray(padded), plen_a, slot_a, d["cache"],
+                        d["dcache"])
+            elif self._paged_kv:
+                d["cache"] = fn(self.params, jnp.asarray(padded), plen_a,
+                                slot_a, pages_a, d["cache"])
             else:
                 d["cache"] = fn(self.params, jnp.asarray(padded), plen_a,
                                 slot_a, d["cache"])
@@ -1211,6 +1333,9 @@ class ServingScheduler:
         st.count = saved.count
         st.admitted_at = saved.admitted_at
         st.preempts = saved.n_preempts
+        # tokens up to here are already in the WAL (emits precede any
+        # eviction/snapshot); only NEW tokens need journaling
+        st.journaled = saved.count
         self._seq += 1
         st.seq = self._seq
         self._n_resume += 1
@@ -1243,6 +1368,21 @@ class ServingScheduler:
         toks = saved.tokens if saved is not None else []
         spec_on = (self.speculative and bool(req.speculative)
                    and saved is not None)
+        if self._journal is not None:
+            self._journal.append(
+                "finalize", rid=int(req.request_id),
+                toks=[int(t) for t in toks],
+                generated=(saved.count if saved is not None else 0),
+                prompt_len=len(req.prompt), slot=-1,
+                arrival=float(req.arrival_time),
+                admitted=float(saved.admitted_at if saved is not None
+                               else now_t),
+                finished=float(now_t),
+                accepted=saved.acc if spec_on else None,
+                drafted=saved.drafted if spec_on else None,
+                reason=reason.value,
+                preemptions=(saved.n_preempts if saved is not None
+                             else 0))
         results.append(RequestResult(
             request_id=req.request_id,
             tokens=np.concatenate([np.asarray(req.prompt, np.int32),
@@ -1314,6 +1454,10 @@ class ServingScheduler:
             else:
                 self._backoff.pop(rid, None)
                 self._retry_at.pop(rid, None)
+                if self._journal is not None:
+                    self._journal.append("reject", rid=rid, reason=reason,
+                                         attempts=attempts,
+                                         at_s=float(now_t))
                 rejected.append(Rejected(request_id=rid, reason=reason,
                                          attempts=attempts,
                                          rejected_at=now_t))
@@ -1544,6 +1688,7 @@ class ServingScheduler:
             st.count = 1
             st.admitted_at = now
             st.preempts = 0
+            st.journaled = 0
             self._seq += 1
             st.seq = self._seq
 
@@ -1556,19 +1701,30 @@ class ServingScheduler:
         # draft/verify; plain slots report n/a (None), never 0-of-0
         spec_on = (self.speculative and bool(req.speculative)
                    and acc_h is not None)
+        toks_list = [int(t) for t in st.tokens]
+        accepted = int(acc_h[slot]) if spec_on else None
+        drafted = int(drafted_h[slot]) if spec_on else None
+        if self._journal is not None:
+            self._journal.append(
+                "finalize", rid=int(req.request_id), toks=toks_list,
+                generated=int(st.count), prompt_len=len(req.prompt),
+                slot=int(slot), arrival=float(req.arrival_time),
+                admitted=float(st.admitted_at), finished=float(now),
+                accepted=accepted, drafted=drafted,
+                reason=(reason.value if reason is not None else None),
+                preemptions=int(st.preempts))
         results.append(RequestResult(
             request_id=req.request_id,
             tokens=np.concatenate([np.asarray(req.prompt, np.int32),
-                                   np.asarray([int(t) for t in st.tokens],
-                                              np.int32)]),
+                                   np.asarray(toks_list, np.int32)]),
             generated=st.count,
             prompt_len=len(req.prompt),
             slot=slot,
             arrival_time=req.arrival_time,
             admitted_at=st.admitted_at,
             finished_at=now,
-            accepted=int(acc_h[slot]) if spec_on else None,
-            drafted=int(drafted_h[slot]) if spec_on else None,
+            accepted=accepted,
+            drafted=drafted,
             cancel_reason=reason,
             preemptions=st.preempts,
         ))
@@ -1576,6 +1732,7 @@ class ServingScheduler:
         st.tokens = []
         st.count = 0
         st.preempts = 0
+        st.journaled = 0
         if self._paged_kv:
             # free-on-eos: every page (and the reservation) returns to
             # the pool the moment the slot finalizes
@@ -1583,6 +1740,52 @@ class ServingScheduler:
             if self._dalloc is not None:
                 self._dalloc.free(slot)
         self._free.append(slot)
+
+    # -------------------------------------------------------- durability
+    def _take_snapshot(self, step: int) -> None:
+        """Capture every active slot at save_restore depth plus the
+        queue into the snapshot store (async, atomic-rename commit).
+        Snapshots are tagged by the journal LSN — monotone across
+        process restarts, unlike the step counter, and recovery uses it
+        to know which journal suffix postdates the snapshot.  Scalars
+        (tokens / tok / PRNG key / spec counters) live in meta.json so
+        a CRC-corrupt payload file degrades its slot to recompute
+        instead of losing it."""
+        slot_arrays: Dict[int, Dict[str, np.ndarray]] = {}
+        slot_meta: Dict[str, Any] = {}
+        for slot, st in enumerate(self._slots):
+            if st.request is None:
+                continue
+            saved = self._capture_slot(slot, mode="save_restore")
+            arrays: Dict[str, np.ndarray] = {}
+            for pfx, payload in (("rows__", saved.rows),
+                                 ("drows__", saved.drows),
+                                 ("pages__", saved.pages),
+                                 ("dpages__", saved.dpages)):
+                for key, arr in (payload or {}).items():
+                    arrays[pfx + key] = arr
+            slot_arrays[slot] = arrays
+            sm: Dict[str, Any] = {
+                "request": _request_meta(st.request),
+                "tokens": saved.tokens, "count": saved.count,
+                "pos": saved.pos, "tok": int(saved.tok[0]),
+                "keys": [int(saved.keys[0]), int(saved.keys[1])],
+                "admitted_at": saved.admitted_at,
+                "n_preempts": saved.n_preempts}
+            if self.speculative:
+                sm.update(spec=saved.spec, acc=saved.acc,
+                          drafted=saved.drafted, rounds=saved.rounds)
+            slot_meta[str(slot)] = sm
+        meta = {
+            "step": int(step),
+            "lsn": int(self._journal.lsn) if self._journal is not None
+            else 0,
+            "config": self._durability_config(),
+            "slots": slot_meta,
+            "queue": [_request_meta(r) for r in self._queue],
+        }
+        tag = meta["lsn"] if self._journal is not None else int(step)
+        self._snap_store.save(tag, slot_arrays, meta)
 
     # --------------------------------------------------------------- run
     def run(self, requests: Optional[Sequence[Request]] = None
@@ -1600,6 +1803,11 @@ class ServingScheduler:
         self._queue = collections.deque(
             sorted(self._queue, key=self._qkey))
         self._ensure_state()
+        if self._journal is not None and not self._journal_cfg:
+            # one config record per journal: pins everything the resumed
+            # streams' bit-identity depends on (recovery validates it)
+            self._journal.append("config", **self._durability_config())
+            self._journal_cfg = True
         if self._chunk_fn is None:
             self._chunk_fn = (self._build_spec_chunk_fn() if self.speculative
                               else self._build_chunk_fn())
@@ -1613,7 +1821,10 @@ class ServingScheduler:
         step = 0
         self._backoff.clear()
         self._retry_at.clear()
-        self._cancelled.clear()
+        # NOTE: _cancelled deliberately survives across run() calls —
+        # cancel() promises "honoured at the next chunk boundary", and
+        # crash recovery re-applies journaled-but-unhonoured cancels
+        # BEFORE the resumed drain starts (durability.recover_into)
         self._last_block = None
         self._n_preempt = 0
         self._n_resume = 0
@@ -1656,6 +1867,12 @@ class ServingScheduler:
                             self._alloc.inject_fault()
                     elif kind == "dispatch_error":
                         dispatch_fault = True
+                    elif kind == "crash":
+                        # simulated process death: propagate with NO
+                        # cleanup — the journal is fsync'd per record
+                        # and snapshots commit atomically, so disk state
+                        # is exactly what a SIGKILL here would leave
+                        raise SchedulerCrash(step)
                 now_t = now()
             step += 1
             # cancellation/deadline sweep over active slots, then the
@@ -1764,6 +1981,18 @@ class ServingScheduler:
                 acc_h = np.asarray(d["acc"])
                 drafted_h = np.asarray(d["drafted"])
             tnow = now()
+            jtok = jkeys = jacc = jdraft = jrounds = None
+            if self._journal is not None:
+                # emit records carry the slot's post-chunk scalars (next
+                # input token, PRNG key, spec counters): enough for the
+                # recompute fallback to continue the exact stream even
+                # when the snapshot payload is lost
+                jtok = np.asarray(d["tok"])
+                jkeys = np.asarray(d["keys"])
+                if self.speculative:
+                    jacc = np.asarray(d["acc"])
+                    jdraft = np.asarray(d["drafted"])
+                    jrounds = np.asarray(d["rounds"])
             for slot in range(self.capacity):
                 st = self._slots[slot]
                 if st.request is None:
@@ -1776,8 +2005,26 @@ class ServingScheduler:
                 if new > 0:
                     st.tokens.extend(int(t) for t in toks_h[slot, :new])
                     st.count += new
+                if self._journal is not None and st.count > st.journaled:
+                    rec = dict(
+                        rid=int(st.request.request_id),
+                        at=int(st.journaled),
+                        toks=[int(t) for t in
+                              st.tokens[st.journaled:st.count]],
+                        tok=int(jtok[slot, 0]),
+                        keys=[int(jkeys[slot, 0]), int(jkeys[slot, 1])])
+                    if self.speculative:
+                        rec.update(acc=int(jacc[slot]),
+                                   drafted=int(jdraft[slot]),
+                                   rounds=int(jrounds[slot]))
+                    self._journal.append("emit", **rec)
+                    st.journaled = st.count
                 if done_h[slot]:
                     self._finalize(slot, tnow, results, acc_h, drafted_h)
+            if (self._snap_store is not None and self._snap_every > 0
+                    and chunks % self._snap_every == 0
+                    and (self._queue or len(self._free) < self.capacity)):
+                self._take_snapshot(step)
 
         elapsed = now()
         gen = sum(r.generated for r in results)

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import Checkpointer, CorruptCheckpoint
 
 
 def tree(seed=0):
@@ -49,6 +49,29 @@ def test_idempotent_resave(tmp_path):
     ck.save(7, tree(), blocking=True)
     ck.save(7, tree(1), blocking=True)  # same step again: no crash
     assert ck.latest_step() == 7
+
+
+def test_bit_flipped_shard_refused(tmp_path):
+    """Silent media corruption must not load as weights: every shard is
+    CRC32'd into meta.json at save time, and restore refuses a shard
+    whose bytes no longer match."""
+    ck = Checkpointer(tmp_path)
+    t = tree()
+    ck.save(3, t, blocking=True)
+    meta = json.loads(
+        (pathlib.Path(tmp_path) / "step_00000003" / "meta.json").read_text())
+    assert meta["shard_crcs"], "save must record per-shard CRCs"
+    shard = pathlib.Path(tmp_path) / "step_00000003" / "shard_00000.npz"
+    data = bytearray(shard.read_bytes())
+    data[len(data) // 2] ^= 0x01          # one flipped bit
+    shard.write_bytes(bytes(data))
+    with pytest.raises(CorruptCheckpoint):
+        ck.restore(3, jax.tree.map(np.zeros_like, t))
+    # an intact checkpoint alongside still restores
+    ck.save(4, t, blocking=True)
+    restored, _ = ck.restore(4, jax.tree.map(np.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_restore_latest_none(tmp_path):

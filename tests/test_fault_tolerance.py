@@ -8,6 +8,7 @@ import pytest
 from repro.runtime.elastic import plan_mesh
 from repro.runtime.fault_tolerance import (FaultPlan, HeartbeatRegistry,
                                            InjectedFault, RestartPolicy,
+                                           SchedulerCrash,
                                            StragglerDetector)
 
 
@@ -49,6 +50,42 @@ def test_straggler_single_spike_not_flagged():
     assert sd.stragglers() == []
 
 
+def test_straggler_poll_does_not_double_count():
+    """Regression: polling ``stragglers()`` twice between records must
+    not burn patience at 2x.  Strikes advance at most once per new
+    fleet observation, and an already-flagged host stays flagged while
+    no new data arrives (its strike count frozen, not drifting)."""
+    sd = StragglerDetector(threshold=1.5, patience=2, ewma=1.0)
+    for h in ("a", "b", "c"):
+        sd.record(h, 1.0)
+    sd.record("d", 4.0)
+    assert sd.stragglers() == []           # strike 1 of 2
+    # a second poll with NO new observation must not add strike 2
+    assert sd.stragglers() == []
+    assert sd.strikes["d"] == 1
+    sd.record("d", 4.0)
+    assert sd.stragglers() == ["d"]        # strike 2: flagged
+    # stays flagged across data-free polls without strike drift
+    assert sd.stragglers() == ["d"]
+    assert sd.strikes["d"] == 2
+
+
+def test_heartbeat_register_opens_silence_window(fake_clock):
+    """A host that dies BEFORE its first beat is still reported dead:
+    ``register()`` opens the silence window at expected-join time."""
+    clock = fake_clock
+    hb = HeartbeatRegistry(timeout_s=10, clock=clock)
+    hb.beat("h0")
+    hb.register("h1")                      # expected to join, never beats
+    clock.t = 5
+    hb.beat("h0")
+    hb.register("h0")                      # no-op: must NOT reset h0's seen
+    assert hb.last_seen["h0"] == 5
+    clock.t = 12
+    assert hb.check() == ["h1"]
+    assert hb.alive() == ["h0"]
+
+
 def test_restart_backoff_and_budget(fake_clock):
     clock = fake_clock
     rp = RestartPolicy(max_restarts=3, window_s=100, base_backoff_s=1,
@@ -59,6 +96,46 @@ def test_restart_backoff_and_budget(fake_clock):
     assert rp.on_failure() is None       # budget exhausted
     clock.t = 200                        # window expired: budget refills
     assert rp.on_failure() == 1
+
+
+def test_restart_window_prunes_old_crashes(fake_clock):
+    """Crashes older than the window stop counting against the budget:
+    a slow trickle of failures never escalates past base backoff."""
+    clock = fake_clock
+    rp = RestartPolicy(max_restarts=3, window_s=100, base_backoff_s=1,
+                       max_backoff_s=64, clock=clock)
+    assert rp.on_failure() == 1            # t=0
+    clock.advance(60)
+    assert rp.on_failure() == 2            # t=60: both in window
+    clock.advance(60)
+    assert rp.on_failure() == 2            # t=120: t=0 crash pruned
+    assert len(rp.crashes) == 2
+
+
+def test_restart_gives_up_then_recovers(fake_clock):
+    """Budget exhaustion is not permanent: once the crash storm ages out
+    of the window, the policy restarts again from base backoff."""
+    clock = fake_clock
+    rp = RestartPolicy(max_restarts=2, window_s=50, base_backoff_s=1,
+                       max_backoff_s=8, clock=clock)
+    assert rp.on_failure() == 1            # t=0
+    clock.advance(1)
+    assert rp.on_failure() == 2            # t=1
+    clock.advance(1)
+    assert rp.on_failure() is None         # t=2: 3 crashes > budget of 2
+    clock.advance(60)                      # storm ages out of the window
+    assert rp.on_failure() == 1
+    assert len(rp.crashes) == 1
+
+
+def test_crash_fault_kind():
+    """``crash`` is a plannable kind and SchedulerCrash carries the
+    boundary step (durability tests drive the full recovery path)."""
+    plan = FaultPlan().at(3, "crash")
+    assert plan.take(3) == [("crash", None)]
+    err = SchedulerCrash(3)
+    assert isinstance(err, RuntimeError) and err.step == 3
+    assert "crash" in FaultPlan.KINDS
 
 
 def test_fault_plan_actions_fire_once():
