@@ -265,8 +265,12 @@ class EncDecModel:
             bp, kc, vc, xk, xv = xs
             layer_cache = {"k": kc, "v": vc, "pos": pos}
             if "bt" in cache:
-                # paged self-attention KV (runtime/paging.py); the
+                # paged self-attention KV (runtime/paging.py): decode,
+                # verify and native multi-token paged prefill all go
+                # through attention_block's block-table scatter; the
                 # cross-KV stays per-slot — it is static encoder memory
+                # (prefix sharing never applies: the scheduler cannot
+                # serve enc-dec at all, and xk/xv are not positional)
                 layer_cache["bt"] = cache["bt"]
             out, nc = self._dec_block(
                 bp, carry, cross_kv=(xk.astype(carry.dtype), xv.astype(carry.dtype)),

@@ -159,8 +159,13 @@ class HybridModel:
             positions = pos[:, None] + jnp.arange(sq)[None, :]
             stage_cache = {"k": kc, "v": vc, "pos": pos}
             if paged:
-                # shared-attention KV pages; conv/ssm state is constant
-                # size per slot and stays contiguous by design
+                # shared-attention KV pages: decode AND native paged
+                # prefill scatter through attention_block's block
+                # table; conv/ssm state is constant size per slot and
+                # stays contiguous by design — which is also why the
+                # scheduler's prefix index never shares this family's
+                # pages (the SSM state integrates the whole prompt, so
+                # a mapped k/v prefix alone cannot skip prefill)
                 stage_cache["bt"] = cache["bt"]
             h_out, nc = self._shared_apply(
                 params, h_out, cache=stage_cache,

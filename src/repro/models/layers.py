@@ -310,10 +310,15 @@ def attention_block(
     ``(bt[pos // P], pos % P)``; reads gather ``pool[bt]`` back into a
     position-ordered logical view and run the UNCHANGED attention
     computation, so paged output is bit-identical to contiguous mode —
-    same values, different addressing (runtime/paging.py).  Only the
-    decode / per-row verify paths page; prefill runs against a
-    contiguous scratch cache whose prompt pages are scattered into the
-    pool by the scheduler's admission, so a paged prefill here refuses.
+    same values, different addressing (runtime/paging.py).  Decode,
+    per-row verify, and PREFILL all take the same paged write: the
+    scatter index ``cache["pos"][:, None] + arange(sq)`` is already
+    per-row and multi-token, so admission prefills write prompt k/v
+    straight into pool pages at their final addresses — no contiguous
+    scratch cache, no post-hoc page scatter.  Shared prefix pages
+    (refcounted, runtime/paging.py) are never written here: the
+    scheduler starts each row's tail prefill past its shared region and
+    copy-on-writes the one page a full-prefix hit would touch.
     """
     b, sq, _ = x.shape
     if tap is not None:
@@ -355,11 +360,10 @@ def attention_block(
                 # in runtime/paging.py).  Unmapped logical pages read
                 # the sentinel page — junk that kv_len/causal masking
                 # excludes exactly; frozen-row junk writes land there.
-                if not (sq == 1 or per_row):
-                    raise ValueError(
-                        "paged KV cache has no prefill path: prefill "
-                        "into a contiguous scratch cache and scatter "
-                        "prompt pages (runtime/paging.py)")
+                # The index is per-row AND multi-token, so decode
+                # (sq=1), speculative verify (per_row), and native
+                # paged prefill (sq=tail length from pos=shared) are
+                # one write path.
                 bt = cache["bt"]
                 P = cache["k"].shape[1]
                 idx = cache["pos"][:, None] + jnp.arange(sq)[None, :]

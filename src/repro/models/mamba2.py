@@ -295,7 +295,10 @@ class Mamba2Model:
         h, (convs, ssms) = jax.lax.scan(body, h, params["blocks"])
         # pass through any extra cache entries (e.g. a scheduler-side
         # block table): this family's state is constant size per slot,
-        # so the paged KV cache is a no-op for it by design
+        # so the paged KV cache is a no-op for it by design — and the
+        # scheduler's prefix index never shares its pages either (the
+        # SSM state integrates the whole prompt; there is no positional
+        # k/v prefix a later request could map instead of prefilling)
         new_cache = {**cache, "conv": convs.astype(cache["conv"].dtype),
                      "ssm": ssms,
                      "pos": cache["pos"] + tokens.shape[1]}

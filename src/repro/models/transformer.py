@@ -240,8 +240,12 @@ class Transformer:
         A paged cache (``"bt"`` block table alongside k/v page pools —
         runtime/paging.py) takes the same layer scans: the block table
         rides through every per-layer cache dict and the scatter/gather
-        addressing lives inside ``attention_block``, so paged decode
-        and verify are bit-identical to contiguous mode.
+        addressing lives inside ``attention_block``, so paged decode,
+        verify AND native paged prefill (multi-token prompt k/v
+        scatter-written at ``(bt[pos // P], pos % P)``, starting at any
+        ``pos`` — the shared-prefix tail path) are bit-identical to
+        contiguous mode.  There is no contiguous scratch prefill
+        anymore: this one path serves every cache write.
         """
         cfg = self.cfg
         h = self.embed_tokens(params, tokens, patches)

@@ -438,8 +438,13 @@ def recover_into(sched: ServingScheduler,
     checked and a mismatch raises, because resumed streams would not be
     bit-identical).  Active slots land in the preempted-parking map and
     re-admit through the existing restore path onto fresh physical
-    pages; everything else is re-queued.  Call :func:`finish_recovered`
-    (or ``sched.run()``) afterwards to drain.
+    pages; everything else is re-queued.  With ``prefix_cache=True``
+    each restore also re-seeds the prefix index from its private
+    prompt pages (the crashed process's index was host-side state), so
+    sharing resumes organically and recovered streams stay
+    bit-identical — shared pages hold the same values at different
+    addresses.  Call :func:`finish_recovered` (or ``sched.run()``)
+    afterwards to drain.
     """
     dur = durability if durability is not None else sched._durability
     if dur is None:
@@ -602,6 +607,12 @@ def finish_recovered(sched: ServingScheduler, info: RecoveryInfo
         rejected=info.prior_rejected + resumed.rejected,
         preemptions=resumed.preemptions,
         resumes=resumed.resumes,
-        slow_chunks=resumed.slow_chunks)
+        slow_chunks=resumed.slow_chunks,
+        page_high_water=resumed.page_high_water,
+        prefix_hits=resumed.prefix_hits,
+        prefix_misses=resumed.prefix_misses,
+        cow_copies=resumed.cow_copies,
+        swap_ins=resumed.swap_ins,
+        swap_outs=resumed.swap_outs)
     return RecoveredRun(run=merged, resumed=resumed, info=info,
                         replayed=replayed, mismatches=mismatches)

@@ -32,9 +32,25 @@ covers the newcomer.  Chunk-boundary extension never exceeds a slot's
 reservation, so an admitted request can always finish.  Capacity still
 beats contiguous slots because the reservation is the REQUEST's worst
 case, not the global ``cache_len``.
+
+Pages are REFCOUNTED so full prompt-prefix pages can be shared across
+slots: :class:`PrefixIndex` keys each full page of a prompt by the
+blake2b chain digest of ``(params_fingerprint, token prefix)``, and an
+admission whose prompt prefix is already resident maps the shared pages
+into its block table (refcount + 1 per page) and prefills only the
+uncached tail.  Shared pages are read-only by construction — the tail
+prefill starts past the shared region, and ``cow`` (copy-on-write)
+detaches the one page a writer would touch (a full-page-aligned hit
+re-prefills its last token for logits, so that page is detached before
+the write).  ``free`` decrements; a page returns to the free list only
+at refcount 0.  Under admission pressure the index SPILLS its coldest
+index-only pages to host memory (LRU order) instead of deferring with
+``no_pages``, swapping them back in on the next hit.
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -43,9 +59,10 @@ import numpy as np
 
 Pytree = Any
 
-__all__ = ["PoolExhausted", "PageAllocator", "PAGED_KEYS", "pages_for",
-           "paged_cache_spec", "make_paged_cache", "paginate_cache",
-           "logical_view", "scatter_prompt_pages"]
+__all__ = ["PoolExhausted", "PageAllocator", "PrefixIndex", "PAGED_KEYS",
+           "pages_for", "paged_cache_spec", "make_paged_cache",
+           "paginate_cache", "logical_view", "scatter_prompt_pages",
+           "copy_page", "extract_page", "inject_page", "params_fingerprint"]
 
 # cache leaves that hold positional KV entries and therefore page;
 # every other leaf (pos, conv/ssm state, encdec cross-KV, ring kl/vl)
@@ -72,9 +89,9 @@ def scatter_prompt_pages(pool: jnp.ndarray, sm: jnp.ndarray,
     page-padded (pad entries stay causally masked: the write pointer and
     attention length both stop at the true position), split into
     ``npg`` pages of ``page_size``, and scattered into
-    ``pool (L, num_pages+1, page_size, ...)``.  Shared by the scheduler's
-    batch-k admission fns and the crash-recovery recompute resume path,
-    so both land bitwise-identical page payloads.
+    ``pool (L, num_pages+1, page_size, ...)``.  A migration/test helper:
+    the scheduler's admission and resume paths prefill NATIVELY through
+    the block table (models/layers.py) and never take this detour.
     """
     kb, length = int(sm.shape[1]), int(sm.shape[2])
     npg = int(pages.shape[-1])
@@ -94,10 +111,21 @@ class PageAllocator:
     block table mirrored to the device before each chunk dispatch;
     unmapped entries are 0.
 
+    Every live page carries a REFCOUNT: 1 for each slot mapping it plus
+    1 for each prefix-index pin.  ``admit`` can map already-resident
+    shared pages (refcount + 1 each) ahead of its private allocations;
+    ``cow`` detaches a slot from a shared page before a divergent write;
+    ``free``/``unpin`` decrement and only return a page to the free list
+    at refcount 0.
+
     Invariants (property-tested in tests/test_paged.py):
-      * a live page belongs to exactly one slot;
+      * a page's refcount equals the number of slot mappings plus pins,
+        and a page is never mapped twice by ONE slot;
+      * a page with refcount > 1 is never written (writers must ``cow``
+        first — the scheduler's tail prefill starts past shared pages);
       * the sentinel is never allocated;
-      * after every slot frees, ``free_pages == num_pages`` (no leaks);
+      * after every slot frees and every pin drops,
+        ``free_pages == num_pages`` (no leaks);
       * allocation beyond the pool raises :class:`PoolExhausted` —
         nothing is evicted.
     """
@@ -116,16 +144,38 @@ class PageAllocator:
         self._free: List[int] = list(range(self.num_pages, 0, -1))
         self._pages: List[List[int]] = [[] for _ in range(self.capacity)]
         self._reserved: List[int] = [0] * self.capacity
+        self._refcnt: Dict[int, int] = {}    # live page -> references
+        self._pins: Dict[int, int] = {}      # live page -> index pins
         self.table = np.zeros((self.capacity, self.n_logical), np.int32)
         self._fail_next = 0              # armed injected faults (tests)
+        self.high_water = 0              # peak pages in use (pool - free)
+        self.cow_copies = 0              # pages detached by cow()
 
     # ------------------------------------------------------------- state
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
     def slot_pages(self, slot: int) -> Tuple[int, ...]:
         return tuple(self._pages[slot])
+
+    def refcount(self, page: int) -> int:
+        return self._refcnt.get(int(page), 0)
+
+    def pin_count(self, page: int) -> int:
+        return self._pins.get(int(page), 0)
+
+    def pinned_pages(self) -> int:
+        """Pages currently held (at least in part) by prefix-index pins."""
+        return len(self._pins)
+
+    def shared_pages(self) -> int:
+        """Live pages referenced more than once (slot or pin)."""
+        return sum(1 for n in self._refcnt.values() if n > 1)
 
     def outstanding(self) -> int:
         """Reserved-but-not-yet-allocated pages across live slots."""
@@ -134,6 +184,20 @@ class PageAllocator:
 
     def pages_for(self, tokens: int) -> int:
         return pages_for(tokens, self.page_size)
+
+    def headroom(self) -> int:
+        """Pages allocatable right now without touching a reservation."""
+        return len(self._free) - self.outstanding()
+
+    def accounting(self) -> str:
+        """One-line reservation-accounting snapshot for capacity
+        incidents: free / outstanding / reserved / refcounted pages."""
+        return (f"free={len(self._free)}/{self.num_pages} "
+                f"outstanding={self.outstanding()} "
+                f"reserved={sum(self._reserved)} "
+                f"refcounted={self.shared_pages()} "
+                f"pinned={self.pinned_pages()} "
+                f"high_water={self.high_water}")
 
     # ---------------------------------------------------- fault injection
     def inject_fault(self, n: int = 1) -> None:
@@ -146,33 +210,54 @@ class PageAllocator:
     def _maybe_fail(self, op: str) -> None:
         if self._fail_next > 0:
             self._fail_next -= 1
-            raise PoolExhausted(f"injected allocator fault during {op}")
+            raise PoolExhausted(
+                f"injected allocator fault during {op} [{self.accounting()}]")
 
     # -------------------------------------------------------- operations
-    def can_admit(self, reserve_tokens: int) -> bool:
+    def can_admit(self, reserve_tokens: int, shared_pages: int = 0) -> bool:
         """True when a request reserving ``reserve_tokens`` worst-case
-        cache entries can be admitted WITHOUT ever exhausting the pool
+        cache entries — ``shared_pages`` of them already resident via the
+        prefix index — can be admitted WITHOUT ever exhausting the pool
         mid-flight (its future extends stay within the reservation)."""
-        return (self.pages_for(reserve_tokens)
-                <= len(self._free) - self.outstanding())
+        need = max(0, self.pages_for(reserve_tokens) - int(shared_pages))
+        return need <= self.headroom()
 
     def admit(self, slot: int, tokens_now: int,
-              reserve_tokens: Optional[int] = None) -> List[int]:
+              reserve_tokens: Optional[int] = None,
+              shared: Tuple[int, ...] = ()) -> List[int]:
         """Allocate pages covering ``tokens_now`` entries for an empty
-        slot, reserving ``reserve_tokens`` (>= tokens_now) worst case."""
+        slot, reserving ``reserve_tokens`` (>= tokens_now) worst case.
+
+        ``shared`` pages (already resident, found via the prefix index)
+        are mapped as the slot's leading logical pages — refcount + 1
+        each, no allocation — and only the remainder is drawn from the
+        free list.  Returns the newly-allocated private pages."""
         if self._pages[slot]:
             raise ValueError(f"slot {slot} still holds pages — free first")
         self._maybe_fail("admit")
         need = self.pages_for(tokens_now)
         reserve = max(need, self.pages_for(reserve_tokens)
                       if reserve_tokens is not None else need)
-        if reserve > len(self._free) - self.outstanding():
+        shared = tuple(int(p) for p in shared)
+        if len(shared) > need:
+            raise ValueError(
+                f"slot {slot}: {len(shared)} shared pages exceed the "
+                f"{need}-page prompt mapping")
+        if reserve - len(shared) > self.headroom():
             raise PoolExhausted(
-                f"page pool exhausted: slot {slot} needs {reserve} pages "
-                f"(reservation) but only {len(self._free)} free minus "
-                f"{self.outstanding()} outstanding reservations")
+                f"page pool exhausted: slot {slot} needs "
+                f"{reserve - len(shared)} new pages (reservation of "
+                f"{reserve}, {len(shared)} shared) [{self.accounting()}]")
         self._reserved[slot] = reserve
-        return self._grow(slot, need)
+        for pg in shared:
+            if self._refcnt.get(pg, 0) < 1:
+                raise ValueError(f"shared page {pg} is not live")
+            if pg in self._pages[slot]:
+                raise ValueError(f"page {pg} mapped twice by slot {slot}")
+            self._refcnt[pg] += 1
+            self._pages[slot].append(pg)
+            self.table[slot, len(self._pages[slot]) - 1] = pg
+        return self._grow(slot, need - len(shared))
 
     def extend(self, slot: int, tokens: int) -> List[int]:
         """Grow the slot's mapping to cover ``tokens`` entries (no-op if
@@ -189,6 +274,75 @@ class PageAllocator:
             return []
         return self._grow(slot, need - have)
 
+    def cow(self, slot: int, logical: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write: detach the slot from the shared page at
+        logical index ``logical`` before a divergent write.
+
+        Returns ``(old_page, new_page)`` — the caller must device-copy
+        old -> new before writing — or ``None`` when the page is already
+        private (refcount 1: no copy needed, writes are safe).  The new
+        page comes from the free list; refuses (:class:`PoolExhausted`)
+        rather than dip below outstanding reservations."""
+        pages = self._pages[slot]
+        if not 0 <= logical < len(pages):
+            raise ValueError(f"slot {slot} has no logical page {logical}")
+        old = pages[logical]
+        if self._refcnt[old] == 1:
+            return None
+        if self.headroom() < 1:
+            raise PoolExhausted(
+                f"page pool exhausted: cannot copy-on-write slot {slot} "
+                f"logical page {logical} [{self.accounting()}]")
+        new = self._take_free()
+        pages[logical] = new
+        self.table[slot, logical] = new
+        self._refcnt[old] -= 1
+        self.cow_copies += 1
+        return old, new
+
+    def pin(self, page: int) -> None:
+        """Add a prefix-index reference to a live page (refcount + 1)."""
+        page = int(page)
+        if self._refcnt.get(page, 0) < 1:
+            raise ValueError(f"cannot pin dead page {page}")
+        self._refcnt[page] += 1
+        self._pins[page] = self._pins.get(page, 0) + 1
+
+    def unpin(self, page: int) -> bool:
+        """Drop a prefix-index reference; frees the page at refcount 0.
+        Returns True when the page went back to the free list."""
+        page = int(page)
+        if self._pins.get(page, 0) < 1:
+            raise ValueError(f"page {page} is not pinned")
+        self._pins[page] -= 1
+        if not self._pins[page]:
+            del self._pins[page]
+        return self._release(page)
+
+    def alloc_pinned(self) -> Optional[int]:
+        """Allocate a fresh page held only by an index pin (swap-in
+        target).  Returns ``None`` instead of raising when allocation
+        would dip below outstanding reservations."""
+        if self.headroom() < 1:
+            return None
+        pg = self._take_free()
+        self._pins[pg] = 1
+        return pg
+
+    def _take_free(self) -> int:
+        pg = self._free.pop()
+        self._refcnt[pg] = 1
+        self.high_water = max(self.high_water, self.used_pages)
+        return pg
+
+    def _release(self, page: int) -> bool:
+        self._refcnt[page] -= 1
+        if self._refcnt[page]:
+            return False
+        del self._refcnt[page]
+        self._free.append(page)
+        return True
+
     def _grow(self, slot: int, n: int) -> List[int]:
         # all-or-nothing: a partial grow would leave the slot holding
         # pages its caller does not know about
@@ -196,40 +350,262 @@ class PageAllocator:
             raise PoolExhausted(
                 f"page pool exhausted growing slot {slot} by {n}: only "
                 f"{len(self._free)} of {self.num_pages} pages free — "
-                "refusing to evict")
+                f"refusing to evict [{self.accounting()}]")
         got: List[int] = []
         for _ in range(n):
-            pg = self._free.pop()
+            pg = self._take_free()
             self._pages[slot].append(pg)
             self.table[slot, len(self._pages[slot]) - 1] = pg
             got.append(pg)
         return got
 
     def free(self, slot: int) -> int:
-        """Return every page the slot holds to the pool; clears its
-        block-table row (back to the sentinel) and reservation."""
+        """Drop the slot's reference on every page it maps; clears its
+        block-table row (back to the sentinel) and reservation.  Pages
+        still referenced elsewhere (another slot or an index pin) stay
+        live.  Returns the number of pages actually returned to the
+        free list."""
         pages = self._pages[slot]
-        n = len(pages)
-        self._free.extend(pages)
         self._pages[slot] = []
         self._reserved[slot] = 0
         self.table[slot, :] = 0
-        return n
+        return sum(1 for pg in pages if self._release(pg))
 
     # ------------------------------------------------------- diagnostics
     def check_invariants(self) -> None:
-        """Raise AssertionError on aliasing / sentinel / leak bugs."""
-        live = [pg for pages in self._pages for pg in pages]
+        """Raise AssertionError on refcount / aliasing / sentinel / leak
+        bugs."""
+        refs: Dict[int, int] = dict(self._pins)
+        for slot, pages in enumerate(self._pages):
+            assert len(set(pages)) == len(pages), (
+                f"slot {slot} maps a page twice")
+            for pg in pages:
+                refs[pg] = refs.get(pg, 0) + 1
+        live = set(self._refcnt)
         assert 0 not in live, "sentinel page allocated"
         assert 0 not in self._free, "sentinel page on the free list"
-        assert len(set(live)) == len(live), "page aliased to two slots"
-        assert not (set(live) & set(self._free)), "live page on free list"
+        assert refs == self._refcnt, (
+            f"refcount drift: counted {refs} != tracked {self._refcnt}")
+        assert all(n >= 1 for n in self._refcnt.values()), (
+            "live page with refcount < 1")
+        assert not (live & set(self._free)), "live page on free list"
         assert len(live) + len(self._free) == self.num_pages, "page leak"
         for slot, pages in enumerate(self._pages):
             got = list(self.table[slot, :len(pages)])
             assert got == pages, f"slot {slot} table/page-list mismatch"
             assert not self.table[slot, len(pages):].any(), (
                 f"slot {slot} table maps pages beyond its allocation")
+
+
+# ---------------------------------------------------------------------------
+# Device page helpers (COW copies, host swap)
+# ---------------------------------------------------------------------------
+
+def copy_page(cache: Dict[str, jax.Array], paged_keys: Tuple[str, ...],
+              src: int, dst: int) -> Dict[str, jax.Array]:
+    """Device-copy one physical page (all layers, all paged leaves)."""
+    out = dict(cache)
+    for key in paged_keys:
+        out[key] = out[key].at[:, int(dst)].set(out[key][:, int(src)])
+    return out
+
+
+def extract_page(cache: Dict[str, jax.Array], paged_keys: Tuple[str, ...],
+                 page: int) -> Dict[str, np.ndarray]:
+    """Pull one physical page to host memory (swap-out payload)."""
+    return {key: np.asarray(cache[key][:, int(page)]) for key in paged_keys}
+
+
+def inject_page(cache: Dict[str, jax.Array], paged_keys: Tuple[str, ...],
+                page: int, payload: Dict[str, np.ndarray]
+                ) -> Dict[str, jax.Array]:
+    """Write a host payload back into a physical page (swap-in)."""
+    out = dict(cache)
+    for key in paged_keys:
+        out[key] = out[key].at[:, int(page)].set(
+            jnp.asarray(payload[key], out[key].dtype))
+    return out
+
+
+def params_fingerprint(params: Pytree) -> bytes:
+    """Cheap params digest for prefix-index keying.
+
+    Shared pages hold MODEL OUTPUTS (k/v projections), so a prefix entry
+    is only reusable under the exact params that produced it — the
+    fingerprint (per-leaf shape/dtype plus a device-side abs-sum) is
+    mixed into every chain digest, making entries from other checkpoints
+    unreachable rather than subtly wrong."""
+    h = hashlib.blake2b(digest_size=16)
+    for leaf in jax.tree_util.tree_leaves(params):
+        leaf = jnp.asarray(leaf)
+        h.update(str(leaf.shape).encode())
+        h.update(str(leaf.dtype).encode())
+        h.update(np.asarray(jnp.sum(jnp.abs(leaf)), np.float64).tobytes())
+    return h.digest()
+
+
+class _PrefixEntry:
+    """One full prompt page: device-resident (``page``) or host-swapped
+    (``payload``)."""
+    __slots__ = ("page", "payload")
+
+    def __init__(self, page: Optional[int],
+                 payload: Optional[Dict[str, np.ndarray]] = None):
+        self.page = page
+        self.payload = payload
+
+
+class PrefixIndex:
+    """Content-hash LRU index of full prompt-prefix pages.
+
+    Each entry maps the blake2b chain digest of
+    ``(params_fingerprint, prompt[: (j + 1) * page_size])`` to the
+    physical page holding those ``page_size`` k/v entries.  Entries pin
+    their page (refcount + 1), so a prefix stays warm after the slot
+    that produced it frees — that is what makes repeat prompts hit.
+
+    Under admission pressure :meth:`spill` walks entries coldest-first
+    and swaps index-only pages (refcount == pin count) to host memory;
+    :meth:`ensure_resident` swaps them back on the next hit.  Spilling
+    never touches a page a live slot maps — those are not reclaimable.
+    """
+
+    def __init__(self, alloc: PageAllocator, paged_keys: Tuple[str, ...],
+                 fingerprint: bytes):
+        self._alloc = alloc
+        self._keys = tuple(paged_keys)
+        self._fp = bytes(fingerprint)
+        self._entries: "OrderedDict[bytes, _PrefixEntry]" = OrderedDict()
+        self.hits = 0            # admissions that mapped >= 1 shared page
+        self.misses = 0          # admissions that found no usable prefix
+        self.swap_ins = 0
+        self.swap_outs = 0
+
+    # ------------------------------------------------------------- state
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def page_size(self) -> int:
+        return self._alloc.page_size
+
+    def resident_pages(self) -> int:
+        """Entries currently holding a device page (== index pins)."""
+        return sum(1 for e in self._entries.values() if e.page is not None)
+
+    def swapped_pages(self) -> int:
+        return sum(1 for e in self._entries.values() if e.page is None)
+
+    def _digest(self, prompt: np.ndarray, j: int) -> bytes:
+        h = hashlib.blake2b(self._fp, digest_size=16)
+        h.update(prompt[:(j + 1) * self.page_size].tobytes())
+        return h.digest()
+
+    # --------------------------------------------------------- operations
+    def lookup(self, prompt: np.ndarray) -> List[_PrefixEntry]:
+        """Longest chain of indexed full pages covering the prompt.
+
+        Returns the entries for pages ``0..k-1`` (possibly host-swapped —
+        run :meth:`ensure_resident` before mapping them), touching each
+        as most-recently-used.  The chain stops one page short of the
+        full prompt's coverage ceiling only at the CALLER's discretion —
+        this walks as far as the index reaches."""
+        prompt = np.ascontiguousarray(prompt, np.int32)
+        chain: List[_PrefixEntry] = []
+        j = 0
+        while (j + 1) * self.page_size <= len(prompt):
+            entry = self._entries.get(self._digest(prompt, j))
+            if entry is None:
+                break
+            chain.append(entry)
+            j += 1
+        for key in [self._digest(prompt, i) for i in range(len(chain))]:
+            self._entries.move_to_end(key)
+        return chain
+
+    def ensure_resident(self, cache: Dict[str, jax.Array],
+                        chain: List[_PrefixEntry]
+                        ) -> Tuple[Dict[str, jax.Array], List[int]]:
+        """Swap host-swapped chain entries back onto device pages.
+
+        Returns the (possibly updated) cache and the physical page ids
+        of the resident prefix.  The chain truncates at the first entry
+        that cannot be made resident (no allocatable page) — a shorter
+        shared prefix, never a failure."""
+        pages: List[int] = []
+        for entry in chain:
+            if entry.page is None:
+                pg = self._alloc.alloc_pinned()
+                if pg is None:
+                    break
+                cache = inject_page(cache, self._keys, pg, entry.payload)
+                entry.page = pg
+                entry.payload = None
+                self.swap_ins += 1
+            pages.append(entry.page)
+        return cache, pages
+
+    def insert(self, prompt: np.ndarray, n_tokens: int,
+               pages: Tuple[int, ...]) -> int:
+        """Index every FULL page of an admitted prompt (partial trailing
+        pages are decode-written later and never shareable).  Pins each
+        newly-indexed page; already-indexed prefixes are touched, not
+        duplicated.  Returns the number of new entries."""
+        prompt = np.ascontiguousarray(prompt, np.int32)
+        added = 0
+        j = 0
+        while (j + 1) * self.page_size <= int(n_tokens) and j < len(pages):
+            key = self._digest(prompt, j)
+            entry = self._entries.get(key)
+            if entry is None:
+                self._alloc.pin(pages[j])
+                self._entries[key] = _PrefixEntry(int(pages[j]))
+                added += 1
+            else:
+                self._entries.move_to_end(key)
+            j += 1
+        return added
+
+    def spill(self, cache: Dict[str, jax.Array], need: int,
+              exclude: Optional[set] = None
+              ) -> Tuple[Dict[str, jax.Array], int]:
+        """Swap up to ``need`` cold index-only pages to host memory
+        (LRU order).  Pages a live slot still maps are skipped — they
+        are not reclaimable — as are pages in ``exclude`` (the chain an
+        in-flight admission is about to map).  Returns the updated
+        cache and the number of pages actually freed."""
+        freed = 0
+        exclude = exclude or set()
+        for entry in list(self._entries.values()):
+            if freed >= need:
+                break
+            pg = entry.page
+            if pg is None or pg in exclude:
+                continue
+            # index-only: every reference is ours
+            if self._alloc.refcount(pg) != self._alloc.pin_count(pg):
+                continue
+            entry.payload = extract_page(cache, self._keys, pg)
+            entry.page = None
+            self._alloc.unpin(pg)
+            self.swap_outs += 1
+            freed += 1
+        return cache, freed
+
+    def drop(self) -> int:
+        """Unpin every resident entry and clear the index (full
+        reclaim — lets pool-clean assertions see ``free_pages ==
+        num_pages`` again).  Returns the number of pages released."""
+        released = 0
+        for entry in self._entries.values():
+            if entry.page is not None:
+                released += bool(self._alloc.unpin(entry.page))
+        self._entries.clear()
+        return released
+
+    def reset_counters(self) -> None:
+        self.hits = self.misses = 0
+        self.swap_ins = self.swap_outs = 0
 
 
 # ---------------------------------------------------------------------------

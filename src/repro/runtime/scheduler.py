@@ -77,15 +77,36 @@ verify step overwrites a distinct slot — checked loudly).
 **Paged KV cache** (``cache="paged"``): instead of one contiguous
 ``cache_len`` row per slot, the k/v leaves become a fixed pool of
 ``page_size``-token blocks shared by all slots, with a per-slot block
-table (``runtime/paging.py``).  Admission scatters the prompt's pages
-into the pool, chunk boundaries append pages on demand for the next
-chunk's writes, and finalize returns every page — so mixed-length
-requests share HBM and concurrency at equal cache memory rises (the
-serving benchmark's capacity sweep).  Reservation accounting admits a
-request only when its WORST-CASE page count fits alongside live
-reservations, so pool exhaustion refuses admission (``no_pages``
-deferral, or :class:`~repro.runtime.paging.PoolExhausted` when nothing
-in flight can free pages) and never silently overwrites a live page.
+table (``runtime/paging.py``).  Admission prefills the prompt NATIVELY
+through the block table — the models' paged scatter writes each prompt
+token at ``(bt[pos // P], pos % P)`` in the same dispatch that computes
+its k/v, so there is exactly one prefill path per cache mode (the old
+contiguous scratch-prefill + page-scatter detour is gone) — chunk
+boundaries append pages on demand for the next chunk's writes, and
+every page-freeing exit (eos/cancel/deadline/preempt/crash) goes
+through refcount decrement.  Reservation accounting admits a request
+only when its WORST-CASE page count fits alongside live reservations,
+so pool exhaustion refuses admission (``no_pages`` deferral, or
+:class:`~repro.runtime.paging.PoolExhausted` when nothing in flight
+can free pages — both carry the allocator's accounting snapshot) and
+never silently overwrites a live page.
+
+**Shared-prefix admission** (``prefix_cache=True``, paged only): a
+content-hash index over full prompt pages (``PrefixIndex``) lets a
+request whose prompt shares a page-aligned prefix with an earlier one
+MAP those physical pages into its block table at refcount + 1 and
+prefill only the uncached tail (always >= 1 token, so last-token
+logits are computed fresh).  A hit whose prefix coverage is
+page-aligned copies its last shared page copy-on-write before the tail
+write can diverge; cold pages pinned only by the index spill to host
+memory under admission pressure and swap back on the next hit
+(LRU, ``swap_ins``/``swap_outs``).  Sharing requires purely positional
+KV state — families with per-slot recurrent state (mamba2/hybrid
+SSM) always miss, and the speculative draft pool never shares (its
+k/v come from different params).  Bit-identity to the contiguous
+engine is preserved throughout: shared pages hold the same values at
+different addresses, and the per-request sample stream never depends
+on whether its prefix hit.
 Output is bit-identical to contiguous mode — the attention math runs
 on a position-ordered gather of the slot's pages, same values at a
 different addressing.  Constant-size-state families (mamba2) have
@@ -149,9 +170,9 @@ import numpy as np
 from repro.runtime.fault_tolerance import (FaultPlan, InjectedFault,
                                            RestartPolicy, SchedulerCrash,
                                            StragglerDetector)
-from repro.runtime.paging import (PageAllocator, PoolExhausted,
-                                  make_paged_cache, pages_for,
-                                  scatter_prompt_pages)
+from repro.runtime.paging import (PageAllocator, PoolExhausted, PrefixIndex,
+                                  copy_page, make_paged_cache, pages_for,
+                                  params_fingerprint)
 
 Pytree = Any
 
@@ -268,6 +289,15 @@ class SchedulerRun:
     # chunk indices whose dispatch wall-time the StragglerDetector
     # flagged as persistent outliers vs the run median
     slow_chunks: List[int] = dataclasses.field(default_factory=list)
+    # paged-pool observability (all 0 for contiguous runs): peak pages
+    # in use this run, prefix-cache admission hits/misses, pages
+    # detached by copy-on-write, and host-swap traffic
+    page_high_water: int = 0
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    cow_copies: int = 0
+    swap_ins: int = 0
+    swap_outs: int = 0
 
     @property
     def tokens_per_sec(self) -> float:
@@ -353,6 +383,8 @@ class ServingScheduler:
                  draft_params: Optional[Pytree] = None, spec_k: int = 4,
                  cache: str = "contiguous", page_size: int = 16,
                  num_pages: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 prefill_chunk: Optional[int] = None,
                  preemption: str = "off",
                  admit_retries: Optional[int] = None,
                  backoff_base_s: float = 0.0, backoff_max_s: float = 1.0,
@@ -392,6 +424,22 @@ class ServingScheduler:
         if family in ("ssm", "hybrid"):
             # SSM state integrates pad tokens: exact-length prefills only
             prompt_buckets = None
+        if prefix_cache and cache != "paged":
+            raise ValueError(
+                'prefix_cache=True needs cache="paged": the contiguous '
+                "cache has no shared physical pages for two slots to map")
+        if prefill_chunk is not None:
+            if int(prefill_chunk) < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            if cache != "paged":
+                raise ValueError(
+                    'prefill_chunk applies to cache="paged" prompt '
+                    "prefill; the contiguous path prefills one slab")
+            if family in ("ssm", "hybrid"):
+                raise ValueError(
+                    "prefill_chunk is attention-only: conv/SSM prompt "
+                    "state does not thread across prefill chunk "
+                    "boundaries — these families prefill in one call")
         cfg = getattr(model, "cfg", None)
         ring_capable = bool(
             cfg is not None and getattr(cfg, "sliding_window", 0)
@@ -434,6 +482,9 @@ class ServingScheduler:
         self.cache_mode = cache
         self.page_size = int(page_size)
         self.num_pages = num_pages          # resolved at _ensure_state
+        self.prefix_cache = bool(prefix_cache)
+        self.prefill_chunk = (int(prefill_chunk)
+                              if prefill_chunk is not None else None)
         self.preemption = preemption
         # backpressure: admission backoff is OFF by default (a deferred
         # request retries at every boundary forever, today's behavior);
@@ -500,6 +551,9 @@ class ServingScheduler:
         self._n_logical = 0
         self._alloc: Optional[PageAllocator] = None
         self._dalloc: Optional[PageAllocator] = None
+        # prefix sharing (populated by _ensure_state when enabled and
+        # the family's cache is purely positional KV)
+        self._prefix: Optional[PrefixIndex] = None
         # robustness state
         self._resume_fns: Dict[int, Any] = {}      # recompute re-prefills
         self._preempted: Dict[int, _SavedSlot] = {}
@@ -558,6 +612,8 @@ class ServingScheduler:
             "cache": self.cache_mode, "page_size": self.page_size,
             "num_pages": (None if self.num_pages is None
                           else int(self.num_pages)),
+            "prefix_cache": self.prefix_cache,
+            "prefill_chunk": self.prefill_chunk,
             "temperature": self.temperature, "top_k": self.top_k,
             "speculative": self.speculative, "spec_k": self.spec_k,
             "eos_id": self.eos_id, "pad_id": self.pad_id,
@@ -640,6 +696,17 @@ class ServingScheduler:
                     self._dalloc = PageAllocator(int(self.num_pages),
                                                  self.page_size,
                                                  self.capacity, n_logical)
+                if (self.prefix_cache
+                        and set(cache) - {"pos", "bt"} == set(paged_keys)):
+                    # sharing needs a PURELY positional cache: a page of
+                    # k/v at positions [jP, (j+1)P) depends only on the
+                    # token prefix, so equal prefixes yield bit-equal
+                    # pages.  Hybrid/SSM conv+ssm state integrates the
+                    # whole prompt — their admissions always miss (the
+                    # index stays None; paged decode is unaffected).
+                    self._prefix = PrefixIndex(
+                        self._alloc, paged_keys,
+                        params_fingerprint(self.params))
         else:
             cache = self.model.init_cache(self.capacity, self._cache_len,
                                           dtype=self.cache_dtype)
@@ -862,21 +929,31 @@ class ServingScheduler:
 
         return jax.jit(run, donate_argnums=(2, 3, 4, 5, 6, 9, 10, 12))
 
-    def _build_admit_fn(self, bucket: int, kb: int):
+    def _build_admit_fn(self, bucket: int, kb: int, sh: int = 0):
         """Batch-``kb`` grouped admission: ONE prefill dispatch for
         ``kb`` same-bucket prompts, rows scattered into their slots.
 
-        Paged mode scatters each row's prefilled k/v into its allocated
-        physical pages (one ``pool.at[:, pages]`` scatter per leaf)
-        instead of a contiguous slot row; every other leaf (pos, SSM
-        state) keeps the per-slot row scatter."""
+        Paged mode prefills NATIVELY through the page pool: each row's
+        block table maps its (shared + private) physical pages, and the
+        prompt's k/v scatter-write straight to ``(bt[pos//P], pos%P)``
+        at their final addresses — there is no contiguous scratch cache
+        and no post-hoc page scatter on this path.  ``sh`` is the
+        group's static page-aligned shared-prefix length: those tokens'
+        k/v are already resident in prefix-index pages mapped into each
+        row's table, so the prefill covers only ``prompts[:, sh:]``
+        (positions advance from ``sh`` — attention still sees the full
+        logical view, and masking exactness keeps the result
+        bit-identical to a cold full prefill).  Contiguous mode keeps
+        its one path: a row-slab prefill scattered into slot rows.
+        """
         model = self.model
         eos_id = self.eos_id
-        # scratch caches only need the prompt bucket's length: the
-        # scatter below writes a sub-slab (dynamic_update_slice accepts
-        # updates smaller than the target), and everything past each
-        # row's write pointer is masked until overwritten.  Ring caches
-        # are the exception — their *structure* depends on length.
+        # contiguous slab caches only need the prompt bucket's length:
+        # the scatter below writes a sub-slab (dynamic_update_slice
+        # accepts updates smaller than the target), and everything past
+        # each row's write pointer is masked until overwritten.  Ring
+        # caches are the exception — their *structure* depends on
+        # length.
         cache_len = self._cache_len if self._ring else bucket
         cache_dtype = self.cache_dtype
         axes = self._slot_axes
@@ -884,7 +961,9 @@ class ServingScheduler:
         speculative = self.speculative
         paged = self._paged_kv
         paged_keys = self._paged_keys
-        P = self.page_size
+        if sh and not paged:
+            raise ValueError("shared prefixes need the paged cache")
+        pf_chunk = self.prefill_chunk if paged else None
 
         def scatter_rows(big, sm, ax, slots):
             for i in range(kb):
@@ -895,42 +974,75 @@ class ServingScheduler:
                     big, row.astype(big.dtype), tuple(starts))
             return big
 
-        def scatter_cache(big, small, slots, pages):
+        def scatter_cache(big, small, slots):
+            """Land a finished prefill in the big cache: paged leaves
+            were written IN the pool (replace wholesale), every other
+            leaf (pos, SSM state) row-scatters into its slot."""
             out = dict(big)            # keeps "bt" (host-mirrored)
             for key, sm in small.items():
+                if key == "bt":
+                    continue
                 if paged and key in paged_keys:
-                    # page-pad, split into pages, land each row's prompt
-                    # pages at its physical ids (shared with resume)
-                    out[key] = scatter_prompt_pages(out[key], sm, pages, P)
+                    out[key] = sm
                 else:
                     out[key] = scatter_rows(out[key], sm, axes[key], slots)
             return out
 
-        def scratch_prefill(params, prompts, plen):
-            """Batch-kb prefill into a scratch cache: padded tails are
-            causally masked, logits read at each row's true last token,
-            and the write pointer starts at the UNPADDED length so
-            generated tokens overwrite the pad tail entry by entry
-            (junk beyond the pointer stays causally masked — exactness
-            note in the module docstring)."""
+        def paged_prefill(params, prompts, plen, bts, cache, start):
+            """Native paged prefill for the uncached prompt tail.
+
+            Builds a kb-row cache VIEW over the shared pool: the paged
+            leaves ARE the pool (writes land at final page addresses
+            via each row's block table), non-positional leaves come
+            from a fresh kb-row init.  Prefills ``prompts[:, start:]``
+            (optionally in ``prefill_chunk``-token chunks — attention
+            families only; per-query masking makes the chunking
+            bit-invisible), accumulating each row's logits at its true
+            last token.  Padded tails are causally masked; the write
+            pointer then starts at the UNPADDED length so generated
+            tokens overwrite pad entries one by one."""
+            scratch = model.init_cache(kb, bucket, dtype=cache_dtype)
+            small = {key: leaf for key, leaf in scratch.items()
+                     if key not in paged_keys}
+            for key in paged_keys:
+                small[key] = cache[key]
+            small["bt"] = bts
+            small["pos"] = jnp.full((kb,), start, jnp.int32)
+            starts = (list(range(start, bucket, pf_chunk)) if pf_chunk
+                      else [start])
+            lg = None
+            for c0 in starts:
+                c1 = min(c0 + pf_chunk, bucket) if pf_chunk else bucket
+                li = jnp.clip(plen - 1 - c0, 0, c1 - c0 - 1)
+                logits, small = model.prefill(params, prompts[:, c0:c1],
+                                              small, last_idx=li)
+                lg_c = logits[:, -1, :]
+                if lg is None:
+                    lg = lg_c
+                else:
+                    # start <= plen - 1 for every row (admission always
+                    # re-prefills the last prompt token), so exactly one
+                    # chunk holds each row's true last position
+                    in_chunk = ((plen - 1) >= c0) & ((plen - 1) < c1)
+                    lg = jnp.where(in_chunk[:, None], lg_c, lg)
+            return {**small, "pos": plen.astype(jnp.int32)}, lg
+
+        def row_prefill(params, prompts, plen):
+            """Contiguous-mode batch-kb prefill: one slab per row,
+            scattered into slot rows afterwards.  Padded tails are
+            causally masked, logits read at each row's true last
+            token."""
             small = model.init_cache(kb, cache_len, dtype=cache_dtype)
             logits, small = model.prefill(params, prompts, small,
                                           last_idx=plen - 1)
             return ({**small, "pos": plen.astype(jnp.int32)},
                     logits[:, -1, :])                          # (kb, V)
 
-        def prefill_first(params, prompts, plen, admit_keys, keys, slots):
-            small, lg = scratch_prefill(params, prompts, plen)
-            if temperature > 0.0:
-                # per-request sample stream starts here: one half of
-                # the admission key draws the first token, the other
-                # seeds the slot's chunk-scan stream
-                split2 = jax.vmap(jax.random.split)(admit_keys)
-                first = self._sample_tok(lg, split2[:, 0])[:, 0]
-                keys = keys.at[slots].set(split2[:, 1])
-            else:
-                first = jnp.argmax(lg, axis=-1).astype(jnp.int32)  # (kb,)
-            return small, first, keys
+        def prefill(params, prompts, plen, bts, cache):
+            if paged:
+                return paged_prefill(params, prompts, plen, bts, cache,
+                                     sh)
+            return row_prefill(params, prompts, plen)
 
         def set_slot_state(first, max_new, slots, tok, done, n_gen, budget):
             first_done = max_new <= 1
@@ -944,10 +1056,18 @@ class ServingScheduler:
 
         if not speculative:
             def run(params, prompts, plen, max_new, slots, admit_keys,
-                    pages, cache, tok, done, n_gen, budget, keys):
-                small, first, keys = prefill_first(
-                    params, prompts, plen, admit_keys, keys, slots)
-                cache = scatter_cache(cache, small, slots, pages)
+                    bts, cache, tok, done, n_gen, budget, keys):
+                small, lg = prefill(params, prompts, plen, bts, cache)
+                if temperature > 0.0:
+                    # per-request sample stream starts here: one half of
+                    # the admission key draws the first token, the other
+                    # seeds the slot's chunk-scan stream
+                    split2 = jax.vmap(jax.random.split)(admit_keys)
+                    first = self._sample_tok(lg, split2[:, 0])[:, 0]
+                    keys = keys.at[slots].set(split2[:, 1])
+                else:
+                    first = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                cache = scatter_cache(cache, small, slots)
                 tok, done, n_gen, budget = set_slot_state(
                     first, max_new, slots, tok, done, n_gen, budget)
                 return cache, tok, done, n_gen, budget, keys, first
@@ -955,9 +1075,9 @@ class ServingScheduler:
             return jax.jit(run, donate_argnums=(7, 8, 9, 10, 11, 12))
 
         def run(params, dparams, prompts, plen, max_new, slots, spec_new,
-                admit_keys, slot_keys, pages, dpages, cache, dcache, tok,
+                admit_keys, slot_keys, bts, dbts, cache, dcache, tok,
                 done, n_gen, budget, spec, acc, drafted, keys, rounds):
-            small, lg = scratch_prefill(params, prompts, plen)
+            small, lg = prefill(params, prompts, plen, bts, cache)
             if temperature > 0.0:
                 # first token from the per-request key's prefill half —
                 # the same draw a batch-1 engine.generate_speculative
@@ -967,10 +1087,15 @@ class ServingScheduler:
                                     self.top_k)
             else:
                 first = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-            cache = scatter_cache(cache, small, slots, pages)
-            # draft shares the prompt: its own prefill, its own cache
-            dsmall, _ = scratch_prefill(dparams, prompts, plen)
-            dcache = scatter_cache(dcache, dsmall, slots, dpages)
+            cache = scatter_cache(cache, small, slots)
+            # the draft shares no pages (its k/v come from DIFFERENT
+            # params): its own full-prompt prefill into its own pool
+            if paged:
+                dsmall, _ = paged_prefill(dparams, prompts, plen, dbts,
+                                          dcache, 0)
+            else:
+                dsmall, _ = row_prefill(dparams, prompts, plen)
+            dcache = scatter_cache(dcache, dsmall, slots)
             spec = spec.at[slots].set(spec_new)
             acc = acc.at[slots].set(0)
             drafted = drafted.at[slots].set(0)
@@ -999,7 +1124,6 @@ class ServingScheduler:
         speculative = self.speculative
         paged = self._paged_kv
         paged_keys = self._paged_keys
-        P = self.page_size
 
         def scatter1(big, sm, ax, slot):
             starts = [jnp.int32(0)] * big.ndim
@@ -1007,23 +1131,38 @@ class ServingScheduler:
             return jax.lax.dynamic_update_slice(big, sm.astype(big.dtype),
                                                 tuple(starts))
 
-        def refill(params, prefix, plen, slot, pages, cache):
-            small = model.init_cache(1, cache_len, dtype=cache_dtype)
+        def refill(params, prefix, plen, slot, bts, cache):
+            if paged:
+                # native paged re-prefill: the batch-1 block-table row
+                # addresses the slot's fresh pages, prompt k/v scatter
+                # straight to their final pool addresses (same one-path
+                # prefill as admission)
+                scratch = model.init_cache(1, bucket, dtype=cache_dtype)
+                small = {key: leaf for key, leaf in scratch.items()
+                         if key not in paged_keys}
+                for key in paged_keys:
+                    small[key] = cache[key]
+                small["bt"] = bts
+                small["pos"] = jnp.zeros((1,), jnp.int32)
+            else:
+                small = model.init_cache(1, cache_len, dtype=cache_dtype)
             _, small = model.prefill(params, prefix, small,
                                      last_idx=plen - 1)
             small = {**small, "pos": plen.astype(jnp.int32)}
             out = dict(cache)
             for key, sm in small.items():
+                if key == "bt":
+                    continue
                 if paged and key in paged_keys:
-                    out[key] = scatter_prompt_pages(out[key], sm, pages, P)
+                    out[key] = sm       # prefill wrote the pool in place
                 else:
                     out[key] = scatter1(out[key], sm, axes[key], slot)
             return out
 
         if not speculative:
             if paged:
-                def run(params, prefix, plen, slot, pages, cache):
-                    return refill(params, prefix, plen, slot, pages,
+                def run(params, prefix, plen, slot, bts, cache):
+                    return refill(params, prefix, plen, slot, bts,
                                   cache)
                 return jax.jit(run, donate_argnums=(5,))
 
@@ -1032,10 +1171,10 @@ class ServingScheduler:
             return jax.jit(run, donate_argnums=(4,))
 
         if paged:
-            def run(params, dparams, prefix, plen, slot, pages, dpages,
+            def run(params, dparams, prefix, plen, slot, bts, dbts,
                     cache, dcache):
-                return (refill(params, prefix, plen, slot, pages, cache),
-                        refill(dparams, prefix, plen, slot, dpages,
+                return (refill(params, prefix, plen, slot, bts, cache),
+                        refill(dparams, prefix, plen, slot, dbts,
                                dcache))
             return jax.jit(run, donate_argnums=(7, 8))
 
@@ -1074,20 +1213,70 @@ class ServingScheduler:
         return max(bucket, len(req.prompt) + req.max_new
                    + self._spec_margin())
 
-    def _pages_available(self, req: Request, bucket: int) -> bool:
+    def _pages_available(self, req: Request, bucket: int,
+                         shared_pages: int = 0) -> bool:
         reserve = self._reserve_tokens(req, bucket)
-        if not self._alloc.can_admit(reserve):
+        if not self._alloc.can_admit(reserve, shared_pages):
             return False
+        # the draft pool never shares (draft k/v come from different
+        # params), so its check ignores the prefix hit
         return self._dalloc is None or self._dalloc.can_admit(reserve)
 
-    def _reserve_pages(self, req: Request, bucket: int, slot: int) -> None:
+    def _reserve_pages(self, req: Request, bucket: int, slot: int,
+                       shared: Tuple[int, ...] = (),
+                       cow_last: bool = False) -> None:
         """Allocate the prompt's pages now, reserve the worst case —
         chunk-boundary extends then never exceed the reservation, so an
-        admitted request can always run to completion."""
+        admitted request can always run to completion.
+
+        ``shared`` prefix-index pages map as the slot's leading logical
+        pages (refcount + 1, no allocation).  ``cow_last`` marks a
+        full-page-aligned hit: the LAST shared page contains the prompt
+        position the tail re-prefill must write (admission always
+        re-computes the final prompt token for its logits), so it is
+        detached by copy-on-write before the dispatch touches it."""
         reserve = self._reserve_tokens(req, bucket)
-        self._alloc.admit(slot, bucket, reserve)
+        self._alloc.admit(slot, bucket, reserve, shared=shared)
+        if cow_last:
+            pair = self._alloc.cow(slot, len(shared) - 1)
+            if pair is not None:
+                old, new = pair
+                self._dev["cache"] = copy_page(
+                    self._dev["cache"], self._paged_keys, old, new)
         if self._dalloc is not None:
             self._dalloc.admit(slot, bucket, reserve)
+
+    def _prefix_match(self, req: Request
+                      ) -> Tuple[Tuple[int, ...], int, bool]:
+        """Consult the prefix index for a fresh admission.
+
+        Returns ``(shared_pages, sh, cow_last)``: the physical pages to
+        map into the slot's leading block-table entries, the static
+        page-aligned shared token count the prefill skips, and whether
+        the last mapped page must copy-on-write (full-aligned hit whose
+        final page holds the last prompt token — it is re-prefilled for
+        logits, so the write needs a private copy).  Host-swapped chain
+        entries are swapped back in here; the chain truncates where
+        residency fails.  ``sh`` is always capped one token short of the
+        prompt so the last-token logits are computed fresh."""
+        plen = len(req.prompt)
+        P = self.page_size
+        prompt = np.asarray(req.prompt, np.int32)
+        chain = self._prefix.lookup(prompt)
+        if not chain:
+            return (), 0, False
+        self._dev["cache"], pages = self._prefix.ensure_resident(
+            self._dev["cache"], chain)
+        # tokens the prefill may skip: full hit pages, minus the page
+        # holding position plen-1 (its logits must be recomputed)
+        sh = min(len(pages) * P, ((plen - 1) // P) * P)
+        kept = sh // P
+        cow_last = len(pages) > kept
+        if kept == 0:
+            # a single-page prompt hit saves no prefill work and would
+            # only cost a COW copy — treat as a miss
+            return (), 0, False
+        return tuple(pages[:kept + (1 if cow_last else 0)]), sh, cow_last
 
     def _extend_pages(self) -> None:
         """Map pages for every write the NEXT chunk dispatch can make:
@@ -1288,12 +1477,12 @@ class ServingScheduler:
                 except PoolExhausted:
                     self._alloc.free(slot)
                     raise
-                npg = pages_for(bucket, self.page_size)
-                pages_a = jnp.asarray(
-                    self._alloc.table[slot, :npg][None, :])
+                # full block-table rows: the native paged re-prefill
+                # addresses pages through bt exactly like admission
+                pages_a = jnp.asarray(self._alloc.table[slot][None, :])
                 if self._dalloc is not None:
                     dpages_a = jnp.asarray(
-                        self._dalloc.table[slot, :npg][None, :])
+                        self._dalloc.table[slot][None, :])
             fn = self._resume_fns.get(bucket)
             if fn is None:
                 fn = self._resume_fns[bucket] = self._build_resume_fn(
@@ -1339,6 +1528,8 @@ class ServingScheduler:
         self._seq += 1
         st.seq = self._seq
         self._n_resume += 1
+        if self._paged_kv:
+            self._reseed_prefix(req, slot)
 
     def _force_preempt(self, request_id: int) -> bool:
         """FaultPlan hook: evict the slot running ``request_id``
@@ -1467,23 +1658,49 @@ class ServingScheduler:
         return True
 
     def _try_admit(self, req: Request, now_t: float,
-                   pending: List[Tuple[Request, int]],
+                   pending: List[Tuple[Request, int, int]],
                    requeued: List[Request]
                    ) -> Tuple[bool, Optional[str]]:
         """Admit one request (fresh or resumed), preempting
         strictly-lower-priority victims if enabled and needed.  On
         failure everything is left as found (modulo victims already
         evicted for a newcomer whose own admission then faulted — they
-        are parked and re-queued, a consistent state)."""
+        are parked and re-queued, a consistent state).
+
+        Fresh paged admissions consult the prefix index FIRST: a hit
+        maps the resident shared pages into the new slot's block table
+        and only the uncached tail is prefilled.  When pages run short
+        the index spills its coldest index-only pages to host memory
+        before this falls back to a ``no_pages`` deferral."""
         rid = req.request_id
         saved = self._preempted.get(rid)
         bucket = self._bucket_for(len(req.prompt))
+        shared: Tuple[int, ...] = ()
+        sh = 0
+        cow_last = False
         if saved is None:
             self._check_fits(req, bucket)  # never-fits raises here
+            if self._prefix is not None:
+                shared, sh, cow_last = self._prefix_match(req)
+        kept = sh // self.page_size if self._paged_kv else 0
+        spilled = False
         while True:
             if not self._free:
                 reason = "no_slot"
-            elif self._paged_kv and not self._pages_available(req, bucket):
+            elif (self._paged_kv
+                    and not self._pages_available(req, bucket, kept)):
+                if self._prefix is not None and not spilled:
+                    # swap cold index-only pages to host instead of
+                    # deferring; exclude the pages this very admission
+                    # is about to map
+                    reserve = self._alloc.pages_for(
+                        self._reserve_tokens(req, bucket))
+                    need = reserve - kept - self._alloc.headroom()
+                    self._dev["cache"], freed = self._prefix.spill(
+                        self._dev["cache"], need, exclude=set(shared))
+                    spilled = True
+                    if freed:
+                        continue
                 reason = "no_pages"
             else:
                 break
@@ -1499,8 +1716,14 @@ class ServingScheduler:
                 self._preempted.pop(rid, None)
             else:
                 if self._paged_kv:
-                    self._reserve_pages(req, bucket, slot)
-                pending.append((req, slot))
+                    self._reserve_pages(req, bucket, slot, shared=shared,
+                                        cow_last=cow_last)
+                if self._prefix is not None:
+                    if sh > 0:
+                        self._prefix.hits += 1
+                    else:
+                        self._prefix.misses += 1
+                pending.append((req, slot, sh))
         except PoolExhausted:
             # injected mid-admission allocator fault: hand back the
             # slot and any partially-allocated pages, stay deferred
@@ -1515,7 +1738,7 @@ class ServingScheduler:
     def _admission_scan(self, now_t: float, results: List[RequestResult],
                         deferrals: Dict[str, int],
                         rejected: List[Rejected],
-                        pending: List[Tuple[Request, int]],
+                        pending: List[Tuple[Request, int, int]],
                         limit: Optional[int] = None) -> None:
         """One chunk-boundary pass over the queue in ``_qkey`` order:
         resolve cancels/deadlines, honour backoff timers, admit what
@@ -1570,7 +1793,7 @@ class ServingScheduler:
             # a mid-scan raise (never-fits request, real allocator bug)
             # must lose nothing: hand back this pass's not-yet-prefilled
             # pops and requeue everything untouched
-            for req2, slot in pending:
+            for req2, slot, _sh in pending:
                 if self._paged_kv:
                     self._alloc.free(slot)
                     if self._dalloc is not None:
@@ -1585,22 +1808,26 @@ class ServingScheduler:
         self._queue = collections.deque(
             sorted(out + requeued, key=self._qkey))
 
-    def _admit_many(self, admissions: List[Tuple[Request, int]],
+    def _admit_many(self, admissions: List[Tuple[Request, int, int]],
                     now: float) -> None:
-        """Group (request, slot) pairs by prompt bucket and admit each
-        group through batch-k prefill dispatches (k ∈ ADMIT_BATCH)."""
-        groups: Dict[int, List[Tuple[Request, int]]] = {}
-        for req, slot in admissions:
+        """Group (request, slot, shared-len) triples by (prompt bucket,
+        shared-prefix length) and admit each group through batch-k
+        prefill dispatches (k ∈ ADMIT_BATCH).  ``sh`` joins the group
+        key because it is a STATIC slice bound of the jitted admission
+        fn — prompts with equal buckets but different cache hits prefill
+        different tails."""
+        groups: Dict[Tuple[int, int], List[Tuple[Request, int]]] = {}
+        for req, slot, sh in admissions:
             bucket = self._bucket_for(len(req.prompt))
-            groups.setdefault(bucket, []).append((req, slot))
-        for bucket, pairs in groups.items():
+            groups.setdefault((bucket, sh), []).append((req, slot))
+        for (bucket, sh), pairs in groups.items():
             i = 0
             while i < len(pairs):
                 kb = next(s for s in ADMIT_BATCH if s <= len(pairs) - i)
-                self._admit_batch(bucket, pairs[i:i + kb], now)
+                self._admit_batch(bucket, sh, pairs[i:i + kb], now)
                 i += kb
 
-    def _admit_batch(self, bucket: int,
+    def _admit_batch(self, bucket: int, sh: int,
                      pairs: List[Tuple[Request, int]], now: float) -> None:
         kb = len(pairs)
         padded = np.full((kb, bucket), self.pad_id, np.int32)
@@ -1615,19 +1842,19 @@ class ServingScheduler:
             max_news[i] = req.max_new
             slots[i] = slot
             spec_new[i] = bool(req.speculative)
-        fn = self._admit_fns.get((bucket, kb))
+        fn = self._admit_fns.get((bucket, kb, sh))
         if fn is None:
-            fn = self._admit_fns[(bucket, kb)] = self._build_admit_fn(
-                bucket, kb)
+            fn = self._admit_fns[(bucket, kb, sh)] = self._build_admit_fn(
+                bucket, kb, sh)
         d = self._dev
         if self._paged_kv:
-            # physical page ids for each row's prompt pages, allocated
-            # when the request was popped (_reserve_pages)
-            npg = pages_for(bucket, self.page_size)
+            # full block-table rows (shared prefix pages + private
+            # pages, mapped when the request was popped): the native
+            # prefill scatter-writes through these to final addresses
             pages = jnp.asarray(np.stack(
-                [self._alloc.table[slot, :npg] for _, slot in pairs]))
+                [self._alloc.table[slot] for _, slot in pairs]))
             dpages = (jnp.asarray(np.stack(
-                [self._dalloc.table[slot, :npg] for _, slot in pairs]))
+                [self._dalloc.table[slot] for _, slot in pairs]))
                 if self._dalloc is not None else jnp.zeros((kb, 1),
                                                            jnp.int32))
         else:
@@ -1691,6 +1918,16 @@ class ServingScheduler:
             st.journaled = 0
             self._seq += 1
             st.seq = self._seq
+            if self._prefix is not None:
+                # index this prompt's full pages right after dispatch
+                # (XLA executes the prefill before any later read, so
+                # mapping the page ids now is safe) — admissions later
+                # in THIS burst can already share them
+                plen = len(req.prompt)
+                self._prefix.insert(
+                    np.asarray(req.prompt, np.int32), plen,
+                    self._alloc.slot_pages(slot)[
+                        :self._alloc.pages_for(plen)])
 
     def _finalize(self, slot: int, now: float, results: List[RequestResult],
                   acc_h=None, drafted_h=None,
@@ -1775,6 +2012,17 @@ class ServingScheduler:
             if self.speculative:
                 sm.update(spec=saved.spec, acc=saved.acc,
                           drafted=saved.drafted, rounds=saved.rounds)
+            if self._paged_kv:
+                # shared-page mapping + refcounts travel with the
+                # snapshot: payloads above hold page CONTENTS, so
+                # recovery restores private copies and _reseed_prefix
+                # rebuilds sharing — this records what sharing existed
+                pgs = self._alloc.slot_pages(slot)
+                sm["pages"] = [int(pg) for pg in pgs]
+                sm["refcounts"] = [int(self._alloc.refcount(pg))
+                                   for pg in pgs]
+                sm["shared"] = sum(
+                    1 for pg in pgs if self._alloc.refcount(pg) > 1)
             slot_meta[str(slot)] = sm
         meta = {
             "step": int(step),
@@ -1784,8 +2032,32 @@ class ServingScheduler:
             "slots": slot_meta,
             "queue": [_request_meta(r) for r in self._queue],
         }
+        if self._prefix is not None:
+            meta["prefix"] = {
+                "entries": len(self._prefix),
+                "resident": self._prefix.resident_pages(),
+                "swapped": self._prefix.swapped_pages(),
+            }
         tag = meta["lsn"] if self._journal is not None else int(step)
         self._snap_store.save(tag, slot_arrays, meta)
+
+    def _reseed_prefix(self, req: Request, slot: int) -> None:
+        """Re-seed the prefix index from a restored slot.  Restores
+        always land on private pages (snapshot/preemption payloads
+        carry page CONTENTS), and after a crash the old process's index
+        — host-side state — is gone; re-inserting the slot's full
+        prompt pages lets the resumed drain share again.  Only full
+        prompt pages are indexed, and decode writes land at
+        ``pos >= plen``, so indexed pages are never written after this.
+        On a plain preemption resume the digests usually still exist
+        (pinned through the eviction) — insert just touches them."""
+        if self._prefix is None:
+            return
+        prompt = np.asarray(req.prompt, np.int32)
+        plen = int(prompt.shape[0])
+        pages = self._alloc.slot_pages(slot)
+        self._prefix.insert(prompt, plen,
+                            pages[:self._alloc.pages_for(plen)])
 
     # --------------------------------------------------------------- run
     def run(self, requests: Optional[Sequence[Request]] = None
@@ -1840,6 +2112,15 @@ class ServingScheduler:
             base_backoff_s=self._backoff_base,
             max_backoff_s=self._backoff_max, clock=self._clock)
         dispatch_fault = False
+        # the allocator and prefix index persist across run() calls (a
+        # warm prefix cache is the whole point), so per-run counters
+        # are diffs against their values at drain start
+        _pa, _pi = self._alloc, self._prefix
+        cow0 = _pa.cow_copies if _pa is not None else 0
+        hits0 = _pi.hits if _pi is not None else 0
+        miss0 = _pi.misses if _pi is not None else 0
+        sin0 = _pi.swap_ins if _pi is not None else 0
+        sout0 = _pi.swap_outs if _pi is not None else 0
         t0 = self._clock()
 
         def now() -> float:
@@ -1910,7 +2191,7 @@ class ServingScheduler:
                     # to Rejected instead)
                     raise PoolExhausted(
                         "page pool exhausted with zero active slots — "
-                        "cannot make progress")
+                        f"cannot make progress [{self._alloc.accounting()}]")
                 # idle: sleep up to the next admissible arrival or
                 # backoff-retry time
                 target = min(
@@ -2037,4 +2318,10 @@ class ServingScheduler:
                         if r.drafted is not None),
             deferrals=deferrals, rejected=rejected,
             preemptions=self._n_preempt, resumes=self._n_resume,
-            slow_chunks=sorted(slow))
+            slow_chunks=sorted(slow),
+            page_high_water=_pa.high_water if _pa is not None else 0,
+            prefix_hits=(_pi.hits - hits0) if _pi is not None else 0,
+            prefix_misses=(_pi.misses - miss0) if _pi is not None else 0,
+            cow_copies=(_pa.cow_copies - cow0) if _pa is not None else 0,
+            swap_ins=(_pi.swap_ins - sin0) if _pi is not None else 0,
+            swap_outs=(_pi.swap_outs - sout0) if _pi is not None else 0)

@@ -2,11 +2,12 @@
 
 {transformer, encdec, mamba2, hybrid} x {dense, PIFA, MPIFA_NS} x
 {engine scan, scheduler continuous, speculative engine, speculative
-scheduler slots, PAGED scheduler}: greedy token BIT-identity everywhere
-the combo is supported, and a LOUD refusal (never a silent skip or
-fallback) where it is not — the scheduler serves token-prompt families,
-so encdec x scheduler raises, and ring-cache archs (gemma3) refuse
-``cache="paged"`` (their circular writes overwrite history in place).
+scheduler slots, PAGED scheduler, prefix-sharing scheduler}: greedy
+token BIT-identity everywhere the combo is supported, and a LOUD
+refusal (never a silent skip or fallback) where it is not — the
+scheduler serves token-prompt families, so encdec x scheduler raises,
+and ring-cache archs (gemma3) refuse ``cache="paged"`` (their circular
+writes overwrite history in place).
 
 The ``paged_scheduler`` column runs the SAME request mix through both
 cache modes at one page-aligned ``cache_len`` and asserts the paged
@@ -15,7 +16,14 @@ just the engine reference) — the block-table refactor must be
 invisible in the output.  The ``preempt_scheduler`` column forces an
 eviction at a chunk boundary (paged save/restore, ISSUE 6) and holds
 the same engine-reference bit-identity: preemption must be invisible
-too.
+too.  The ``prefix_scheduler`` column serves two requests sharing a
+page-aligned prompt prefix through ``prefix_cache=True``: attention
+families must actually HIT (the second admission maps the first's
+indexed pages and prefills only its tail), conv/SSM-bearing families
+must not share at all (their prompt state is not positional), and
+every stream must still equal the independent batch-1 engine run
+bit-for-bit — shared pages are an addressing detail, never a value
+change.
 
 The reference stream for every (family, compression) cell is the
 single-dispatch engine's batch-1 greedy generation; the engine cell
@@ -39,13 +47,14 @@ from repro.runtime.scheduler import FaultPlan, Request, ServingScheduler
 FAMILIES = ("transformer", "encdec", "mamba2", "hybrid")
 COMPRESSIONS = ("dense", "pifa", "ns")
 RUNTIMES = ("engine", "scheduler", "spec_engine", "spec_scheduler",
-            "paged_scheduler", "preempt_scheduler")
+            "paged_scheduler", "preempt_scheduler", "prefix_scheduler")
 # combos that must REFUSE loudly (asserted below, never skipped):
 # enc-dec prefill needs frames, which the token-queue scheduler cannot
 # carry — all scheduler runtimes raise at construction.
 UNSUPPORTED = {("encdec", "scheduler"), ("encdec", "spec_scheduler"),
                ("encdec", "paged_scheduler"),
-               ("encdec", "preempt_scheduler")}
+               ("encdec", "preempt_scheduler"),
+               ("encdec", "prefix_scheduler")}
 PAGE_SIZE = 4
 
 ARCHS = {"encdec": "whisper_medium", "mamba2": "mamba2_2p7b",
@@ -197,8 +206,11 @@ def test_greedy_conformance(zoo, family, comp, runtime):
     reference greedy stream bit-for-bit; unsupported cells raise."""
     if (family, runtime) in UNSUPPORTED:
         kw = {}
-        if runtime in ("paged_scheduler", "preempt_scheduler"):
+        if runtime in ("paged_scheduler", "preempt_scheduler",
+                       "prefix_scheduler"):
             kw["cache"] = "paged"
+        if runtime == "prefix_scheduler":
+            kw["prefix_cache"] = True
         with pytest.raises(ValueError, match="frames"):
             _run_scheduler(zoo, family, comp,
                            speculative=runtime == "spec_scheduler", **kw)
@@ -221,6 +233,50 @@ def test_greedy_conformance(zoo, family, comp, runtime):
         assert np.array_equal(np.asarray(res.tokens[0]), ref), (
             f"{family}/{comp}: speculative engine diverged")
         assert res.rounds >= 1
+        return
+
+    if runtime == "prefix_scheduler":
+        # two prompts sharing a 2-page-aligned prefix, capacity 1 so
+        # the second admission arrives AFTER the first's pages are
+        # indexed: attention families must map them shared (a real
+        # prefix hit), conv/SSM-bearing families must refuse to share
+        # (their prompt state is not positional KV), and both streams
+        # must equal the independent engine run bit-for-bit
+        cfgf, model = zoo.base(family)
+        params = zoo.params_for(family, comp)
+        rng = np.random.default_rng(5)
+        shared = rng.integers(0, cfgf.vocab_size, 2 * PAGE_SIZE)
+        prompts = [np.concatenate(
+            [shared, rng.integers(0, cfgf.vocab_size, t)]).astype(np.int32)
+            for t in (3, 5)]
+        cache_len = 16 + max(BUDGETS) + PAGE_SIZE
+        cache_len -= cache_len % PAGE_SIZE
+        sched = ServingScheduler(model, params, capacity=1, chunk=2,
+                                 prompt_buckets=(16,), cache="paged",
+                                 page_size=PAGE_SIZE, cache_len=cache_len,
+                                 num_pages=16, prefix_cache=True)
+        run = sched.run([Request(request_id=i, prompt=p, max_new=b)
+                         for i, (p, b) in enumerate(zip(prompts, BUDGETS))])
+        if family == "transformer":
+            assert run.prefix_hits >= 1, (
+                f"{family}/{comp}: second admission missed the shared "
+                "prefix")
+        else:
+            assert run.prefix_hits == 0, (
+                f"{family}/{comp}: conv/SSM prompt state must never "
+                "be shared")
+        assert sorted(r.request_id for r in run.results) == [0, 1]
+        for r in run.results:
+            ref = np.asarray(zoo.engine(family).generate(
+                params, jnp.asarray(prompts[r.request_id][None, :]),
+                BUDGETS[r.request_id]).tokens[0])
+            n = r.prompt_len + r.generated
+            assert np.array_equal(r.tokens[:n], ref[:n]), (
+                f"{family}/{comp}/prefix: request {r.request_id} "
+                "diverged from the engine reference")
+        if sched._prefix is not None:
+            sched._prefix.drop()
+            assert sched._alloc.free_pages == sched.num_pages
         return
 
     if runtime == "paged_scheduler":
@@ -283,5 +339,6 @@ def test_paged_refuses_ring_arch():
 
 
 def test_matrix_covers_issue_floor():
-    """The acceptance bar asks for >= 30 parametrized cases."""
+    """The acceptance bar asks for >= 30 parametrized cases (the
+    prefix_scheduler column grows the matrix to 4 x 3 x 7 = 84)."""
     assert len(FAMILIES) * len(COMPRESSIONS) * len(RUNTIMES) >= 30

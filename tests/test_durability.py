@@ -5,8 +5,10 @@ boundary must be INVISIBLE in the token streams.  Recovery (fresh
 scheduler <- journal + latest committed snapshot) re-emits every
 journaled prefix bitwise identically and the merged results match an
 uninterrupted run token-for-token — across {transformer, mamba2,
-hybrid} x {dense, pifa, ns}, for paged and contiguous caches, and for
-sampled speculative slots.  Around that core: journal framing (CRC per
+hybrid} x {dense, pifa, ns}, for paged and contiguous caches, for
+sampled speculative slots, and for shared-prefix (refcounted page)
+mixes, whose restored slots re-seed the prefix index so the cache
+stays warm across the crash.  Around that core: journal framing (CRC per
 record, torn-tail truncation), snapshot atomicity (.tmp invisible,
 per-slot CRCs), graceful degradation (corrupt slot payload -> recompute
 from the journaled prefix; corrupt meta -> older snapshot -> journal-
@@ -54,7 +56,13 @@ def _tokens(run):
 def _assert_pool_clean(sched):
     if getattr(sched, "_alloc", None) is not None:
         sched._alloc.check_invariants()
-        assert sched._alloc.free_pages == sched._alloc.num_pages
+        # index-aware accounting: prefix entries PIN their pages past
+        # the requests that produced them — that is the cache working,
+        # not a leak; everything else must be back on the free list
+        idx = getattr(sched, "_prefix", None)
+        resident = idx.resident_pages() if idx is not None else 0
+        assert (sched._alloc.free_pages + resident
+                == sched._alloc.num_pages)
     if getattr(sched, "_dalloc", None) is not None:
         sched._dalloc.check_invariants()
         assert sched._dalloc.free_pages == sched._dalloc.num_pages
@@ -479,3 +487,55 @@ def test_journal_records_full_lifecycle(tiny, tmp_path):
     dur2.close()
     assert not info.requeued and not info.restored
     assert _tokens(rec.run) == _tokens(run)
+
+
+def test_crash_recovery_shared_prefix(tiny, tmp_path):
+    """Crash mid-drain of a shared-prefix (``prefix_cache=True``) mix:
+    the recovered drain is bit-identical to the uninterrupted run,
+    restored slots RE-SEED the prefix index (a follow-up burst of the
+    same prompts hits on every admission and emits the same streams),
+    and the pool is leak-free under index-aware accounting with
+    ``drop()`` reclaiming every pinned page."""
+    cfg, model, params = tiny[:3]
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab_size, 2 * PAGE_SIZE)
+    reqs = [Request(request_id=i,
+                    prompt=np.concatenate(
+                        [shared, rng.integers(0, cfg.vocab_size, 1 + i)]
+                    ).astype(np.int32),
+                    max_new=5)
+            for i in range(4)]
+    kw = dict(capacity=2, chunk=2, prompt_buckets=(16,), cache="paged",
+              page_size=PAGE_SIZE, cache_len=24, num_pages=24,
+              prefix_cache=True)
+    ref = ServingScheduler(model, params, **kw).run(list(reqs))
+    dur = Durability(tmp_path, snapshot_every=2)
+    sched = ServingScheduler(model, params, durability=dur,
+                             fault_plan=FaultPlan().at(2, "crash"), **kw)
+    with pytest.raises(SchedulerCrash):
+        sched.run(list(reqs))
+    dur.close()
+    dur2 = Durability(tmp_path, snapshot_every=2)
+    sched2 = ServingScheduler(model, params, durability=dur2, **kw)
+    info = recover_into(sched2)
+    rec = finish_recovered(sched2, info)
+    _assert_identical(ref, rec)
+    _assert_pool_clean(sched2)
+    # the restored slots re-inserted their prompt pages: re-serving the
+    # same prompts through the RECOVERED scheduler hits on every
+    # admission and still emits the reference streams
+    warm = sched2.run([Request(request_id=100 + r.request_id,
+                               prompt=r.prompt.copy(), max_new=5)
+                       for r in reqs])
+    dur2.close()
+    assert warm.prefix_hits == len(reqs) and warm.prefix_misses == 0
+    ref_t = _tokens(ref)
+    for r in warm.results:
+        n = r.prompt_len + r.generated
+        assert r.tokens[:n].tolist() == ref_t[r.request_id - 100][:n], (
+            f"warm request {r.request_id} diverged after recovery")
+    sched2._alloc.check_invariants()
+    assert (sched2._alloc.free_pages + sched2._prefix.resident_pages()
+            == sched2._alloc.num_pages)
+    sched2._prefix.drop()
+    assert sched2._alloc.free_pages == sched2._alloc.num_pages

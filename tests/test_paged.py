@@ -2,19 +2,31 @@
 bit-identity.
 
 The allocator half property-tests ``runtime/paging.PageAllocator``
-against arbitrary admit/extend/free sequences (hypothesis when
-available, the repo's deterministic parametrized fallback otherwise):
+against arbitrary op sequences (hypothesis when available, the repo's
+deterministic parametrized fallback otherwise).  Plain tapes cover
+admit/extend/free; refcount tapes add shared-page admission, COW,
+index pins/unpins, and swap-in allocation:
 
-  * a live page is never aliased to two slots (and never the sentinel),
-  * pages never leak — once every slot frees, the whole pool is free,
+  * a writable page is never aliased to two slots (and never the
+    sentinel); a shared page becomes writable only through ``cow``,
+  * pages never leak — once every slot frees and every pin drops,
+    the whole pool is free,
+  * a shared page returns to the free list only at refcount 0,
   * exhaustion RAISES (``PoolExhausted``) instead of evicting.
+
+The :class:`PrefixIndex` units pin the content-hash prefix cache:
+full-page-only indexing, chain lookup with divergence, LRU host spill
+that skips live-slot pages, swap-in payload round-trips, and
+``drop()`` full reclaim.
 
 The scheduler half pins the serving contract: ``cache="paged"`` output
 is bit-identical to ``cache="contiguous"`` AND to the single-request
-engine — greedy and sampled, plain and speculative slots — while the
-pool drains back to full after every run; undersized pools defer
-admission with a ``no_pages`` reason (never a silent overwrite) and
-ring archs refuse paged mode loudly.
+engine — greedy and sampled, plain and speculative slots, chunked and
+whole-prompt native paged prefill, shared-prefix admissions (warm
+hits, COW on aligned repeats, host-swapped prefixes) — while the pool
+drains back to full after every run; undersized pools defer admission
+with a ``no_pages`` reason (never a silent overwrite) and ring archs
+refuse paged mode loudly.
 """
 import jax
 import jax.numpy as jnp
@@ -24,8 +36,9 @@ import pytest
 from repro.configs.base import get_smoke_config
 from repro.models.model import build_model
 from repro.runtime.engine import GenerationEngine
-from repro.runtime.paging import (PageAllocator, PoolExhausted,
-                                  logical_view, pages_for, paginate_cache)
+from repro.runtime.paging import (PAGED_KEYS, PageAllocator, PoolExhausted,
+                                  PrefixIndex, logical_view, pages_for,
+                                  paginate_cache, params_fingerprint)
 from repro.runtime.scheduler import Request, ServingScheduler
 
 try:
@@ -130,6 +143,175 @@ def test_allocator_extend_beyond_table_raises():
         alloc.extend(0, 8)                  # 4 pages > 3 table slots
 
 
+# ------------------------------------------------- refcounted allocator
+
+def _run_refcount_ops(num_pages, page_size, capacity, n_logical, ops):
+    """Drive the refcounted allocator through shared-page admissions,
+    COW detaches, index pins/unpins, and swap-in allocations.
+
+    Shadow state: ``owner`` maps every WRITABLE page to the one slot
+    allowed to write it (private admit/extend allocations and COW
+    copies) — two writers on one page is the aliasing bug this tape
+    hunts; ``shared_at`` tracks which logical indices a slot mapped
+    read-only so COW targets them; ``pins`` mirrors the prefix index's
+    references.  ``check_invariants`` recounts refcounts exactly after
+    every op; teardown proves refcount-0-only frees left no leaks."""
+    alloc = PageAllocator(num_pages, page_size, capacity, n_logical)
+    live = {}                       # slot -> token high-water
+    shared_at = {}                  # slot -> set of read-only logical idxs
+    owner = {}                      # page -> writer slot
+    pins = []                       # simulated prefix-index pins
+    def claim(slot, pages):
+        for pg in pages:
+            assert pg not in owner, (
+                f"page {pg} writable by slots {owner[pg]} and {slot}")
+            assert alloc.refcount(pg) == 1
+            owner[pg] = slot
+    for kind, a, b in ops:
+        slot = a % capacity
+        tokens = 1 + b % (n_logical * page_size)
+        if kind == 0 and slot not in live:          # admit, private
+            try:
+                claim(slot, alloc.admit(slot, tokens))
+                live[slot] = tokens
+                shared_at[slot] = set()
+            except PoolExhausted:
+                assert alloc.slot_pages(slot) == ()
+        elif kind == 1 and slot not in live:        # admit mapping shared
+            donors = [s for s in live if alloc.slot_pages(s)]
+            if not donors:
+                continue
+            donor = donors[b % len(donors)]
+            need = pages_for(tokens, page_size)
+            sh = alloc.slot_pages(donor)[:min(need, 1 + a % 3)]
+            before = [alloc.refcount(pg) for pg in sh]
+            try:
+                claim(slot, alloc.admit(slot, tokens, shared=sh))
+                live[slot] = tokens
+                shared_at[slot] = set(range(len(sh)))
+                for pg, rc in zip(sh, before):
+                    assert alloc.refcount(pg) == rc + 1
+            except PoolExhausted:
+                assert alloc.slot_pages(slot) == ()
+                for pg, rc in zip(sh, before):
+                    assert alloc.refcount(pg) == rc
+        elif kind == 2 and slot in live:            # extend
+            try:
+                claim(slot, alloc.extend(slot, tokens))
+                live[slot] = max(live[slot], tokens)
+            except PoolExhausted:
+                pass
+        elif kind == 3 and slot in live:            # free
+            before = {pg: alloc.refcount(pg)
+                      for pg in alloc.slot_pages(slot)}
+            alloc.free(slot)
+            for pg, rc in before.items():
+                # shared pages survive the free; refcount-1 pages don't
+                assert alloc.refcount(pg) == rc - 1
+                if owner.get(pg) == slot:
+                    del owner[pg]
+            del live[slot], shared_at[slot]
+        elif kind == 4 and slot in live and shared_at[slot]:   # cow
+            logical = sorted(shared_at[slot])[a % len(shared_at[slot])]
+            old = alloc.slot_pages(slot)[logical]
+            rc = alloc.refcount(old)
+            try:
+                res = alloc.cow(slot, logical)
+            except PoolExhausted:
+                assert alloc.slot_pages(slot)[logical] == old
+                continue
+            if res is None:                  # already private: rc was 1
+                assert rc == 1
+                assert old not in owner
+                owner[old] = slot
+            else:
+                assert res[0] == old and rc > 1
+                assert alloc.refcount(old) == rc - 1
+                claim(slot, [res[1]])
+                assert alloc.slot_pages(slot)[logical] == res[1]
+            shared_at[slot].discard(logical)
+        elif kind == 5:                             # pin (prefix index)
+            pages = [pg for s in live for pg in alloc.slot_pages(s)]
+            if pages:
+                pg = pages[b % len(pages)]
+                alloc.pin(pg)
+                pins.append(pg)
+        elif kind == 6 and pins:                    # unpin
+            pg = pins.pop(b % len(pins))
+            rc = alloc.refcount(pg)
+            freed = alloc.unpin(pg)
+            assert freed == (rc == 1), (
+                f"page {pg} freed at refcount {rc}")
+            if freed:
+                owner.pop(pg, None)
+        elif kind == 7:                             # swap-in target
+            pg = alloc.alloc_pinned()
+            if pg is not None:
+                assert alloc.refcount(pg) == 1
+                assert alloc.pin_count(pg) == 1
+                pins.append(pg)
+        alloc.check_invariants()
+    for slot in list(live):
+        alloc.free(slot)
+    while pins:
+        alloc.unpin(pins.pop())
+    alloc.check_invariants()
+    assert alloc.free_pages == num_pages, "pages leaked"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(num_pages=st.integers(1, 24), page_size=st.integers(1, 8),
+           capacity=st.integers(1, 6), n_logical=st.integers(1, 8),
+           ops=st.lists(st.tuples(st.integers(0, 7), st.integers(0, 63),
+                                  st.integers(0, 255)), max_size=50))
+    def test_refcount_invariants_property(num_pages, page_size, capacity,
+                                          n_logical, ops):
+        _run_refcount_ops(num_pages, page_size, capacity, n_logical, ops)
+
+
+@pytest.mark.parametrize("seed,num_pages,page_size,capacity,n_logical",
+                         [(0, 8, 2, 3, 4), (1, 3, 1, 4, 3), (2, 24, 4, 6, 6),
+                          (3, 1, 8, 2, 1), (4, 12, 3, 5, 4), (5, 6, 2, 4, 3)])
+def test_refcount_invariants(seed, num_pages, page_size, capacity,
+                             n_logical):
+    rng = np.random.default_rng(100 + seed)
+    ops = [(int(rng.integers(0, 8)), int(rng.integers(0, 64)),
+            int(rng.integers(0, 256))) for _ in range(80)]
+    _run_refcount_ops(num_pages, page_size, capacity, n_logical, ops)
+
+
+def test_shared_page_freed_only_at_refcount_zero():
+    """Three holders of one page (owner slot, sharer slot, index pin):
+    the page returns to the free list only when the LAST reference
+    drops, whichever order they release in."""
+    alloc = PageAllocator(num_pages=4, page_size=2, capacity=3, n_logical=4)
+    (pg,) = alloc.admit(0, 2)
+    alloc.admit(1, 2, shared=(pg,))
+    alloc.pin(pg)
+    assert alloc.refcount(pg) == 3
+    alloc.free(0)
+    assert alloc.refcount(pg) == 2 and pg not in alloc._free
+    assert not alloc.unpin(pg)
+    assert alloc.refcount(pg) == 1 and pg not in alloc._free
+    assert alloc.free(1) == 1
+    assert alloc.refcount(pg) == 0 and alloc.free_pages == 4
+    alloc.check_invariants()
+
+
+def test_cow_respects_reservations():
+    """COW refuses rather than eat a page another slot's reservation
+    is counting on — an admitted request must always be able to
+    finish."""
+    alloc = PageAllocator(num_pages=3, page_size=2, capacity=3, n_logical=3)
+    (pg,) = alloc.admit(0, 2)
+    alloc.admit(1, 2, shared=(pg,), reserve_tokens=6)  # reserves the rest
+    with pytest.raises(PoolExhausted, match="copy-on-write"):
+        alloc.cow(1, 0)
+    assert alloc.slot_pages(1) == (pg,)                # nothing changed
+    alloc.check_invariants()
+
+
 # ----------------------------------------------------- paged <-> logical
 
 def test_paginate_roundtrip_and_sentinel():
@@ -147,6 +329,106 @@ def test_paginate_roundtrip_and_sentinel():
     for key in ("k", "v"):
         np.testing.assert_array_equal(np.asarray(lv[key][:, :, :10]),
                                       np.asarray(cache[key]))
+
+
+# ----------------------------------------------------------- prefix index
+
+def _index_fixture(num_pages=8, page_size=4, capacity=2, n_logical=5):
+    alloc = PageAllocator(num_pages, page_size, capacity, n_logical)
+    cache = {key: jnp.zeros((1, num_pages + 1, page_size, 1, 2),
+                            jnp.float32) for key in PAGED_KEYS}
+    return alloc, cache, PrefixIndex(alloc, PAGED_KEYS, b"fp0")
+
+
+def test_prefix_index_full_pages_only_and_pins():
+    """Only FULL prompt pages are indexed (partial tails are decode-
+    written later); entries pin their page so prefixes outlive the slot
+    that produced them, and a later admission maps them shared."""
+    alloc, _, idx = _index_fixture()
+    prompt = np.arange(10, dtype=np.int32)        # 2 full pages + 2 tokens
+    pages = tuple(alloc.admit(0, 10))
+    assert idx.insert(prompt, 10, pages) == 2
+    assert idx.insert(prompt, 10, pages) == 0     # re-insert: touch only
+    assert [alloc.refcount(p) for p in pages] == [2, 2, 1]
+    chain = idx.lookup(prompt)
+    assert [e.page for e in chain] == list(pages[:2])
+    assert idx.lookup(np.arange(1, 11, dtype=np.int32)) == []
+    diverged = prompt.copy()
+    diverged[5] = 9999                            # inside page 1
+    assert [e.page for e in idx.lookup(diverged)] == [pages[0]]
+    alloc.free(0)                                 # prefix stays warm
+    assert alloc.refcount(pages[0]) == 1
+    assert alloc.refcount(pages[2]) == 0          # partial page reclaimed
+    got = alloc.admit(1, 10, shared=tuple(e.page for e in chain))
+    assert alloc.slot_pages(1)[:2] == pages[:2] and len(got) == 1
+    assert alloc.refcount(pages[0]) == 2
+    alloc.check_invariants()
+    alloc.free(1)
+    assert idx.drop() == 2
+    assert alloc.free_pages == alloc.num_pages
+
+
+def test_prefix_index_spill_skips_live_then_roundtrips():
+    """Host spill never touches a page a live slot maps; once the slot
+    frees, the coldest index-only pages swap out (pool fully drains)
+    and the payload round-trips bit-exactly on the next hit."""
+    alloc, cache, idx = _index_fixture()
+    prompt = np.arange(8, dtype=np.int32)
+    pages = np.asarray(alloc.admit(0, 8))
+    rng = np.random.default_rng(0)
+    for key in PAGED_KEYS:
+        cache[key] = cache[key].at[:, pages].set(
+            jnp.asarray(rng.normal(size=(1, 2, 4, 1, 2)), jnp.float32))
+    want = {key: np.asarray(cache[key][:, pages]) for key in PAGED_KEYS}
+    idx.insert(prompt, 8, tuple(int(p) for p in pages))
+    cache, freed = idx.spill(cache, need=2)
+    assert freed == 0                             # slot 0 still maps them
+    alloc.free(0)
+    cache, freed = idx.spill(cache, need=2)
+    assert freed == 2 and idx.swap_outs == 2
+    assert idx.resident_pages() == 0 and idx.swapped_pages() == 2
+    assert alloc.free_pages == alloc.num_pages    # fully reclaimed
+    chain = idx.lookup(prompt)                    # swapped entries still hit
+    assert len(chain) == 2
+    cache, back = idx.ensure_resident(cache, chain)
+    assert len(back) == 2 and idx.swap_ins == 2
+    for key in PAGED_KEYS:
+        np.testing.assert_array_equal(
+            np.asarray(cache[key][:, np.asarray(back)]), want[key])
+    alloc.check_invariants()
+    assert idx.drop() == 2
+    assert alloc.free_pages == alloc.num_pages
+
+
+def test_prefix_index_ensure_resident_truncates_under_pressure():
+    """When swap-in cannot allocate (reservations hold the pool), the
+    chain truncates to a shorter shared prefix instead of failing."""
+    alloc, cache, idx = _index_fixture(num_pages=4)
+    prompt = np.arange(8, dtype=np.int32)
+    pages = tuple(alloc.admit(0, 8))
+    idx.insert(prompt, 8, pages)
+    alloc.free(0)
+    cache, _ = idx.spill(cache, need=2)
+    alloc.admit(1, 12)                            # 3 pages -> headroom 1
+    chain = idx.lookup(prompt)
+    assert len(chain) == 2
+    cache, back = idx.ensure_resident(cache, chain)
+    assert len(back) == 1                         # second stayed swapped
+    assert chain[1].page is None
+    alloc.check_invariants()
+
+
+def test_params_fingerprint_keys_checkpoint():
+    """Prefix entries are unreachable under different params: the
+    fingerprint changes with values AND shapes, and is stable across
+    calls for the same params."""
+    a = {"w": jnp.ones((2, 3))}
+    assert params_fingerprint(a) == params_fingerprint(
+        {"w": jnp.ones((2, 3))})
+    assert params_fingerprint(a) != params_fingerprint(
+        {"w": 2 * jnp.ones((2, 3))})
+    assert params_fingerprint(a) != params_fingerprint(
+        {"w": jnp.ones((3, 2))})
 
 
 # ------------------------------------------------------------- scheduler
@@ -365,3 +647,132 @@ def test_paged_config_errors(tiny):
         ServingScheduler(model, params, cache="virtual")
     with pytest.raises(ValueError, match="page_size"):
         ServingScheduler(model, params, cache="paged", page_size=0)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServingScheduler(model, params, prefix_cache=True)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServingScheduler(model, params, cache="paged", prefill_chunk=0)
+    with pytest.raises(ValueError, match="contiguous path"):
+        ServingScheduler(model, params, prefill_chunk=4)
+
+
+# ------------------------------------------------- shared-prefix serving
+
+def test_prefix_sharing_hits_and_bit_identity(tiny, engine):
+    """Three prompts sharing two full pages: the admissions after the
+    first map the indexed pages (prefix_hits), prefill only their
+    tails, and still match the single-request engine bit-for-bit; a
+    warm re-run of the same prompts hits on EVERY admission; dropping
+    the index drains the pool back to full."""
+    cfg, model, params = tiny[:3]
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, 8)       # 2 full pages
+    prompts = [np.concatenate([shared,
+                               rng.integers(0, cfg.vocab_size, 3)])
+               for _ in range(3)]
+    sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                             prompt_buckets=(16,), cache="paged",
+                             page_size=4, cache_len=24, num_pages=20,
+                             prefix_cache=True)
+
+    def drain(base):
+        run = sched.run([Request(request_id=base + i,
+                                 prompt=p.astype(np.int32), max_new=5)
+                         for i, p in enumerate(prompts)])
+        for r in run.results:
+            ref = np.asarray(engine.generate(
+                params, jnp.asarray(r.tokens[:r.prompt_len])[None, :],
+                5).tokens[0])
+            n = r.prompt_len + r.generated
+            assert np.array_equal(r.tokens[:n], ref[:n]), (
+                f"request {r.request_id} diverged from engine")
+        sched._alloc.check_invariants()
+        return run
+
+    cold = drain(0)
+    assert cold.prefix_hits >= 1                  # within-burst sharing
+    assert cold.prefix_misses >= 1                # the seeding admission
+    warm = drain(10)
+    assert warm.prefix_hits == 3 and warm.prefix_misses == 0
+    assert warm.page_high_water <= cold.page_high_water
+    assert len(sched._prefix) > 0
+    sched._prefix.drop()
+    assert sched._alloc.free_pages == sched.num_pages
+
+
+def test_prefix_cow_on_aligned_repeat(tiny, engine):
+    """A page-aligned prompt indexes ALL its pages; a later repeat maps
+    every page but must re-prefill the last token for logits — that
+    write triggers exactly the COW detach, and both streams still
+    match the engine."""
+    cfg, model, params = tiny[:3]
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)  # aligned
+    sched = ServingScheduler(model, params, capacity=2, chunk=2,
+                             prompt_buckets=(16,), cache="paged",
+                             page_size=4, cache_len=24, num_pages=20,
+                             prefix_cache=True)
+    first = sched.run([Request(request_id=0, prompt=prompt, max_new=5)])
+    repeat = sched.run([Request(request_id=1, prompt=prompt.copy(),
+                                max_new=5)])
+    assert repeat.prefix_hits == 1
+    assert repeat.cow_copies >= 1, "aligned repeat must copy-on-write"
+    ref = np.asarray(engine.generate(params, jnp.asarray(prompt)[None, :],
+                                     5).tokens[0])
+    for r in list(first.results) + list(repeat.results):
+        n = r.prompt_len + r.generated
+        assert np.array_equal(r.tokens[:n], ref[:n]), (
+            f"request {r.request_id} diverged from engine")
+    sched._alloc.check_invariants()
+
+
+def test_prefix_host_swap_under_pressure(tiny, engine):
+    """A pool too small for live slots + warm prefixes SPILLS the
+    coldest index pages to host instead of deferring with no_pages;
+    re-admitting the spilled prompt swaps them back in (still a hit)
+    and the stream stays bit-identical."""
+    cfg, model, params = tiny[:3]
+    rng = np.random.default_rng(1)
+    pa, pb, pc = (rng.integers(0, cfg.vocab_size, 9) for _ in range(3))
+    sched = ServingScheduler(model, params, capacity=1, chunk=2,
+                             prompt_buckets=(12,), cache="paged",
+                             page_size=4, cache_len=20, num_pages=6,
+                             prefix_cache=True)
+
+    def one(rid, p):
+        return sched.run([Request(request_id=rid,
+                                  prompt=p.astype(np.int32), max_new=4)])
+
+    one(0, pa)
+    one(1, pb)
+    spill = one(2, pc)          # 4 pages pinned, pc needs the pool
+    assert spill.swap_outs >= 1, "expected host spill under pressure"
+    assert spill.deferrals.get("no_pages", 0) == 0
+    back = one(3, pa.copy())    # pa's pages are host-side now
+    assert back.swap_ins >= 1 and back.prefix_hits == 1
+    r = back.results[0]
+    ref = np.asarray(engine.generate(params,
+                                     jnp.asarray(pa.astype(np.int32))[None, :],
+                                     4).tokens[0])
+    n = r.prompt_len + r.generated
+    assert np.array_equal(r.tokens[:n], ref[:n]), "swapped-in prefix diverged"
+    sched._alloc.check_invariants()
+    sched._prefix.drop()
+    assert sched._alloc.free_pages == sched.num_pages
+
+
+def test_chunked_paged_prefill_bit_identity(tiny):
+    """prefill_chunk splits native paged prompt prefill into fixed-size
+    pieces; per-query softmax independence makes every chunking — and
+    the unchunked whole-prompt pass — produce identical streams."""
+    cfg, model, params = tiny[:3]
+    reqs = lambda: _requests(cfg, [13, 6, 9], [4, 5, 3], seed=7)
+    runs = {}
+    for pc in (None, 3, 8):
+        sched = ServingScheduler(model, params, capacity=2, chunk=3,
+                                 eos_id=1, prompt_buckets=(16,),
+                                 cache="paged", page_size=4,
+                                 prefill_chunk=pc)
+        runs[pc] = {r.request_id: r.tokens.tolist()
+                    for r in sched.run(reqs()).results}
+    assert runs[3] == runs[None]
+    assert runs[8] == runs[None]

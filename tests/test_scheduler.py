@@ -359,9 +359,10 @@ def test_batched_admission_bit_identity(tiny, engine):
     run = sched.run(reqs)
     assert sorted(r.request_id for r in run.results) == list(range(7))
     _assert_bit_identical(engine, params, run, reqs, eos_id=None)
-    # jit-cache key space stays capped at (bucket, k) pairs
-    assert set(sched._admit_fns) == {(8, 4), (8, 2), (8, 1)}
-    assert all(kb in ADMIT_BATCH for _, kb in sched._admit_fns)
+    # jit-cache key space stays capped at (bucket, k, shared-prefix)
+    # triples — sh is 0 everywhere without a prefix cache
+    assert set(sched._admit_fns) == {(8, 4, 0), (8, 2, 0), (8, 1, 0)}
+    assert all(kb in ADMIT_BATCH for _, kb, _sh in sched._admit_fns)
 
 
 def test_batched_admission_mixed_buckets(tiny, engine):
@@ -375,7 +376,7 @@ def test_batched_admission_mixed_buckets(tiny, engine):
     run = sched.run(reqs)
     assert sorted(r.request_id for r in run.results) == list(range(6))
     _assert_bit_identical(engine, params, run, reqs, eos_id=1)
-    assert all(kb in (1, 2, 4) for _, kb in sched._admit_fns)
+    assert all(kb in (1, 2, 4) for _, kb, _sh in sched._admit_fns)
 
 
 # ------------------------------------------------- per-bucket block sizes
